@@ -1,0 +1,83 @@
+//! Distributed causal discovery (paper §6 future scope): PC algorithm
+//! over a linear-Gaussian SEM, with the correlation pass and every
+//! CI-test batch running as raylet tasks.
+//!
+//!     cargo run --release --offline --example causal_discovery
+
+use std::sync::Arc;
+
+use nexus::bench_support::Table;
+use nexus::causal::discovery::{self, PcConfig};
+use nexus::data::matrix::Matrix;
+use nexus::raylet::api::RayContext;
+use nexus::runtime::backend::HostBackend;
+use nexus::util::rng::Pcg32;
+
+fn main() -> nexus::Result<()> {
+    // ground-truth DAG (a plausible marketing funnel):
+    //   0 ad_spend -> 1 visits -> 2 signups -> 4 revenue
+    //   3 seasonality -> 1 visits,  3 -> 4 revenue
+    let d = 5;
+    let names = ["ad_spend", "visits", "signups", "seasonality", "revenue"];
+    let edges = [
+        (0usize, 1usize, 0.8f32),
+        (1, 2, 0.9),
+        (2, 4, 0.7),
+        (3, 1, 0.5),
+        (3, 4, 0.4),
+    ];
+    println!("true DAG:");
+    for &(p, c, w) in &edges {
+        println!("  {} -> {} (w={w})", names[p], names[c]);
+    }
+
+    // sample the SEM
+    let n = 20_000;
+    let mut rng = Pcg32::new(42);
+    let mut x = Matrix::zeros(n, d);
+    for i in 0..n {
+        for v in 0..d {
+            let mut val = rng.normal_f32();
+            for &(p, c, w) in &edges {
+                if c == v {
+                    val += w * x.get(i, p);
+                }
+            }
+            x.set(i, v, val);
+        }
+    }
+
+    // distributed PC
+    let ctx = RayContext::threads(4);
+    let corr = discovery::correlation_matrix(&ctx, Arc::new(HostBackend), &x, 4096)?;
+    let g = discovery::pc(&ctx, &corr, n, &PcConfig { alpha: 0.01, max_level: 3 })?;
+    let m = ctx.metrics();
+
+    let mut tbl = Table::new(
+        "PC output (CPDAG)",
+        &["edge", "orientation", "in true DAG?"],
+    );
+    for (i, j, kind, flipped) in g.edges() {
+        let (a, b) = if flipped { (j, i) } else { (i, j) };
+        let label = match kind {
+            discovery::EdgeKind::Directed => format!("{} -> {}", names[a], names[b]),
+            discovery::EdgeKind::Undirected => format!("{} -- {}", names[a], names[b]),
+        };
+        let truth = edges
+            .iter()
+            .any(|&(p, c, _)| (p == i && c == j) || (p == j && c == i));
+        tbl.row(vec![
+            label,
+            format!("{kind:?}"),
+            if truth { "yes".into() } else { "NO (false edge)".into() },
+        ]);
+    }
+    tbl.print();
+    println!(
+        "\n{} edges recovered (truth has {}); {} raylet tasks across the correlation pass + CI batches",
+        g.n_edges(),
+        edges.len(),
+        m.tasks_run
+    );
+    Ok(())
+}

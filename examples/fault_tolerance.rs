@@ -1,0 +1,109 @@
+//! Fault tolerance demo: Ray-style lineage recovery under injected
+//! failures, in both executors.
+//!
+//!   a) thread pool: 30% of task attempts crash — the cross-fitting DML
+//!      estimate still completes, bit-identical to the failure-free run
+//!   b) thread pool: objects are dropped after completion — lineage
+//!      re-executes producers on demand
+//!   c) simulated cluster: a whole node dies mid-run — tasks re-queue,
+//!      lost objects reconstruct, the schedule stretches but finishes
+//!
+//!     cargo run --release --offline --example fault_tolerance
+
+use std::sync::Arc;
+
+use nexus::bench_support::fmt_secs;
+use nexus::config::ClusterConfig;
+use nexus::data::synth::{generate, SynthConfig};
+use nexus::models::cost::CostModel;
+use nexus::models::crossfit::CrossfitConfig;
+use nexus::causal::dml;
+use nexus::raylet::api::RayContext;
+use nexus::raylet::fault::FaultPlan;
+use nexus::raylet::payload::Payload;
+use nexus::runtime::backend::HostBackend;
+
+fn main() -> nexus::Result<()> {
+    let ds = generate(&SynthConfig { n: 5000, d: 6, ..Default::default() });
+    let ccfg = CrossfitConfig {
+        cv: 3,
+        lam_y: 1e-3,
+        lam_t: 1e-3,
+        irls_iters: 4,
+        block: 256,
+        d_pad: 8,
+        d_real: 6,
+        seed: 1,
+        stratified: true,
+        reuse_suffstats: false,
+    };
+    let cost = CostModel::default();
+    let kx = Arc::new(HostBackend);
+
+    // ---- baseline: no failures -----------------------------------------
+    let clean_ctx = RayContext::threads(4);
+    let clean = dml::fit_with(&clean_ctx, kx.clone(), &cost, &ds, &ccfg, 1, 2)?;
+    println!("[baseline] ATE = {:.4}, {} tasks, 0 failures", clean.ate.value, clean.metrics.tasks_run);
+
+    // ---- a) 30% attempt crash rate ---------------------------------------
+    let faulty_ctx = RayContext::threads_with_faults(4, FaultPlan::with_prob(0.30, 20, 777));
+    let faulty = dml::fit_with(&faulty_ctx, kx.clone(), &cost, &ds, &ccfg, 1, 2)?;
+    let fm = &faulty.metrics;
+    println!(
+        "[a] crash-prob 30%: ATE = {:.4} | retries={} permanent-failures={}",
+        faulty.ate.value, fm.retries, fm.failed
+    );
+    assert_eq!(clean.theta, faulty.theta, "estimates must survive crashes unchanged");
+    assert!(fm.retries > 50, "expected many retries, got {}", fm.retries);
+    println!("    => bit-identical theta despite {} re-executions", fm.retries);
+
+    // ---- b) object loss + lineage reconstruction -------------------------
+    let ctx = RayContext::threads(2);
+    let base = ctx.submit(
+        "expensive-base",
+        vec![],
+        0.0,
+        Arc::new(|_: &[&Payload]| Ok(Payload::Scalar(21.0))),
+    );
+    let derived = ctx.submit(
+        "derived",
+        vec![base],
+        0.0,
+        Arc::new(|a: &[&Payload]| Ok(Payload::Scalar(a[0].as_scalar()? * 2.0))),
+    );
+    assert_eq!(ctx.get(&derived)?.as_scalar()?, 42.0);
+    ctx.drop_object(&base)?;
+    ctx.drop_object(&derived)?;
+    let recovered = ctx.get(&derived)?.as_scalar()?;
+    println!("[b] dropped BOTH objects; lineage recomputed derived = {recovered}");
+    assert_eq!(recovered, 42.0);
+
+    // ---- c) node failure on the simulated cluster -------------------------
+    let cluster = ClusterConfig { nodes: 4, slots_per_node: 4, ..Default::default() };
+    let healthy = RayContext::sim(cluster.clone(), true);
+    let h = dml::fit_with(&healthy, kx.clone(), &cost, &ds, &ccfg, 1, 2)?;
+
+    // node 2 dies shortly into the run
+    let t_fail = h.metrics.makespan * 0.3;
+    let wounded = RayContext::sim_with_faults(
+        cluster.clone(),
+        true,
+        FaultPlan { node_failures: vec![(t_fail, 2)], ..FaultPlan::none() },
+    );
+    let w = dml::fit_with(&wounded, kx.clone(), &cost, &ds, &ccfg, 1, 2)?;
+    println!(
+        "[c] node 2 died at t={}: makespan {} -> {} (+{:.0}%), retries={}, reconstructions={}",
+        fmt_secs(t_fail),
+        fmt_secs(h.metrics.makespan),
+        fmt_secs(w.metrics.makespan),
+        100.0 * (w.metrics.makespan / h.metrics.makespan - 1.0),
+        w.metrics.retries,
+        w.metrics.reconstructions
+    );
+    assert_eq!(h.theta, w.theta, "node failure must not change the estimate");
+    assert!(w.metrics.makespan >= h.metrics.makespan);
+    println!("    => identical estimate on 3 surviving nodes");
+
+    println!("\nfault-tolerance demo complete: all invariants held");
+    Ok(())
+}

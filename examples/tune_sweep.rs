@@ -1,0 +1,127 @@
+//! Distributed hyper-parameter tuning (paper §5.2 / Figure 5 workflow):
+//! the same grid swept three ways —
+//!
+//!   serial        every config, one at a time (sklearn GridSearchCV)
+//!   distributed   every config as a parallel trial (Ray Tune grid)
+//!   dist + SHA    successive halving: cheap low-budget rungs first
+//!
+//!     cargo run --release --offline --example tune_sweep
+
+use std::sync::Arc;
+
+use nexus::bench_support::{fmt_secs, Table};
+use nexus::config::ClusterConfig;
+use nexus::data::matrix::Matrix;
+use nexus::models::cost::CostModel;
+use nexus::models::registry::ModelSpec;
+use nexus::raylet::api::RayContext;
+use nexus::runtime::backend::HostBackend;
+use nexus::tune::runner::TuneRunner;
+use nexus::tune::sched::ShaSchedule;
+use nexus::tune::space::{ParamSpec, SearchSpace};
+use nexus::util::rng::Pcg32;
+
+fn main() -> nexus::Result<()> {
+    // tuning problem: pick ridge lam + logistic iters for the propensity
+    let mut rng = Pcg32::new(11);
+    let (n, d) = (8000usize, 16usize);
+    let make = |n: usize, rng: &mut Pcg32| {
+        let x = Matrix::from_fn(n, d, |_, j| if j == 0 { 1.0 } else { rng.normal_f32() });
+        let t: Vec<f32> = (0..n)
+            .map(|i| {
+                let eta = 1.2 * x.get(i, 1) - 0.7 * x.get(i, 2);
+                if rng.bernoulli(nexus::data::synth::sigmoid(eta) as f64) {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        (x, t)
+    };
+    let (x_train, t_train) = make(n, &mut rng);
+    let (x_val, t_val) = make(n / 4, &mut rng);
+
+    let runner = TuneRunner {
+        kx: Arc::new(HostBackend),
+        cost: CostModel::default(),
+        x_train,
+        target_train: t_train,
+        x_val,
+        target_val: t_val,
+        to_spec: |c| ModelSpec::Logistic {
+            lam: c.get("lam") as f32,
+            iters: c.get_usize("iters"),
+        },
+        block: 256,
+    };
+
+    let space = SearchSpace::new()
+        .with("lam", ParamSpec::Grid(vec![1e-5, 1e-3, 1e-1, 10.0]))
+        .with("iters", ParamSpec::Grid(vec![2.0, 4.0, 6.0, 8.0]));
+    let configs = space.grid(0); // 16 configs
+    println!("sweeping {} configs (model_t: logistic lam x iters)\n", configs.len());
+
+    let cluster = ClusterConfig { nodes: 4, slots_per_node: 4, ..Default::default() };
+    let sched = ShaSchedule::geometric(1, 4, 2);
+
+    let mut tbl = Table::new(
+        "Figure 5 workflow — tuning strategies",
+        &["strategy", "best config", "val loss", "cpu-time", "makespan", "tasks"],
+    );
+
+    // serial grid (virtual-time so the rows are comparable)
+    let serial_ctx = RayContext::sim(
+        ClusterConfig { nodes: 1, slots_per_node: 1, ..cluster.clone() },
+        true,
+    );
+    let serial = runner.run_grid(&serial_ctx, &configs)?;
+    tbl.row(vec![
+        "serial grid".into(),
+        serial.best.config.describe(),
+        format!("{:.4}", serial.best.loss),
+        fmt_secs(serial.busy_secs),
+        fmt_secs(serial.makespan),
+        format!("{}", serial.tasks_run),
+    ]);
+
+    // distributed grid
+    let dist_ctx = RayContext::sim(cluster.clone(), true);
+    let dist = runner.run_grid(&dist_ctx, &configs)?;
+    tbl.row(vec![
+        "distributed grid".into(),
+        dist.best.config.describe(),
+        format!("{:.4}", dist.best.loss),
+        fmt_secs(dist.busy_secs),
+        fmt_secs(dist.makespan),
+        format!("{}", dist.tasks_run),
+    ]);
+
+    // distributed + successive halving
+    let sha_ctx = RayContext::sim(cluster.clone(), true);
+    let sha = runner.run_sha(&sha_ctx, &configs, &sched)?;
+    tbl.row(vec![
+        "distributed + SHA".into(),
+        sha.best.config.describe(),
+        format!("{:.4}", sha.best.loss),
+        fmt_secs(sha.busy_secs),
+        fmt_secs(sha.makespan),
+        format!("{}", sha.tasks_run),
+    ]);
+    tbl.print();
+
+    println!(
+        "\nspeedup (makespan): distributed {:.1}x, dist+SHA {:.1}x vs serial",
+        serial.makespan / dist.makespan,
+        serial.makespan / sha.makespan
+    );
+    println!(
+        "cpu-time saved by SHA: {:.1}% of the full grid",
+        100.0 * (1.0 - sha.busy_secs / dist.busy_secs)
+    );
+
+    // sanity: distributed answers match serial exactly
+    assert_eq!(serial.best.config, dist.best.config);
+    println!("\ninvariant checked: serial and distributed grids found the same winner");
+    Ok(())
+}

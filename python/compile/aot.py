@@ -1,0 +1,144 @@
+"""AOT entry point: lower every L2 graph at every shipped shape to HLO text.
+
+Interchange format is HLO *text*, NOT `lowered.compile().serialize()`:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+image's xla_extension 0.5.1 (the version the published `xla` 0.1.6 rust
+crate binds) rejects with `proto.id() <= INT_MAX`.  The text parser
+reassigns ids, so text round-trips cleanly.  See /opt/xla-example/README.md.
+
+Every graph is emitted in two impl families:
+  pallas  -- the L1 pallas kernels (interpret=True) inside the graph; this
+             is the TPU-shaped code path and what python/tests validates
+  jnp     -- identical math through plain jnp contractions; on the CPU PJRT
+             backend this compiles to native dot loops and is the fast path
+             the rust coordinator uses by default (ablation: bench_ablation
+             compares the two)
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Writes  <name>.hlo.txt per artifact plus manifest.json.
+"""
+
+import argparse
+import contextlib
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import gram as gram_kernel
+from compile.kernels import ref
+from compile.kernels import residual as residual_kernel
+
+# Shipped shape grid.  d includes the intercept column and zero padding;
+# the paper's workload (d ~ 500 covariates) maps to d = 512.
+BLOCK_B = (256, 4096)
+DIMS_D = (16, 64, 512)
+DIMS_P = (1, 2, 8)
+SOLVE_D = sorted(set(DIMS_D) | set(DIMS_P))
+
+
+@contextlib.contextmanager
+def _jnp_impl():
+    """Swap the L1 pallas kernels for their jnp oracles while lowering."""
+    saved = (gram_kernel.gram, gram_kernel.cross, residual_kernel.residualize)
+    gram_kernel.gram = lambda x, **kw: ref.gram(x)
+    gram_kernel.cross = lambda x, z, **kw: ref.cross(x, z)
+    residual_kernel.residualize = lambda *a, **kw: ref.residualize(*a)
+    try:
+        yield
+    finally:
+        gram_kernel.gram, gram_kernel.cross, residual_kernel.residualize = saved
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple so rust sees
+    one tuple output regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shapes(specs):
+    return [list(s.shape) for s in specs]
+
+
+def lower_one(kind, dims, impl):
+    fn, spec_builder = model.GRAPHS[kind]
+    specs = spec_builder(*dims)
+    ctx = _jnp_impl() if impl == "jnp" else contextlib.nullcontext()
+    with ctx:
+        lowered = jax.jit(lambda *a: fn(*a)).lower(*specs)
+        text = to_hlo_text(lowered)
+    outs = jax.tree_util.tree_leaves(getattr(lowered, "out_info", None))
+    out_shapes = [list(o.shape) for o in outs] or None
+    return text, _shapes(specs), out_shapes
+
+
+def artifact_plan():
+    """Every (kind, dims) pair shipped.  dims is (b, d), (d,), or (b, p)."""
+    plan = []
+    for b in BLOCK_B:
+        for d in DIMS_D:
+            for kind in ("gram", "predict", "predict_proba", "irls", "residual"):
+                plan.append((kind, (b, d)))
+        for p in DIMS_P:
+            for kind in ("final_moments", "final_score"):
+                plan.append((kind, (b, p)))
+    for d in SOLVE_D:
+        plan.append(("solve", (d,)))
+    return plan
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--impls", default="pallas,jnp",
+        help="comma list of impl families to emit (pallas, jnp)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    impls = [s.strip() for s in args.impls.split(",") if s.strip()]
+    entries = []
+    for kind, dims in artifact_plan():
+        fams = impls if kind != "solve" else ["jnp"]  # solve has no kernel
+        for impl in fams:
+            dim_tag = "_".join(str(v) for v in dims)
+            name = f"{kind}_{dim_tag}_{impl}"
+            text, in_shapes, out_shapes = lower_one(kind, dims, impl)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            entries.append({
+                "name": name,
+                "kind": kind,
+                "impl": impl,
+                "file": fname,
+                "dims": list(dims),
+                "inputs": in_shapes,
+                "outputs": out_shapes,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            })
+            print(f"  wrote {fname:40s} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "block_b": list(BLOCK_B),
+        "dims_d": list(DIMS_D),
+        "dims_p": list(DIMS_P),
+        "solve_d": list(SOLVE_D),
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(entries)} artifacts -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: tiled Gram-matrix accumulation.
+
+The FLOP hot spot of NEXUS's nuisance fits is the Gram matrix X^T X over
+d ~ 500 covariates (ridge fit, logistic IRLS, and the orthogonal final
+stage all reduce to it).  On TPU this is an MXU-shaped reduction; the
+BlockSpec below expresses the HBM->VMEM schedule:
+
+  grid = (d/dt, d/dt, b/bt)                 # (i, j, k)
+  x1 panel (bt, dt) at (k, i)  -- VMEM      # left operand, transposed use
+  x2 panel (bt, dt) at (k, j)  -- VMEM      # right operand
+  out tile (dt, dt) at (i, j)  -- VMEM accumulator, revisited over k
+
+dt = 128 matches the MXU systolic array edge; bt = 128 keeps the working
+set (2 * 128*128 + 128*128 f32 = 192 KiB) far inside a 16 MiB VMEM budget,
+leaving room for double buffering (see DESIGN.md section 8).
+
+MUST run with interpret=True on this image: the CPU PJRT plugin cannot
+execute Mosaic custom-calls.  Numerics are identical either way; real-TPU
+performance is estimated from the BlockSpec in EXPERIMENTS.md section Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(x1_ref, x2_ref, o_ref):
+    """One (i, j, k) grid step: o[i, j] += x1[k, i]^T @ x2[k, j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # jnp.dot on (dt, bt) @ (bt, dt) tiles -> MXU matmul on real hardware.
+    o_ref[...] += jnp.dot(
+        x1_ref[...].T, x2_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pick_tile(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is <= preferred (tiles must be exact)."""
+    t = min(dim, preferred)
+    while dim % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_b"))
+def gram(x, *, block_d: int = 128, block_b: int = 128):
+    """X^T X via the tiled Pallas kernel.  x: f32[b, d] -> f32[d, d]."""
+    b, d = x.shape
+    dt = _pick_tile(d, block_d)
+    bt = _pick_tile(b, block_b)
+    grid = (d // dt, d // dt, b // bt)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, dt), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bt, dt), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((dt, dt), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), x.dtype),
+        interpret=True,
+    )(x, x)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_b"))
+def cross(x, z, *, block_d: int = 128, block_b: int = 128):
+    """X^T Z for x: f32[b, d], z: f32[b, e] -> f32[d, e] (same schedule)."""
+    b, d = x.shape
+    _, e = z.shape
+    dt = _pick_tile(d, block_d)
+    et = _pick_tile(e, block_d)
+    bt = _pick_tile(b, block_b)
+    grid = (d // dt, e // et, b // bt)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, dt), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bt, et), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((dt, et), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, e), x.dtype),
+        interpret=True,
+    )(x, z)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every L1 kernel and L2 graph.
+
+pytest asserts allclose(kernel, ref) across a hypothesis sweep of shapes
+and dtypes -- this file is the single source of numerical truth for the
+python side; rust/src/linalg is the equivalent oracle on the rust side.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ----- L1 oracles -----------------------------------------------------------
+
+def gram(x):
+    return x.T @ x
+
+
+def cross(x, z):
+    return x.T @ z
+
+
+def residualize(x, y, t, beta_y, beta_t):
+    return y - x @ beta_y, t - jax.nn.sigmoid(x @ beta_t)
+
+
+# ----- L2 oracles (the statistical math, stated plainly) --------------------
+
+def gram_block(x, y, mask):
+    """Masked partial sufficient statistics for ridge: (X'X, X'y, n)."""
+    xm = x * mask[:, None]
+    return xm.T @ xm, xm.T @ (y * mask), jnp.sum(mask)
+
+
+def ridge_solve(g, b, lam_diag):
+    return jnp.linalg.solve(g + jnp.diag(lam_diag), b)
+
+
+def predict_block(x, beta):
+    return x @ beta
+
+
+def logistic_irls_block(x, t, mask, beta):
+    """Masked partial Newton/IRLS statistics for logistic regression.
+
+    Returns (H, c, loss) with H = X'WX, c = X'W z (z the working response),
+    so the coordinator's Newton step is beta' = solve(H + lam I, c).
+    """
+    eta = x @ beta
+    p = jax.nn.sigmoid(eta)
+    w = jnp.maximum(p * (1.0 - p), 1e-6)
+    wm = w * mask
+    z = eta + (t - p) / w
+    xs = x * jnp.sqrt(wm)[:, None]
+    h = xs.T @ xs
+    c = x.T @ (wm * z)
+    eps = 1e-7
+    ll = t * jnp.log(p + eps) + (1.0 - t) * jnp.log(1.0 - p + eps)
+    return h, c, -jnp.sum(ll * mask)
+
+
+def final_stage_moments(y_res, t_res, phi, mask):
+    """Orthogonal final stage: M = sum t~^2 phi phi', v = sum t~ y~ phi."""
+    tphi = phi * (t_res * mask)[:, None]
+    return tphi.T @ tphi, tphi.T @ y_res
+
+
+def final_stage_score(y_res, t_res, phi, theta, mask):
+    """HC-robust meat: S = sum psi psi', psi = (y~ - t~ phi'theta) t~ phi."""
+    e = (y_res - t_res * (phi @ theta)) * t_res * mask
+    psi = phi * e[:, None]
+    return psi.T @ psi

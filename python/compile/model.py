@@ -1,0 +1,183 @@
+"""L2: the DML compute graphs, written in jax, calling the L1 pallas kernels.
+
+Each function here is one *static-shape* logical step of the NEXUS
+estimation pipeline.  `aot.py` lowers every (function, shape) pair once to
+HLO text; the rust coordinator (rust/src/runtime) loads, compiles and
+executes them from the request path -- python never runs at run time.
+
+Shape conventions (all f32):
+  b      rows per block (the coordinator streams row blocks)
+  d      padded covariate width (constant-1 intercept column included by
+         the coordinator; padding columns are zero so they are inert in
+         every Gram/solve below as long as lam_diag > 0 on padded entries)
+  p      final-stage feature width (phi = [1] for ATE, [1, x_het...] CATE)
+
+The statistical contract of each graph is documented in kernels/ref.py,
+which pytest uses as the allclose oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import gram as gram_kernel
+from compile.kernels import residual as residual_kernel
+
+
+# --------------------------------------------------------------------------
+# Nuisance model_y: ridge regression via streaming sufficient statistics.
+# --------------------------------------------------------------------------
+
+def gram_block(x, y, mask):
+    """Partial (X'X, X'y, n) for one masked row block.
+
+    mask is 0/1 per row; padded (invalid) rows contribute nothing because
+    mask^2 == mask.  The X'X product runs through the L1 pallas kernel.
+    """
+    xm = x * mask[:, None]
+    g = gram_kernel.gram(xm)
+    b = gram_kernel.cross(xm, (y * mask)[:, None])[:, 0]
+    return g, b, jnp.sum(mask)
+
+
+def ridge_solve(g, b, lam_diag):
+    """beta = (G + diag(lam))^-1 b via Gauss-Jordan elimination.
+
+    NOT `jax.scipy.linalg.solve`: on CPU that lowers to a LAPACK
+    typed-FFI custom call (`API_VERSION_TYPED_FFI`) which the image's
+    xla_extension 0.5.1 rejects at compile time.  Gauss-Jordan in a
+    `fori_loop` lowers to pure HLO (dots + dynamic slices), is exact in
+    d steps, and needs no pivoting because the ridge-regularized system
+    is symmetric positive definite (padding columns carry lam = 1).
+
+    lam_diag is a vector so the coordinator can (a) not penalize the
+    intercept column and (b) strongly penalize padding columns, keeping
+    the padded system well conditioned.
+    """
+    d = b.shape[0]
+    a = g + jnp.diag(lam_diag)
+    aug = jnp.concatenate([a, b[:, None]], axis=1)  # d x (d+1)
+
+    def step(k, aug):
+        pivot = aug[k, k]
+        row_k = aug[k] / pivot
+        factors = aug[:, k].at[k].set(0.0)
+        aug = aug - factors[:, None] * row_k[None, :]
+        return aug.at[k].set(row_k)
+
+    aug = jax.lax.fori_loop(0, d, step, aug)
+    return aug[:, d]
+
+
+def predict_block(x, beta):
+    """yhat = X beta for one row block."""
+    return x @ beta
+
+
+# --------------------------------------------------------------------------
+# Nuisance model_t: logistic regression via blocked Newton/IRLS.
+# --------------------------------------------------------------------------
+
+def logistic_irls_block(x, t, mask, beta):
+    """Partial Newton statistics (H, c, nll) at the current beta.
+
+    H = X'WX (via the pallas gram kernel on sqrt(W)-scaled rows),
+    c = X'Wz with z the IRLS working response.  The coordinator sums the
+    partials over blocks and calls ridge_solve(H, c, lam) for the step.
+    """
+    eta = x @ beta
+    p = jax.nn.sigmoid(eta)
+    w = jnp.maximum(p * (1.0 - p), 1e-6)
+    wm = w * mask
+    z = eta + (t - p) / w
+    xs = x * jnp.sqrt(wm)[:, None]
+    h = gram_kernel.gram(xs)
+    c = gram_kernel.cross(x, (wm * z)[:, None])[:, 0]
+    eps = 1e-7
+    ll = t * jnp.log(p + eps) + (1.0 - t) * jnp.log(1.0 - p + eps)
+    return h, c, -jnp.sum(ll * mask)
+
+
+def predict_proba_block(x, beta):
+    """p = sigmoid(X beta) for one row block."""
+    return jax.nn.sigmoid(x @ beta)
+
+
+# --------------------------------------------------------------------------
+# Residualization (the orthogonalization step) -- fused L1 kernel.
+# --------------------------------------------------------------------------
+
+def residual_block(x, y, t, beta_y, beta_t):
+    """(y - X b_y, t - sigmoid(X b_t)) in one pass over X."""
+    return residual_kernel.residualize(x, y, t, beta_y, beta_t)
+
+
+# --------------------------------------------------------------------------
+# Orthogonal final stage (EconML LinearDML estimating equation).
+# --------------------------------------------------------------------------
+
+def final_stage_moments(y_res, t_res, phi, mask):
+    """Partial normal equations of the residual-on-residual regression:
+
+        theta = argmin sum_i (y~_i - t~_i * phi_i' theta)^2
+        M = sum t~^2 phi phi'        v = sum t~ y~ phi
+    """
+    tphi = phi * (t_res * mask)[:, None]
+    m = gram_kernel.gram(tphi)
+    v = gram_kernel.cross(tphi, (y_res)[:, None])[:, 0]
+    return m, v
+
+
+def final_stage_score(y_res, t_res, phi, theta, mask):
+    """Partial HC1 'meat' S = sum psi psi', psi = (y~ - t~ phi'theta) t~ phi."""
+    e = (y_res - t_res * (phi @ theta)) * t_res * mask
+    psi = phi * e[:, None]
+    return gram_kernel.gram(psi)
+
+
+# --------------------------------------------------------------------------
+# Registry used by aot.py: name -> (fn, arg-spec builder).
+# aot.py instantiates each entry at every (b, d) / (d,) / (b, p) it emits.
+# --------------------------------------------------------------------------
+
+F32 = jnp.float32
+
+
+def _s(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+GRAPHS = {
+    # kind: (fn, lambda dims -> [input specs], doc)
+    "gram": (
+        lambda x, y, mask: gram_block(x, y, mask),
+        lambda b, d: [_s(b, d), _s(b), _s(b)],
+    ),
+    "solve": (
+        lambda g, v, lam: ridge_solve(g, v, lam),
+        lambda d: [_s(d, d), _s(d), _s(d)],
+    ),
+    "predict": (
+        lambda x, beta: predict_block(x, beta),
+        lambda b, d: [_s(b, d), _s(d)],
+    ),
+    "predict_proba": (
+        lambda x, beta: predict_proba_block(x, beta),
+        lambda b, d: [_s(b, d), _s(d)],
+    ),
+    "irls": (
+        lambda x, t, mask, beta: logistic_irls_block(x, t, mask, beta),
+        lambda b, d: [_s(b, d), _s(b), _s(b), _s(d)],
+    ),
+    "residual": (
+        lambda x, y, t, by, bt: residual_block(x, y, t, by, bt),
+        lambda b, d: [_s(b, d), _s(b), _s(b), _s(d), _s(d)],
+    ),
+    "final_moments": (
+        lambda yr, tr, phi, mask: final_stage_moments(yr, tr, phi, mask),
+        lambda b, p: [_s(b), _s(b), _s(b, p), _s(b)],
+    ),
+    "final_score": (
+        lambda yr, tr, phi, theta, mask: final_stage_score(yr, tr, phi, theta, mask),
+        lambda b, p: [_s(b), _s(b), _s(b, p), _s(p), _s(b)],
+    ),
+}

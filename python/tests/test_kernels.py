@@ -1,0 +1,124 @@
+"""L1 pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+hypothesis sweeps shapes (including non-multiple-of-tile sizes, which the
+tile picker must handle) and value distributions; assert_allclose is the
+correctness bar for everything the rust runtime will execute.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile.kernels import gram, ref, residual
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# gram kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 3, 16, 64, 100, 128, 256]),
+    d=st.sampled_from([1, 2, 5, 16, 33, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_gram_matches_ref(b, d, seed):
+    x = _rand(seed, b, d)
+    assert_allclose(gram.gram(x), ref.gram(x), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([4, 32, 128, 200]),
+    d=st.sampled_from([3, 16, 64]),
+    e=st.sampled_from([1, 2, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_cross_matches_ref(b, d, e, seed):
+    x = _rand(seed, b, d)
+    z = _rand(seed + 1, b, e)
+    assert_allclose(gram.cross(x, z), ref.cross(x, z), rtol=2e-4, atol=2e-4)
+
+
+def test_gram_large_block_paper_shape():
+    """The paper's workload shape: d=512 (500 covariates padded)."""
+    x = _rand(7, 1024, 512, scale=0.5)
+    assert_allclose(gram.gram(x), ref.gram(x), rtol=3e-4, atol=3e-3)
+
+
+def test_gram_is_symmetric_psd():
+    x = _rand(11, 300, 40)
+    g = np.asarray(gram.gram(x))
+    assert_allclose(g, g.T, rtol=1e-6, atol=1e-6)
+    w = np.linalg.eigvalsh(g)
+    assert w.min() > -1e-3  # PSD up to f32 roundoff
+
+
+def test_gram_zero_rows_are_inert():
+    """Masked (zeroed) rows must not change the Gram -- the padding contract."""
+    x = _rand(13, 64, 16)
+    xpad = jnp.concatenate([x, jnp.zeros((64, 16), jnp.float32)], axis=0)
+    assert_allclose(gram.gram(xpad), gram.gram(x), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block_d,block_b", [(8, 16), (16, 128), (128, 64)])
+def test_gram_tiling_invariance(block_d, block_b):
+    """The answer must not depend on the BlockSpec tiling."""
+    x = _rand(17, 128, 32)
+    base = ref.gram(x)
+    assert_allclose(
+        gram.gram(x, block_d=block_d, block_b=block_b), base,
+        rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused residualization kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 7, 64, 128, 300]),
+    d=st.sampled_from([1, 4, 16, 50]),
+    seed=st.integers(0, 2**16),
+)
+def test_residual_matches_ref(b, d, seed):
+    x = _rand(seed, b, d)
+    y = _rand(seed + 1, b)
+    t = (jax.random.uniform(jax.random.PRNGKey(seed + 2), (b,)) > 0.5).astype(
+        jnp.float32)
+    by = _rand(seed + 3, d, scale=0.3)
+    bt = _rand(seed + 4, d, scale=0.3)
+    yr, tr = residual.residualize(x, y, t, by, bt)
+    yr_ref, tr_ref = ref.residualize(x, y, t, by, bt)
+    assert_allclose(yr, yr_ref, rtol=1e-4, atol=1e-4)
+    assert_allclose(tr, tr_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_residual_propensity_in_unit_interval():
+    x = _rand(1, 256, 16, scale=0.2)
+    t = jnp.ones((256,), jnp.float32)
+    _, tr = residual.residualize(
+        x, jnp.zeros((256,)), t, jnp.zeros((16,)), _rand(2, 16, scale=0.2))
+    # t=1 minus a probability => residual in [0, 1]; moderate eta => interior
+    assert float(jnp.min(tr)) >= 0.0
+    assert float(jnp.max(tr)) <= 1.0
+    assert 0.0 < float(jnp.mean(tr)) < 1.0
+
+
+def test_tile_picker_exact_divisors():
+    assert gram._pick_tile(512, 128) == 128
+    assert gram._pick_tile(100, 128) == 100
+    assert gram._pick_tile(96, 64) == 48
+    assert gram._pick_tile(7, 4) == 1
+    assert gram._pick_tile(1, 128) == 1

@@ -1,0 +1,180 @@
+"""L2 graphs: statistical contracts, not just allclose-vs-oracle.
+
+Checks that the streamed/blocked formulations reproduce closed-form
+whole-data answers -- the exact property the rust coordinator relies on
+when it sums partial statistics from distributed tasks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _data(n=400, d=8, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(k1, (n, d), jnp.float32)
+    beta = jnp.linspace(-1, 1, d, dtype=jnp.float32)
+    y = x @ beta + 0.1 * jax.random.normal(k2, (n,), jnp.float32)
+    t = (jax.random.uniform(k3, (n,)) < jax.nn.sigmoid(x[:, 0])).astype(
+        jnp.float32)
+    return x, y, t, beta
+
+
+# ---------------------------------------------------------------------------
+# ridge: blocked sufficient statistics == whole-data closed form
+# ---------------------------------------------------------------------------
+
+def test_gram_blocks_sum_to_whole_data_gram():
+    x, y, _, _ = _data(400, 8)
+    mask = jnp.ones((100,), jnp.float32)
+    g_sum = jnp.zeros((8, 8))
+    b_sum = jnp.zeros((8,))
+    n_sum = 0.0
+    for i in range(4):
+        g, b, n = model.gram_block(x[i * 100:(i + 1) * 100], y[i * 100:(i + 1) * 100], mask)
+        g_sum, b_sum, n_sum = g_sum + g, b_sum + b, n_sum + n
+    assert_allclose(g_sum, x.T @ x, rtol=1e-4, atol=1e-3)
+    assert_allclose(b_sum, x.T @ y, rtol=1e-4, atol=1e-3)
+    assert n_sum == 400.0
+
+
+def test_partial_block_mask():
+    """A short final block padded with garbage rows + mask=0 is exact."""
+    x, y, _, _ = _data(64, 4, seed=1)
+    pad_x = jnp.concatenate([x, 99.0 * jnp.ones((36, 4), jnp.float32)])
+    pad_y = jnp.concatenate([y, 99.0 * jnp.ones((36,), jnp.float32)])
+    mask = jnp.concatenate([jnp.ones((64,)), jnp.zeros((36,))])
+    g, b, n = model.gram_block(pad_x, pad_y, mask)
+    assert_allclose(g, x.T @ x, rtol=1e-4, atol=1e-3)
+    assert_allclose(b, x.T @ y, rtol=1e-4, atol=1e-3)
+    assert n == 64.0
+
+
+def test_ridge_solve_recovers_coefficients():
+    x, y, _, beta = _data(2000, 8)
+    mask = jnp.ones((2000,), jnp.float32)
+    g, b, _ = model.gram_block(x, y, mask)
+    beta_hat = model.ridge_solve(g, b, 1e-3 * jnp.ones((8,)))
+    assert_allclose(beta_hat, beta, atol=0.05)
+
+
+def test_ridge_solve_padding_columns_inert():
+    """Zero-padded columns with big lam stay ~0 and do not disturb others."""
+    x, y, _, _ = _data(500, 4, seed=2)
+    xpad = jnp.concatenate([x, jnp.zeros((500, 4), jnp.float32)], axis=1)
+    mask = jnp.ones((500,), jnp.float32)
+    g, b, _ = model.gram_block(xpad, y, mask)
+    lam = jnp.concatenate([1e-3 * jnp.ones((4,)), 1e6 * jnp.ones((4,))])
+    beta = model.ridge_solve(g, b, lam)
+    g0, b0, _ = model.gram_block(x, y, mask)
+    beta0 = model.ridge_solve(g0, b0, 1e-3 * jnp.ones((4,)))
+    assert_allclose(beta[:4], beta0, rtol=1e-3, atol=1e-4)
+    assert_allclose(beta[4:], jnp.zeros((4,)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# logistic IRLS: blocked Newton converges to the MLE
+# ---------------------------------------------------------------------------
+
+def test_logistic_irls_converges_to_mle():
+    n, d = 4000, 4
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(k1, (n, d), jnp.float32)
+    beta_true = jnp.array([1.0, -0.5, 0.25, 0.0], jnp.float32)
+    p = jax.nn.sigmoid(x @ beta_true)
+    t = (jax.random.uniform(k2, (n,)) < p).astype(jnp.float32)
+    mask = jnp.ones((n,), jnp.float32)
+
+    beta = jnp.zeros((d,), jnp.float32)
+    losses = []
+    for _ in range(8):
+        h_sum = jnp.zeros((d, d))
+        c_sum = jnp.zeros((d,))
+        loss = 0.0
+        for i in range(0, n, 1000):
+            h, c, l = model.logistic_irls_block(
+                x[i:i + 1000], t[i:i + 1000], mask[i:i + 1000], beta)
+            h_sum, c_sum, loss = h_sum + h, c_sum + c, loss + l
+        beta = model.ridge_solve(h_sum, c_sum, 1e-4 * jnp.ones((d,)))
+        losses.append(float(loss))
+    # Newton converged: last two losses nearly equal, loss decreased overall
+    assert losses[-1] <= losses[0]
+    assert abs(losses[-1] - losses[-2]) < 1e-2
+    assert_allclose(beta, beta_true, atol=0.15)
+    # first-order condition: sum (t - p) x ~ 0 at the MLE
+    grad = x.T @ (t - jax.nn.sigmoid(x @ beta))
+    assert float(jnp.max(jnp.abs(grad))) < 0.5
+
+
+def test_irls_block_matches_ref():
+    x, y, t, _ = _data(200, 8, seed=4)
+    mask = (jnp.arange(200) < 150).astype(jnp.float32)
+    beta = 0.1 * jnp.ones((8,), jnp.float32)
+    got = model.logistic_irls_block(x, t, mask, beta)
+    want = ref.logistic_irls_block(x, t, mask, beta)
+    for g, w in zip(got, want):
+        assert_allclose(g, w, rtol=2e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# final stage: orthogonal moments reproduce the residual-on-residual OLS
+# ---------------------------------------------------------------------------
+
+def test_final_stage_equals_direct_ols():
+    n, p = 600, 2
+    k = jax.random.PRNGKey(5)
+    k1, k2, k3 = jax.random.split(k, 3)
+    t_res = jax.random.normal(k1, (n,), jnp.float32)
+    phi = jnp.concatenate(
+        [jnp.ones((n, 1)), jax.random.normal(k2, (n, 1))], axis=1)
+    theta_true = jnp.array([1.0, 0.5], jnp.float32)
+    y_res = t_res * (phi @ theta_true) + 0.05 * jax.random.normal(k3, (n,))
+    mask = jnp.ones((n,), jnp.float32)
+
+    m, v = model.final_stage_moments(y_res, t_res, phi, mask)
+    theta = model.ridge_solve(m, v, jnp.zeros((p,)) + 1e-8)
+    # direct weighted least squares answer
+    a = phi * t_res[:, None]
+    theta_direct = jnp.linalg.lstsq(a, y_res)[0]
+    assert_allclose(theta, theta_direct, rtol=1e-3, atol=1e-3)
+    assert_allclose(theta, theta_true, atol=0.05)
+
+
+def test_final_score_matches_ref_and_is_psd():
+    n, p = 300, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(6))
+    t_res = jax.random.normal(k1, (n,), jnp.float32)
+    phi = jnp.concatenate([jnp.ones((n, 1)),
+                           jax.random.normal(k2, (n, 1))], axis=1)
+    y_res = 2.0 * t_res + 0.1 * jax.random.normal(k1, (n,))
+    theta = jnp.array([2.0, 0.0], jnp.float32)
+    mask = jnp.ones((n,), jnp.float32)
+    s = model.final_stage_score(y_res, t_res, phi, theta, mask)
+    s_ref = ref.final_stage_score(y_res, t_res, phi, theta, mask)
+    assert_allclose(s, s_ref, rtol=2e-4, atol=2e-4)
+    w = np.linalg.eigvalsh(np.asarray(s))
+    assert w.min() > -1e-4
+
+
+def test_residual_block_produces_orthogonal_residuals():
+    """After residualizing on the TRUE nuisances, residuals are ~orthogonal
+    to X -- the Neyman orthogonality property DML rests on."""
+    n, d = 5000, 4
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = jax.random.normal(k1, (n, d), jnp.float32)
+    beta_t = jnp.array([0.8, 0.0, -0.4, 0.2], jnp.float32)
+    p = jax.nn.sigmoid(x @ beta_t)
+    t = (jax.random.uniform(k2, (n,)) < p).astype(jnp.float32)
+    beta_y = jnp.array([1.0, 0.5, 0.0, -1.0], jnp.float32)
+    y = x @ beta_y + t + 0.1 * jax.random.normal(k3, (n,))
+    yr, tr = model.residual_block(x, y, t, beta_y, beta_t)
+    # t-residual has mean ~0 and is uncorrelated with each x_j
+    assert abs(float(jnp.mean(tr))) < 0.03
+    corr = jnp.abs(x.T @ tr) / n
+    assert float(jnp.max(corr)) < 0.05

@@ -1,0 +1,85 @@
+//! Figure 5 reproduction: distributed hyper-parameter optimization.
+//!
+//! The paper's Fig 5 is a stock Ray Tune illustration; the reproducible
+//! content is the workflow claim — distributed trials + early stopping
+//! find the best config in ~max(trial) instead of ~sum(trial).  This
+//! bench sweeps a 16-config grid for `model_t` three ways and reports
+//! time-to-best (virtual makespan) and total compute.
+//!
+//!     cargo bench --offline --bench fig5_tune
+
+use std::sync::Arc;
+
+use nexus::bench_support::{fmt_secs, Table};
+use nexus::config::ClusterConfig;
+use nexus::data::matrix::Matrix;
+use nexus::models::cost::CostModel;
+use nexus::models::registry::ModelSpec;
+use nexus::raylet::api::RayContext;
+use nexus::runtime::backend::HostBackend;
+use nexus::tune::runner::TuneRunner;
+use nexus::tune::sched::ShaSchedule;
+use nexus::tune::space::{ParamSpec, SearchSpace};
+use nexus::util::rng::Pcg32;
+
+fn main() -> nexus::Result<()> {
+    let mut rng = Pcg32::new(11);
+    let (n, d) = (8000usize, 16usize);
+    let make = |n: usize, rng: &mut Pcg32| {
+        let x = Matrix::from_fn(n, d, |_, j| if j == 0 { 1.0 } else { rng.normal_f32() });
+        let t: Vec<f32> = (0..n)
+            .map(|i| {
+                let eta = 1.2 * x.get(i, 1) - 0.7 * x.get(i, 2);
+                if rng.bernoulli(nexus::data::synth::sigmoid(eta) as f64) { 1.0 } else { 0.0 }
+            })
+            .collect();
+        (x, t)
+    };
+    let (x_train, t_train) = make(n, &mut rng);
+    let (x_val, t_val) = make(n / 4, &mut rng);
+    let runner = TuneRunner {
+        kx: Arc::new(HostBackend),
+        cost: CostModel::default(),
+        x_train,
+        target_train: t_train,
+        x_val,
+        target_val: t_val,
+        to_spec: |c| ModelSpec::Logistic { lam: c.get("lam") as f32, iters: c.get_usize("iters") },
+        block: 256,
+    };
+    let configs = SearchSpace::new()
+        .with("lam", ParamSpec::Grid(vec![1e-5, 1e-3, 1e-1, 10.0]))
+        .with("iters", ParamSpec::Grid(vec![2.0, 4.0, 6.0, 8.0]))
+        .grid(0);
+    let cluster = ClusterConfig { nodes: 4, slots_per_node: 4, ..Default::default() };
+    let sched = ShaSchedule::geometric(1, 4, 2);
+
+    let mut tbl = Table::new(
+        "Figure 5 — tuning strategies (16-config grid, model_t)",
+        &["strategy", "time-to-best", "total cpu", "tasks", "best loss"],
+    );
+    let serial = runner.run_grid(
+        &RayContext::sim(ClusterConfig { nodes: 1, slots_per_node: 1, ..cluster.clone() }, true),
+        &configs,
+    )?;
+    let dist = runner.run_grid(&RayContext::sim(cluster.clone(), true), &configs)?;
+    let sha = runner.run_sha(&RayContext::sim(cluster.clone(), true), &configs, &sched)?;
+    for (name, o) in [("serial grid", &serial), ("distributed grid", &dist), ("dist + SHA", &sha)]
+    {
+        tbl.row(vec![
+            name.into(),
+            fmt_secs(o.makespan),
+            fmt_secs(o.busy_secs),
+            format!("{}", o.tasks_run),
+            format!("{:.4}", o.best.loss),
+        ]);
+    }
+    tbl.print();
+    println!(
+        "\nspeedups vs serial: distributed {:.1}x, dist+SHA {:.1}x (time-to-best)",
+        serial.makespan / dist.makespan,
+        serial.makespan / sha.makespan
+    );
+    assert_eq!(serial.best.config, dist.best.config, "winners must agree");
+    Ok(())
+}

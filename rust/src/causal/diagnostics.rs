@@ -1,0 +1,159 @@
+//! Diagnostics: overlap / positivity checks and covariate balance —
+//! the assumption-auditing half of §4's "integrated validation".
+
+use crate::data::matrix::Matrix;
+use crate::data::synth::CausalDataset;
+
+/// Propensity-overlap report (Assumption 3: 0 < P(T=1|X) < 1).
+#[derive(Clone, Debug)]
+pub struct OverlapReport {
+    pub min_propensity: f32,
+    pub max_propensity: f32,
+    /// Share of units with propensity outside [eps, 1-eps].
+    pub violation_share: f64,
+    /// 10-bin histogram of propensities for treated / control.
+    pub hist_treated: [usize; 10],
+    pub hist_control: [usize; 10],
+    pub ok: bool,
+}
+
+/// Check overlap given fitted (or true) propensities.
+pub fn overlap(propensity: &[f32], t: &[f32], eps: f32) -> OverlapReport {
+    let mut hist_treated = [0usize; 10];
+    let mut hist_control = [0usize; 10];
+    let mut min_p = f32::INFINITY;
+    let mut max_p = f32::NEG_INFINITY;
+    let mut violations = 0usize;
+    for (&p, &ti) in propensity.iter().zip(t) {
+        min_p = min_p.min(p);
+        max_p = max_p.max(p);
+        if p < eps || p > 1.0 - eps {
+            violations += 1;
+        }
+        let bin = ((p * 10.0) as usize).min(9);
+        if ti > 0.5 {
+            hist_treated[bin] += 1;
+        } else {
+            hist_control[bin] += 1;
+        }
+    }
+    let share = violations as f64 / propensity.len().max(1) as f64;
+    OverlapReport {
+        min_propensity: min_p,
+        max_propensity: max_p,
+        violation_share: share,
+        hist_treated,
+        hist_control,
+        ok: share < 0.02,
+    }
+}
+
+/// Standardized mean difference of covariate j between arms.
+pub fn smd(x: &Matrix, t: &[f32], j: usize) -> f64 {
+    let (mut s1, mut q1, mut n1) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut s0, mut q0, mut n0) = (0.0f64, 0.0f64, 0.0f64);
+    for i in 0..x.rows() {
+        let v = x.get(i, j) as f64;
+        if t[i] > 0.5 {
+            s1 += v;
+            q1 += v * v;
+            n1 += 1.0;
+        } else {
+            s0 += v;
+            q0 += v * v;
+            n0 += 1.0;
+        }
+    }
+    let m1 = s1 / n1;
+    let m0 = s0 / n0;
+    let v1 = q1 / n1 - m1 * m1;
+    let v0 = q0 / n0 - m0 * m0;
+    (m1 - m0) / ((v1 + v0) / 2.0).sqrt().max(1e-12)
+}
+
+/// Balance report: SMD per covariate, raw and IPW-weighted.
+#[derive(Clone, Debug)]
+pub struct BalanceReport {
+    pub smd_raw: Vec<f64>,
+    pub smd_weighted: Vec<f64>,
+    /// Max |SMD| after weighting (< 0.1 is the conventional bar).
+    pub max_weighted: f64,
+    pub ok: bool,
+}
+
+/// Inverse-propensity-weighted balance check.
+pub fn balance(ds: &CausalDataset, propensity: &[f32]) -> BalanceReport {
+    let d = ds.d();
+    let smd_raw: Vec<f64> = (0..d).map(|j| smd(&ds.x, &ds.t, j)).collect();
+
+    // IPW-weighted means
+    let mut smd_weighted = Vec::with_capacity(d);
+    for j in 0..d {
+        let (mut s1, mut w1, mut s0, mut w0) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let (mut q1, mut q0) = (0.0f64, 0.0f64);
+        for i in 0..ds.n() {
+            let e = (propensity[i] as f64).clamp(0.01, 0.99);
+            let v = ds.x.get(i, j) as f64;
+            if ds.t[i] > 0.5 {
+                let w = 1.0 / e;
+                s1 += w * v;
+                q1 += w * v * v;
+                w1 += w;
+            } else {
+                let w = 1.0 / (1.0 - e);
+                s0 += w * v;
+                q0 += w * v * v;
+                w0 += w;
+            }
+        }
+        let m1 = s1 / w1;
+        let m0 = s0 / w0;
+        let v1 = q1 / w1 - m1 * m1;
+        let v0 = q0 / w0 - m0 * m0;
+        smd_weighted.push((m1 - m0) / ((v1 + v0) / 2.0).sqrt().max(1e-12));
+    }
+    let max_weighted = smd_weighted.iter().map(|s| s.abs()).fold(0.0, f64::max);
+    BalanceReport { smd_raw, smd_weighted, max_weighted, ok: max_weighted < 0.1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+
+    #[test]
+    fn overlap_ok_for_mild_confounding() {
+        let ds = generate(&SynthConfig { n: 5000, d: 4, ..Default::default() });
+        let rep = overlap(&ds.true_propensity, &ds.t, 0.01);
+        assert!(rep.ok, "{rep:?}");
+        assert!(rep.min_propensity > 0.0 && rep.max_propensity < 1.0);
+        let total: usize =
+            rep.hist_treated.iter().sum::<usize>() + rep.hist_control.iter().sum::<usize>();
+        assert_eq!(total, 5000);
+    }
+
+    #[test]
+    fn overlap_flags_extreme_propensities() {
+        let ds = generate(&SynthConfig {
+            n: 5000,
+            d: 4,
+            propensity_scale: 8.0,
+            ..Default::default()
+        });
+        let rep = overlap(&ds.true_propensity, &ds.t, 0.01);
+        assert!(!rep.ok, "extreme confounding must be flagged: {rep:?}");
+    }
+
+    #[test]
+    fn confounded_covariate_has_large_smd_then_balances() {
+        let ds = generate(&SynthConfig { n: 20_000, d: 4, ..Default::default() });
+        // x0 drives treatment => raw SMD large
+        assert!(smd(&ds.x, &ds.t, 0).abs() > 0.3);
+        // x3 does not => small
+        assert!(smd(&ds.x, &ds.t, 3).abs() < 0.05);
+        // weighting by the TRUE propensity balances x0
+        let rep = balance(&ds, &ds.true_propensity);
+        assert!(rep.smd_raw[0].abs() > 3.0 * rep.smd_weighted[0].abs(), "{rep:?}");
+        assert!(rep.ok, "{rep:?}");
+    }
+}

@@ -1,0 +1,507 @@
+//! Distributed causal discovery — the paper's §6 future scope ("scaling
+//! up causal discovery algorithms, including those based on Bayesian
+//! networks and causal graphical models, using the same principles of
+//! distributed computing").
+//!
+//! PC algorithm (Spirtes–Glymour) over Gaussian data:
+//!
+//! 1. correlation matrix from the same streaming Gram kernel the DML
+//!    path uses (one distributed pass over row blocks),
+//! 2. skeleton discovery: at each level l, test every surviving edge
+//!    (i, j) against all size-l conditioning subsets of the neighbours —
+//!    each edge's test batch is one raylet task (embarrassingly
+//!    parallel, the paper's pattern),
+//! 3. orientation: v-structures, then Meek rules R1–R3.
+//!
+//! CI test: partial correlation via Fisher z, computed from the
+//! correlation matrix by solving the conditioning block (host linalg —
+//! subsets are tiny).
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::causal::inference::normal_cdf;
+use crate::data::matrix::Matrix;
+use crate::error::{NexusError, Result};
+use crate::linalg;
+use crate::raylet::api::RayContext;
+use crate::raylet::payload::Payload;
+use crate::raylet::task::ObjectRef;
+use crate::runtime::tensor::Tensor;
+
+/// Edge endpoint marks of a CPDAG: the partially directed output of PC.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// i — j (undirected)
+    Undirected,
+    /// i -> j
+    Directed,
+}
+
+/// Discovered graph over d variables.
+#[derive(Clone, Debug)]
+pub struct Cpdag {
+    pub d: usize,
+    /// adjacency: adj[i][j] true if an edge touches (i, j) in any
+    /// orientation.
+    adj: Vec<Vec<bool>>,
+    /// directed[i][j] true iff i -> j is oriented.
+    directed: Vec<Vec<bool>>,
+    /// separating set found for each removed pair.
+    pub sepsets: Vec<Vec<Option<Vec<usize>>>>,
+}
+
+impl Cpdag {
+    fn complete(d: usize) -> Cpdag {
+        let mut adj = vec![vec![true; d]; d];
+        for (i, row) in adj.iter_mut().enumerate() {
+            row[i] = false;
+        }
+        Cpdag {
+            d,
+            adj,
+            directed: vec![vec![false; d]; d],
+            sepsets: vec![vec![None; d]; d],
+        }
+    }
+
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.adj[i][j]
+    }
+
+    pub fn is_directed(&self, i: usize, j: usize) -> bool {
+        self.directed[i][j]
+    }
+
+    fn remove_edge(&mut self, i: usize, j: usize) {
+        self.adj[i][j] = false;
+        self.adj[j][i] = false;
+        self.directed[i][j] = false;
+        self.directed[j][i] = false;
+    }
+
+    fn orient(&mut self, i: usize, j: usize) {
+        debug_assert!(self.adj[i][j]);
+        self.directed[i][j] = true;
+        self.directed[j][i] = false;
+    }
+
+    pub fn neighbours(&self, i: usize) -> Vec<usize> {
+        (0..self.d).filter(|&j| self.adj[i][j]).collect()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        let mut n = 0;
+        for i in 0..self.d {
+            for j in i + 1..self.d {
+                if self.adj[i][j] {
+                    n += 1;
+                }
+            }
+        }
+        n
+    }
+
+    /// Edge list as (i, j, kind) with i < j; Directed means i -> j,
+    /// and a j -> i edge is reported as (i, j) with `directed_ji`.
+    pub fn edges(&self) -> Vec<(usize, usize, EdgeKind, bool)> {
+        let mut out = Vec::new();
+        for i in 0..self.d {
+            for j in i + 1..self.d {
+                if !self.adj[i][j] {
+                    continue;
+                }
+                if self.directed[i][j] {
+                    out.push((i, j, EdgeKind::Directed, false));
+                } else if self.directed[j][i] {
+                    out.push((i, j, EdgeKind::Directed, true));
+                } else {
+                    out.push((i, j, EdgeKind::Undirected, false));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Fisher-z partial correlation test: returns the p-value of
+/// rho(i, j | s) = 0 given the correlation matrix and sample size.
+pub fn partial_corr_pvalue(
+    corr: &Matrix,
+    i: usize,
+    j: usize,
+    s: &[usize],
+    n: usize,
+) -> Result<f64> {
+    let rho = partial_corr(corr, i, j, s)?;
+    let k = s.len();
+    if n <= k + 3 {
+        return Err(NexusError::Numeric("sample too small for CI test".into()));
+    }
+    let z = 0.5 * ((1.0 + rho) / (1.0 - rho)).ln() * ((n - k - 3) as f64).sqrt();
+    Ok(2.0 * (1.0 - normal_cdf(z.abs())))
+}
+
+/// Partial correlation rho(i, j | s) from the correlation matrix by
+/// inverting the (i, j, s) principal submatrix.
+pub fn partial_corr(corr: &Matrix, i: usize, j: usize, s: &[usize]) -> Result<f64> {
+    if s.is_empty() {
+        return Ok((corr.get(i, j) as f64).clamp(-0.999999, 0.999999));
+    }
+    let idx: Vec<usize> = [i, j].iter().copied().chain(s.iter().copied()).collect();
+    let k = idx.len();
+    let sub = Matrix::from_fn(k, k, |a, b| corr.get(idx[a], idx[b]));
+    // precision matrix of the submatrix (regularized for f32 safety)
+    let mut reg = sub.clone();
+    for a in 0..k {
+        reg.set(a, a, reg.get(a, a) + 1e-5);
+    }
+    let prec = linalg::inv_spd(&reg)?;
+    let rho = -(prec.get(0, 1) as f64)
+        / ((prec.get(0, 0) as f64) * (prec.get(1, 1) as f64)).sqrt();
+    Ok(rho.clamp(-0.999999, 0.999999))
+}
+
+/// Correlation matrix via the distributed Gram kernel: one gram task per
+/// row block, tree-reduced (exactly the DML §5.1 pattern).
+pub fn correlation_matrix(
+    ctx: &RayContext,
+    kx: Arc<dyn crate::runtime::backend::KernelExec>,
+    x: &Matrix,
+    block: usize,
+) -> Result<Matrix> {
+    let (n, d) = (x.rows(), x.cols());
+    let rows: Vec<usize> = (0..n).collect();
+    let y = vec![0.0f32; n];
+    let t = vec![0.0f32; n];
+    let blocks = crate::data::partition::make_blocks(x, &y, &t, &rows, block);
+    let refs: Vec<ObjectRef> = blocks
+        .iter()
+        .map(|b| ctx.put(crate::models::distops::block_payload(b)))
+        .collect();
+    let partials: Vec<ObjectRef> = refs
+        .iter()
+        .map(|r| {
+            ctx.submit(
+                "corr:gram",
+                vec![*r],
+                0.0,
+                crate::models::distops::gram_task(kx.clone()),
+            )
+        })
+        .collect();
+    let root = crate::models::distops::tree_reduce(ctx, partials, 8, "corr", 0.0, 0);
+    let payload = ctx.get(&root)?;
+    let g = payload.as_tensors()?[0].to_matrix()?;
+
+    // column means from a second cheap pass (host; O(nd))
+    let mut mean = vec![0.0f64; d];
+    for i in 0..n {
+        for (m, &v) in mean.iter_mut().zip(x.row(i)) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    // cov = G/n - mean mean'; corr = D^-1/2 cov D^-1/2
+    let mut corr = Matrix::zeros(d, d);
+    let mut sd = vec![0.0f64; d];
+    for a in 0..d {
+        sd[a] = (g.get(a, a) as f64 / n as f64 - mean[a] * mean[a]).max(1e-12).sqrt();
+    }
+    for a in 0..d {
+        for b in 0..d {
+            let cov = g.get(a, b) as f64 / n as f64 - mean[a] * mean[b];
+            corr.set(a, b, (cov / (sd[a] * sd[b])) as f32);
+        }
+    }
+    Ok(corr)
+}
+
+/// All size-k subsets of `pool` (k small: PC levels 0..=max_level).
+fn subsets(pool: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(k);
+    fn rec(pool: &[usize], k: usize, start: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if cur.len() == k {
+            out.push(cur.clone());
+            return;
+        }
+        for i in start..pool.len() {
+            cur.push(pool[i]);
+            rec(pool, k, i + 1, cur, out);
+            cur.pop();
+        }
+    }
+    rec(pool, k, 0, &mut cur, &mut out);
+    out
+}
+
+/// PC configuration.
+#[derive(Clone, Debug)]
+pub struct PcConfig {
+    pub alpha: f64,
+    pub max_level: usize,
+}
+
+impl Default for PcConfig {
+    fn default() -> Self {
+        PcConfig { alpha: 0.01, max_level: 3 }
+    }
+}
+
+/// Run PC: skeleton (distributed CI-test batches) + orientation.
+pub fn pc(
+    ctx: &RayContext,
+    corr: &Matrix,
+    n: usize,
+    cfg: &PcConfig,
+) -> Result<Cpdag> {
+    let d = corr.rows();
+    let mut g = Cpdag::complete(d);
+    let corr_ref = ctx.put(Payload::Tensor(Tensor::from_matrix(corr)));
+
+    for level in 0..=cfg.max_level {
+        // collect the edges to test at this level
+        let edges: Vec<(usize, usize)> = (0..d)
+            .flat_map(|i| ((i + 1)..d).map(move |j| (i, j)))
+            .filter(|&(i, j)| g.has_edge(i, j))
+            .collect();
+        if edges.is_empty() {
+            break;
+        }
+        // one task per edge: run this level's CI-test batch
+        let alpha = cfg.alpha;
+        let tasks: Vec<(usize, usize, ObjectRef)> = edges
+            .iter()
+            .filter_map(|&(i, j)| {
+                // conditioning candidates: neighbours of i or j minus the pair
+                let mut pool: BTreeSet<usize> = g.neighbours(i).into_iter().collect();
+                pool.extend(g.neighbours(j));
+                pool.remove(&i);
+                pool.remove(&j);
+                let pool: Vec<usize> = pool.into_iter().collect();
+                if pool.len() < level {
+                    return None;
+                }
+                let subs = subsets(&pool, level);
+                let r = ctx.submit(
+                    &format!("pc:l{level}:e{i}-{j}"),
+                    vec![corr_ref],
+                    0.0,
+                    Arc::new(move |args: &[&Payload]| {
+                        let corr = args[0].as_tensor()?.to_matrix()?;
+                        for s in &subs {
+                            let p = partial_corr_pvalue(&corr, i, j, s, n)?;
+                            if p > alpha {
+                                // independent given s: report the sepset
+                                let mut enc: Vec<f32> =
+                                    vec![1.0, s.len() as f32];
+                                enc.extend(s.iter().map(|&v| v as f32));
+                                return Ok(Payload::Floats(enc));
+                            }
+                        }
+                        Ok(Payload::Floats(vec![0.0]))
+                    }),
+                );
+                Some((i, j, r))
+            })
+            .collect();
+        ctx.drain()?;
+        for (i, j, r) in tasks {
+            let out = ctx.get(&r)?;
+            let enc = out.as_floats()?;
+            if enc[0] > 0.5 {
+                let k = enc[1] as usize;
+                let sep: Vec<usize> = enc[2..2 + k].iter().map(|&v| v as usize).collect();
+                g.remove_edge(i, j);
+                g.sepsets[i][j] = Some(sep.clone());
+                g.sepsets[j][i] = Some(sep);
+            }
+        }
+    }
+
+    orient(&mut g);
+    Ok(g)
+}
+
+/// Orientation: v-structures then Meek rules R1–R3 to closure.
+fn orient(g: &mut Cpdag) {
+    let d = g.d;
+    // v-structures: i - k - j with i not adj j and k not in sepset(i, j)
+    for k in 0..d {
+        for i in 0..d {
+            for j in (i + 1)..d {
+                if i == k || j == k {
+                    continue;
+                }
+                if g.has_edge(i, k) && g.has_edge(j, k) && !g.has_edge(i, j) {
+                    let sep = g.sepsets[i][j].clone().unwrap_or_default();
+                    if !sep.contains(&k) {
+                        g.orient(i, k);
+                        g.orient(j, k);
+                    }
+                }
+            }
+        }
+    }
+    // Meek rules to fixpoint
+    loop {
+        let mut changed = false;
+        for a in 0..d {
+            for b in 0..d {
+                if !(g.has_edge(a, b) && !g.is_directed(a, b) && !g.is_directed(b, a)) {
+                    continue;
+                }
+                // R1: c -> a, a - b, c not adj b  =>  a -> b
+                let r1 = (0..d).any(|c| {
+                    c != b && g.is_directed(c, a) && !g.has_edge(c, b)
+                });
+                // R2: a -> c -> b and a - b  =>  a -> b
+                let r2 = (0..d).any(|c| g.is_directed(a, c) && g.is_directed(c, b));
+                // R3: a - c1 -> b, a - c2 -> b, c1 not adj c2 => a -> b
+                let mut r3 = false;
+                for c1 in 0..d {
+                    if !(g.has_edge(a, c1) && g.is_directed(c1, b)) {
+                        continue;
+                    }
+                    for c2 in (c1 + 1)..d {
+                        if g.has_edge(a, c2) && g.is_directed(c2, b) && !g.has_edge(c1, c2) {
+                            r3 = true;
+                        }
+                    }
+                }
+                if r1 || r2 || r3 {
+                    g.orient(a, b);
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::HostBackend;
+    use crate::util::rng::Pcg32;
+
+    /// Generate n samples from a linear-Gaussian SEM over the given DAG
+    /// (edges as (parent, child, weight)).
+    fn sem(n: usize, d: usize, edges: &[(usize, usize, f32)], seed: u64) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        let mut x = Matrix::zeros(n, d);
+        // topological order assumed = variable order
+        for i in 0..n {
+            for v in 0..d {
+                let mut val = rng.normal_f32();
+                for &(p, c, w) in edges {
+                    if c == v {
+                        val += w * x.get(i, p);
+                    }
+                }
+                x.set(i, v, val);
+            }
+        }
+        x
+    }
+
+    fn discover(x: &Matrix, alpha: f64) -> Cpdag {
+        let ctx = RayContext::threads(3);
+        let corr = correlation_matrix(&ctx, Arc::new(HostBackend), x, 256).unwrap();
+        pc(&ctx, &corr, x.rows(), &PcConfig { alpha, max_level: 2 }).unwrap()
+    }
+
+    #[test]
+    fn chain_recovers_skeleton() {
+        // 0 -> 1 -> 2: skeleton 0-1, 1-2, NO 0-2 (blocked by 1)
+        let x = sem(4000, 3, &[(0, 1, 0.9), (1, 2, 0.9)], 1);
+        let g = discover(&x, 0.01);
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 2));
+        assert!(!g.has_edge(0, 2), "chain must drop 0-2 given {{1}}");
+        assert_eq!(g.sepsets[0][2].as_deref(), Some(&[1][..]));
+    }
+
+    #[test]
+    fn collider_is_oriented() {
+        // 0 -> 2 <- 1 (v-structure): marginally 0 indep 1, so 0-1 drops
+        // at level 0 with empty sepset => 2 not in sepset => orient both.
+        let x = sem(4000, 3, &[(0, 2, 0.8), (1, 2, 0.8)], 2);
+        let g = discover(&x, 0.01);
+        assert!(!g.has_edge(0, 1));
+        assert!(g.is_directed(0, 2), "{:?}", g.edges());
+        assert!(g.is_directed(1, 2), "{:?}", g.edges());
+    }
+
+    #[test]
+    fn fork_stays_unoriented() {
+        // 1 <- 0 -> 2: Markov-equivalent to the chain; PC must find the
+        // skeleton and leave edges undirected (no v-structure).
+        let x = sem(4000, 3, &[(0, 1, 0.9), (0, 2, 0.9)], 3);
+        let g = discover(&x, 0.01);
+        assert!(g.has_edge(0, 1) && g.has_edge(0, 2) && !g.has_edge(1, 2));
+        assert!(!g.is_directed(0, 1) && !g.is_directed(1, 0));
+    }
+
+    #[test]
+    fn random_dag_skeleton_f1() {
+        // sparse random DAG over 8 vars; check skeleton F1 > 0.8
+        let d = 8;
+        let mut rng = Pcg32::new(7);
+        let mut edges = Vec::new();
+        for p in 0..d {
+            for c in (p + 1)..d {
+                if rng.bernoulli(0.25) {
+                    edges.push((p, c, 0.7 + 0.3 * rng.f32()));
+                }
+            }
+        }
+        let x = sem(8000, d, &edges, 8);
+        let g = discover(&x, 0.01);
+        let truth: BTreeSet<(usize, usize)> =
+            edges.iter().map(|&(p, c, _)| (p.min(c), p.max(c))).collect();
+        let found: BTreeSet<(usize, usize)> =
+            g.edges().iter().map(|&(i, j, _, _)| (i, j)).collect();
+        let tp = truth.intersection(&found).count() as f64;
+        let precision = tp / found.len().max(1) as f64;
+        let recall = tp / truth.len().max(1) as f64;
+        let f1 = 2.0 * precision * recall / (precision + recall).max(1e-9);
+        assert!(f1 > 0.8, "f1={f1:.2} (p={precision:.2} r={recall:.2}) truth={truth:?} found={found:?}");
+    }
+
+    #[test]
+    fn distributed_equals_sequential_discovery() {
+        let x = sem(2000, 5, &[(0, 1, 0.8), (1, 2, 0.8), (3, 2, 0.6), (3, 4, 0.9)], 9);
+        let run = |ctx: RayContext| {
+            let corr = correlation_matrix(&ctx, Arc::new(HostBackend), &x, 256).unwrap();
+            let g = pc(&ctx, &corr, x.rows(), &PcConfig::default()).unwrap();
+            g.edges()
+        };
+        assert_eq!(run(RayContext::inline()), run(RayContext::threads(4)));
+    }
+
+    #[test]
+    fn partial_corr_basics() {
+        // corr of independent vars = 0; conditioning can't create it
+        let x = sem(6000, 3, &[(0, 1, 0.9), (1, 2, 0.9)], 10);
+        let ctx = RayContext::inline();
+        let corr = correlation_matrix(&ctx, Arc::new(HostBackend), &x, 512).unwrap();
+        // marginal rho(0, 2) is large; partial given {1} ~ 0
+        let marg = partial_corr(&corr, 0, 2, &[]).unwrap();
+        let part = partial_corr(&corr, 0, 2, &[1]).unwrap();
+        assert!(marg.abs() > 0.5, "marg={marg}");
+        assert!(part.abs() < 0.08, "part={part}");
+    }
+
+    #[test]
+    fn subsets_counts() {
+        assert_eq!(subsets(&[1, 2, 3, 4], 2).len(), 6);
+        assert_eq!(subsets(&[1, 2, 3], 0), vec![Vec::<usize>::new()]);
+        assert_eq!(subsets(&[1], 2).len(), 0);
+    }
+}

@@ -1,0 +1,441 @@
+//! LinearDML — the paper's `DML_Ray`.
+//!
+//! Pipeline (EconML `LinearDML(discrete_treatment=True)` semantics):
+//!
+//! 1. distributed cross-fitting of the nuisances (models/crossfit.rs)
+//! 2. orthogonal final stage: OLS of y~ on t~·phi(x), phi = [1, x_het...]
+//! 3. HC0 sandwich standard errors from the moment + score partials
+//!
+//! Steps 2–3 are themselves distributed: moment/score partials are block
+//! tasks tree-reduced like the nuisance fits, so the entire estimate is
+//! one task DAG and the `DML` (sequential) vs `DML_Ray` (distributed)
+//! comparison of Fig 6 is purely an executor swap.
+
+use std::sync::Arc;
+
+use crate::config::{ExecMode, RunConfig};
+use crate::data::matrix::Matrix;
+use crate::data::synth::CausalDataset;
+use crate::error::{NexusError, Result};
+use crate::models::cost::CostModel;
+use crate::models::crossfit::{self, CrossfitConfig, CrossfitOutput};
+use crate::models::distops::unpack_block;
+use crate::models::ridge::REDUCE_ARITY;
+use crate::models::distops;
+use crate::raylet::api::{Metrics, RayContext};
+use crate::raylet::payload::Payload;
+use crate::raylet::task::TaskFn;
+use crate::runtime::backend::{backend_by_name, KernelExec};
+use crate::runtime::tensor::Tensor;
+use crate::causal::inference::{sandwich_covariance, Estimate};
+
+/// A fitted LinearDML model.
+pub struct DmlFit {
+    /// Final-stage coefficients: theta[0] = constant effect, theta[1..]
+    /// = heterogeneity loadings on the first `het` covariates.
+    pub theta: Vec<f32>,
+    /// HC0 sandwich covariance of theta.
+    pub cov: Matrix,
+    /// Average treatment effect with inference.
+    pub ate: Estimate,
+    pub n: usize,
+    /// Number of heterogeneity features (p = het + 1).
+    pub het: usize,
+    /// Executor metrics (makespan is virtual for sim runs).
+    pub metrics: Metrics,
+    /// The cross-fitting byproducts (residuals, per-fold betas).
+    pub crossfit: CrossfitOutput,
+}
+
+impl DmlFit {
+    /// CATE(x) = theta0 + sum_j theta_{j+1} * x_j over the het features.
+    pub fn predict_cate(&self, x_row: &[f32]) -> f32 {
+        let mut v = self.theta[0];
+        for j in 0..self.het {
+            v += self.theta[j + 1] * x_row[j];
+        }
+        v
+    }
+}
+
+/// Final-stage moment task: phi built from the block's covariates.
+/// args = [block, residuals] -> Tensors([M, v]).
+fn moments_task(kx: Arc<dyn KernelExec>, het: usize, p_pad: usize) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let (x, _y, _t, mask) = unpack_block(args[0])?;
+        let ts = args[1].as_tensors()?;
+        let (yr, tr) = (&ts[0].data, &ts[1].data);
+        let phi = build_phi(&x, het, p_pad);
+        let (m, v) = kx.final_moments(yr, tr, &phi, mask)?;
+        Ok(Payload::Tensors(vec![Tensor::from_matrix_owned(m), Tensor::vector(v)]))
+    })
+}
+
+/// Final-stage score task.  args = [block, residuals, theta_pad].
+fn score_task(kx: Arc<dyn KernelExec>, het: usize, p_pad: usize) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let (x, _y, _t, mask) = unpack_block(args[0])?;
+        let ts = args[1].as_tensors()?;
+        let (yr, tr) = (&ts[0].data, &ts[1].data);
+        let theta = args[2].as_floats()?;
+        let phi = build_phi(&x, het, p_pad);
+        let s = kx.final_score(yr, tr, &phi, theta, mask)?;
+        Ok(Payload::Tensors(vec![Tensor::from_matrix_owned(s)]))
+    })
+}
+
+/// phi = [intercept (col 0 of the padded x), x_1..x_het], zero-padded to
+/// p_pad columns.  Padded rows have x = 0 so phi = 0 there; the mask
+/// keeps them inert regardless.
+fn build_phi(x: &Matrix, het: usize, p_pad: usize) -> Matrix {
+    let b = x.rows();
+    Matrix::from_fn(b, p_pad, |i, j| if j <= het { x.get(i, j) } else { 0.0 })
+}
+
+fn noop_task() -> TaskFn {
+    Arc::new(|_: &[&Payload]| Ok(Payload::Empty))
+}
+
+/// Fit LinearDML on a dataset under a prepared context/backend.
+pub fn fit_with(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    cost: &CostModel,
+    ds: &CausalDataset,
+    ccfg: &CrossfitConfig,
+    het: usize,
+    p_pad: usize,
+) -> Result<DmlFit> {
+    let p_raw = het + 1;
+    if p_raw > p_pad {
+        return Err(NexusError::Config(format!("het={het} needs p_pad >= {p_raw}")));
+    }
+    let cf = crossfit::run(ctx, kx.clone(), cost, ds, ccfg)?;
+
+    // ---- moments pass ----
+    let b = ccfg.block;
+    let mut partials = Vec::new();
+    for k in 0..ccfg.cv {
+        for (blk, resid) in cf.block_refs[k].iter().zip(&cf.resid_refs[k]) {
+            partials.push(ctx.submit_sized(
+                "final:moments",
+                vec![*blk, *resid],
+                cost.final_stage(b, p_pad),
+                CostModel::gram_bytes(p_pad),
+                moments_task(kx.clone(), het, p_pad),
+            ));
+        }
+    }
+    let reduced = distops::tree_reduce(
+        ctx,
+        partials,
+        REDUCE_ARITY,
+        "final",
+        cost.reduce(REDUCE_ARITY, p_pad),
+        CostModel::gram_bytes(p_pad),
+    );
+    let red = ctx.get(&reduced)?;
+    let ts = red.as_tensors()?;
+    let m_pad = ts[0].to_matrix()?;
+    let v_pad = &ts[1].data;
+    let m = slice_square(&m_pad, p_raw);
+    let v = v_pad[..p_raw].to_vec();
+    let lam = vec![1e-8f32; p_raw];
+    let theta = kx.ridge_solve(&m, &v, &lam)?;
+
+    // ---- score pass (HC0 meat) ----
+    let mut theta_pad = theta.clone();
+    theta_pad.resize(p_pad, 0.0);
+    let theta_ref = ctx.put(Payload::Floats(theta_pad));
+    let mut score_partials = Vec::new();
+    for k in 0..ccfg.cv {
+        for (blk, resid) in cf.block_refs[k].iter().zip(&cf.resid_refs[k]) {
+            score_partials.push(ctx.submit_sized(
+                "final:score",
+                vec![*blk, *resid, theta_ref],
+                cost.final_stage(b, p_pad),
+                CostModel::gram_bytes(p_pad),
+                score_task(kx.clone(), het, p_pad),
+            ));
+        }
+    }
+    let s_red = distops::tree_reduce(
+        ctx,
+        score_partials,
+        REDUCE_ARITY,
+        "final:score",
+        cost.reduce(REDUCE_ARITY, p_pad),
+        CostModel::gram_bytes(p_pad),
+    );
+    let s_payload = ctx.get(&s_red)?;
+    let s_pad = s_payload.as_tensors()?[0].to_matrix()?;
+    let s = slice_square(&s_pad, p_raw);
+    let cov = sandwich_covariance(&m, &s)?;
+
+    // ---- ATE via delta method over the sample mean of phi ----
+    let n = ds.n();
+    let mut g = vec![0.0f64; p_raw];
+    g[0] = 1.0;
+    for j in 0..het {
+        g[j + 1] = (0..n).map(|i| ds.x.get(i, j) as f64).sum::<f64>() / n as f64;
+    }
+    let ate_val: f64 = g.iter().zip(&theta).map(|(gi, &ti)| gi * ti as f64).sum();
+    let mut var = 0.0f64;
+    for i in 0..p_raw {
+        for j in 0..p_raw {
+            var += g[i] * cov.get(i, j) as f64 * g[j];
+        }
+    }
+    let ate = Estimate::from_value_se(ate_val, var.max(0.0).sqrt(), 0.95);
+
+    Ok(DmlFit {
+        theta,
+        cov,
+        ate,
+        n,
+        het,
+        metrics: ctx.metrics(),
+        crossfit: cf,
+    })
+}
+
+fn slice_square(m: &Matrix, p: usize) -> Matrix {
+    Matrix::from_fn(p, p, |i, j| m.get(i, j))
+}
+
+/// High-level entry: build executor + backend from a [`RunConfig`], pick
+/// shipped artifact shapes, fit.
+pub fn fit(cfg: &RunConfig, ds: &CausalDataset) -> Result<DmlFit> {
+    cfg.validate()?;
+    let kx = backend_by_name(&cfg.backend)?;
+    let (block, d_pad, p_pad) = pick_shapes(cfg)?;
+    let ccfg = CrossfitConfig::from_run(cfg, block, d_pad);
+    // calibrate on a small shipped shape with the run's covariate width
+    let cost = CostModel::calibrate(kx.as_ref(), 256, d_pad.min(64));
+    let ctx = match cfg.exec {
+        ExecMode::Sequential => RayContext::inline(),
+        ExecMode::Distributed => RayContext::threads(cfg.workers),
+        ExecMode::Simulated => RayContext::sim(cfg.cluster.clone(), true),
+    };
+    fit_with(&ctx, kx, &cost, ds, &ccfg, cfg.het_features, p_pad)
+}
+
+/// Shapes: under PJRT the block/width must be shipped artifact sizes;
+/// the host backend accepts anything but uses the same picks so results
+/// are comparable.
+pub fn pick_shapes(cfg: &RunConfig) -> Result<(usize, usize, usize)> {
+    let p_raw = cfg.het_features + 1;
+    if cfg.backend.starts_with("pjrt") {
+        let manifest = crate::runtime::artifacts::Manifest::load(
+            crate::runtime::artifacts::Manifest::default_dir(),
+        )?;
+        let d_pad = manifest.pick_d(cfg.d + 1)?;
+        let per_fold = cfg.n / cfg.cv;
+        let block = crate::data::partition::pick_block_size(per_fold, &manifest.block_b);
+        let p_pad = manifest.pick_p(p_raw)?;
+        Ok((block, d_pad, p_pad))
+    } else {
+        let per_fold = cfg.n / cfg.cv;
+        let block = crate::data::partition::pick_block_size(per_fold, &[256, 4096]);
+        Ok((block, (cfg.d + 1).next_power_of_two().max(16), p_raw))
+    }
+}
+
+/// Dry-run (timing-only) DML DAG on the simulated cluster: crossfit +
+/// final passes with the same shapes and cost hints, no data.  Used by
+/// the Fig 6 bench at paper scale.
+pub fn fit_dry(
+    ctx: &RayContext,
+    cost: &CostModel,
+    n: usize,
+    ccfg: &CrossfitConfig,
+    p_pad: usize,
+) -> Result<Metrics> {
+    let cf = crossfit::run_dry(ctx, cost, n, ccfg)?;
+    let b = ccfg.block;
+    // moments + score passes (same DAG shape as fit_with)
+    for pass in ["final:moments", "final:score"] {
+        let mut partials = Vec::new();
+        for k in 0..ccfg.cv {
+            for (blk, resid) in cf.block_refs[k].iter().zip(&cf.resid_refs[k]) {
+                partials.push(ctx.submit_sized(
+                    pass,
+                    vec![*blk, *resid],
+                    cost.final_stage(b, p_pad),
+                    CostModel::gram_bytes(p_pad),
+                    noop_task(),
+                ));
+            }
+        }
+        let red = distops::tree_reduce(
+            ctx,
+            partials,
+            REDUCE_ARITY,
+            pass,
+            cost.reduce(REDUCE_ARITY, p_pad),
+            CostModel::gram_bytes(p_pad),
+        );
+        // solve happens driver-side in fit_with; model it as one task
+        ctx.submit_sized(&format!("{pass}:solve"), vec![red], cost.solve(p_pad), 4 * p_pad, noop_task());
+    }
+    ctx.drain()?;
+    Ok(ctx.metrics())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::runtime::backend::HostBackend;
+
+    fn paper_dgp(n: usize, d: usize) -> CausalDataset {
+        generate(&SynthConfig { n, d, ..Default::default() })
+    }
+
+    fn ccfg(d: usize) -> CrossfitConfig {
+        CrossfitConfig {
+            cv: 5,
+            lam_y: 1e-3,
+            lam_t: 1e-3,
+            irls_iters: 5,
+            block: 256,
+            d_pad: (d + 1).next_power_of_two().max(8),
+            d_real: d,
+            seed: 11,
+            stratified: true,
+            reuse_suffstats: false,
+        }
+    }
+
+    #[test]
+    fn recovers_true_ate_on_paper_dgp() {
+        // truth: ATE = 1 (y = (1 + 0.5 x0) T + x0 + eps)
+        let ds = paper_dgp(8000, 6);
+        let ctx = RayContext::inline();
+        let fit = fit_with(
+            &ctx,
+            Arc::new(HostBackend),
+            &CostModel::default(),
+            &ds,
+            &ccfg(6),
+            1,
+            2,
+        )
+        .unwrap();
+        assert!(
+            (fit.ate.value - 1.0).abs() < 0.1,
+            "ate={} truth=1",
+            fit.ate.value
+        );
+        assert!(fit.ate.se > 0.0 && fit.ate.se < 0.2);
+        // heterogeneity loading theta1 ~ 0.5
+        assert!((fit.theta[1] - 0.5).abs() < 0.15, "theta={:?}", fit.theta);
+    }
+
+    #[test]
+    fn ci_covers_truth() {
+        let ds = paper_dgp(6000, 4);
+        let ctx = RayContext::inline();
+        let fit = fit_with(
+            &ctx,
+            Arc::new(HostBackend),
+            &CostModel::default(),
+            &ds,
+            &ccfg(4),
+            1,
+            2,
+        )
+        .unwrap();
+        assert!(fit.ate.contains(1.0), "CI [{}, {}]", fit.ate.ci_lo, fit.ate.ci_hi);
+    }
+
+    #[test]
+    fn naive_is_biased_dml_is_not() {
+        let ds = paper_dgp(10_000, 4);
+        // naive difference in means
+        let (mut s1, mut n1, mut s0, mut n0) = (0.0f64, 0.0, 0.0f64, 0.0);
+        for i in 0..ds.n() {
+            if ds.t[i] > 0.5 {
+                s1 += ds.y[i] as f64;
+                n1 += 1.0;
+            } else {
+                s0 += ds.y[i] as f64;
+                n0 += 1.0;
+            }
+        }
+        let naive = s1 / n1 - s0 / n0;
+        let ctx = RayContext::inline();
+        let fit = fit_with(
+            &ctx,
+            Arc::new(HostBackend),
+            &CostModel::default(),
+            &ds,
+            &ccfg(4),
+            1,
+            2,
+        )
+        .unwrap();
+        assert!((naive - 1.0).abs() > 2.0 * (fit.ate.value - 1.0).abs(),
+            "naive={naive} dml={}", fit.ate.value);
+    }
+
+    #[test]
+    fn sequential_and_distributed_estimates_identical() {
+        let ds = paper_dgp(3000, 4);
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        let cost = CostModel::default();
+        let cfg = ccfg(4);
+        let seq = fit_with(&RayContext::inline(), kx.clone(), &cost, &ds, &cfg, 1, 2).unwrap();
+        let dist =
+            fit_with(&RayContext::threads(4), kx.clone(), &cost, &ds, &cfg, 1, 2).unwrap();
+        let sim = fit_with(
+            &RayContext::sim(ClusterConfig::default(), true),
+            kx,
+            &cost,
+            &ds,
+            &cfg,
+            1,
+            2,
+        )
+        .unwrap();
+        assert_eq!(seq.theta, dist.theta, "DML_Ray must equal DML exactly");
+        assert_eq!(seq.theta, sim.theta);
+        assert_eq!(seq.ate.value, dist.ate.value);
+    }
+
+    #[test]
+    fn cate_prediction_tracks_truth() {
+        let ds = paper_dgp(8000, 4);
+        let ctx = RayContext::inline();
+        let fit = fit_with(
+            &ctx,
+            Arc::new(HostBackend),
+            &CostModel::default(),
+            &ds,
+            &ccfg(4),
+            1,
+            2,
+        )
+        .unwrap();
+        // CATE(x0) = 1 + 0.5 x0
+        let mut err = 0.0f64;
+        for (i, x0) in [-2.0f32, -1.0, 0.0, 1.0, 2.0].iter().enumerate() {
+            let pred = fit.predict_cate(&[*x0]);
+            let truth = 1.0 + 0.5 * x0;
+            err += ((pred - truth) as f64).abs();
+            let _ = i;
+        }
+        assert!(err / 5.0 < 0.15, "mean CATE err {}", err / 5.0);
+    }
+
+    #[test]
+    fn dry_run_metrics_have_tasks_and_makespan() {
+        let cfg = ccfg(6);
+        let ctx = RayContext::sim(ClusterConfig::default(), false);
+        let m = fit_dry(&ctx, &CostModel::default(), 5000, &cfg, 2).unwrap();
+        assert!(m.tasks_run > 100);
+        assert!(m.makespan > 0.0);
+        assert_eq!(m.failed, 0);
+    }
+}

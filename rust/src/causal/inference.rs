@@ -1,0 +1,144 @@
+//! Inference helpers: sandwich covariance, normal CIs, z-tests.
+
+use crate::data::matrix::Matrix;
+use crate::error::Result;
+use crate::linalg;
+
+/// A point estimate with standard error and confidence interval.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    pub value: f64,
+    pub se: f64,
+    pub ci_lo: f64,
+    pub ci_hi: f64,
+    /// Two-sided p-value for H0: value = 0.
+    pub p_value: f64,
+}
+
+impl Estimate {
+    pub fn from_value_se(value: f64, se: f64, level: f64) -> Estimate {
+        let z = normal_quantile(0.5 + level / 2.0);
+        let zstat = if se > 0.0 { value / se } else { f64::INFINITY };
+        Estimate {
+            value,
+            se,
+            ci_lo: value - z * se,
+            ci_hi: value + z * se,
+            p_value: 2.0 * (1.0 - normal_cdf(zstat.abs())),
+        }
+    }
+
+    pub fn contains(&self, truth: f64) -> bool {
+        (self.ci_lo..=self.ci_hi).contains(&truth)
+    }
+}
+
+/// HC0 sandwich: cov = M^-1 S M^-1 for moment matrix M and score outer
+/// product S (both p x p).
+pub fn sandwich_covariance(m: &Matrix, s: &Matrix) -> Result<Matrix> {
+    let m_inv = linalg::inv_spd(m)?;
+    Ok(linalg::mat_mul(&linalg::mat_mul(&m_inv, s), &m_inv))
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun erf approximation
+/// (|err| < 1.5e-7 — plenty for CI construction).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Inverse normal CDF (Acklam's rational approximation, |err| < 1.2e-8).
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p) && p > 0.0, "p={p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -normal_quantile(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normal_quantile_known_values() {
+        assert!((normal_quantile(0.975) - 1.959964).abs() < 1e-4);
+        assert!((normal_quantile(0.5)).abs() < 1e-8);
+        assert!((normal_quantile(0.025) + 1.959964).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cdf_quantile_roundtrip() {
+        for p in [0.01, 0.1, 0.3, 0.5, 0.8, 0.99] {
+            let x = normal_quantile(p);
+            assert!((normal_cdf(x) - p).abs() < 1e-5, "p={p}");
+        }
+    }
+
+    #[test]
+    fn estimate_ci() {
+        let e = Estimate::from_value_se(1.0, 0.1, 0.95);
+        assert!((e.ci_lo - 0.804).abs() < 0.01);
+        assert!((e.ci_hi - 1.196).abs() < 0.01);
+        assert!(e.contains(1.0));
+        assert!(!e.contains(0.0));
+        assert!(e.p_value < 1e-8);
+    }
+
+    #[test]
+    fn sandwich_identity_case() {
+        // M = I, S = I => cov = I
+        let i = Matrix::identity(3);
+        let cov = sandwich_covariance(&i, &i).unwrap();
+        assert!(cov.max_abs_diff(&Matrix::identity(3)) < 1e-5);
+    }
+}

@@ -1,0 +1,192 @@
+//! Metalearner baselines (Künzel et al. 2019): S-, T- and X-learners.
+//!
+//! These are the comparison estimators the NEXUS platform exposes next
+//! to DML (§4 "functionality to leverage ... existing open-source
+//! libraries like CausalML, EconML").  All ride the same distributed
+//! ridge/logistic fits, so they parallelize the same way.
+
+use std::sync::Arc;
+
+use crate::data::matrix::Matrix;
+use crate::data::synth::CausalDataset;
+use crate::error::Result;
+use crate::models::{logistic, ridge};
+use crate::raylet::api::RayContext;
+use crate::runtime::backend::KernelExec;
+
+/// Result of a metalearner fit.
+#[derive(Clone, Debug)]
+pub struct MetaFit {
+    pub ate: f64,
+    /// Per-unit effect estimates tau_i.
+    pub cate: Vec<f32>,
+}
+
+fn with_intercept(x: &Matrix) -> Matrix {
+    x.with_intercept()
+}
+
+/// S-learner: one ridge on [1, x, t, t*x] — effect = f(x,1) - f(x,0).
+pub fn s_learner(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    ds: &CausalDataset,
+    lam: f32,
+    block: usize,
+) -> Result<MetaFit> {
+    let (n, d) = (ds.n(), ds.d());
+    // design: [1, x..., t, t*x...]
+    let width = 1 + d + 1 + d;
+    let design = Matrix::from_fn(n, width, |i, j| {
+        if j == 0 {
+            1.0
+        } else if j <= d {
+            ds.x.get(i, j - 1)
+        } else if j == d + 1 {
+            ds.t[i]
+        } else {
+            ds.t[i] * ds.x.get(i, j - d - 2)
+        }
+    });
+    let beta = ridge::fit_simple(ctx, kx, &design, &ds.y, lam, block)?;
+    // f(x,1)-f(x,0) = beta_t + sum_j beta_{tx_j} x_j
+    let mut cate = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut tau = beta[d + 1];
+        for j in 0..d {
+            tau += beta[d + 2 + j] * ds.x.get(i, j);
+        }
+        cate.push(tau);
+    }
+    let ate = cate.iter().map(|&c| c as f64).sum::<f64>() / n as f64;
+    Ok(MetaFit { ate, cate })
+}
+
+/// T-learner: separate ridges on treated and control arms.
+pub fn t_learner(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    ds: &CausalDataset,
+    lam: f32,
+    block: usize,
+) -> Result<MetaFit> {
+    let (beta1, beta0) = arm_regressions(ctx, kx.clone(), ds, lam, block)?;
+    let xi = with_intercept(&ds.x);
+    let mu1 = crate::linalg::mat_vec(&xi, &beta1);
+    let mu0 = crate::linalg::mat_vec(&xi, &beta0);
+    let cate: Vec<f32> = mu1.iter().zip(&mu0).map(|(a, b)| a - b).collect();
+    let ate = cate.iter().map(|&c| c as f64).sum::<f64>() / cate.len() as f64;
+    Ok(MetaFit { ate, cate })
+}
+
+/// X-learner: T-learner arms + imputed-effect regressions blended by the
+/// estimated propensity.
+pub fn x_learner(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    ds: &CausalDataset,
+    lam: f32,
+    block: usize,
+) -> Result<MetaFit> {
+    let (beta1, beta0) = arm_regressions(ctx, kx.clone(), ds, lam, block)?;
+    let xi = with_intercept(&ds.x);
+    let mu1 = crate::linalg::mat_vec(&xi, &beta1);
+    let mu0 = crate::linalg::mat_vec(&xi, &beta0);
+
+    // imputed individual effects
+    let (mut x1_rows, mut d1) = (Vec::new(), Vec::new());
+    let (mut x0_rows, mut d0) = (Vec::new(), Vec::new());
+    for i in 0..ds.n() {
+        if ds.t[i] > 0.5 {
+            x1_rows.push(i);
+            d1.push(ds.y[i] - mu0[i]);
+        } else {
+            x0_rows.push(i);
+            d0.push(mu1[i] - ds.y[i]);
+        }
+    }
+    let tau1 = ridge::fit_simple(ctx, kx.clone(), &xi.gather_rows(&x1_rows), &d1, lam, block)?;
+    let tau0 = ridge::fit_simple(ctx, kx.clone(), &xi.gather_rows(&x0_rows), &d0, lam, block)?;
+
+    // propensity blend
+    let beta_e = logistic::fit_simple(ctx, kx, &xi, &ds.t, 1e-3, 5, block)?;
+    let e = crate::linalg::mat_vec(&xi, &beta_e);
+    let t1 = crate::linalg::mat_vec(&xi, &tau1);
+    let t0 = crate::linalg::mat_vec(&xi, &tau0);
+    let cate: Vec<f32> = (0..ds.n())
+        .map(|i| {
+            let g = crate::data::synth::sigmoid(e[i]);
+            g * t0[i] + (1.0 - g) * t1[i]
+        })
+        .collect();
+    let ate = cate.iter().map(|&c| c as f64).sum::<f64>() / cate.len() as f64;
+    Ok(MetaFit { ate, cate })
+}
+
+fn arm_regressions(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    ds: &CausalDataset,
+    lam: f32,
+    block: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let xi = with_intercept(&ds.x);
+    let treated: Vec<usize> = (0..ds.n()).filter(|&i| ds.t[i] > 0.5).collect();
+    let control: Vec<usize> = (0..ds.n()).filter(|&i| ds.t[i] <= 0.5).collect();
+    let y1: Vec<f32> = treated.iter().map(|&i| ds.y[i]).collect();
+    let y0: Vec<f32> = control.iter().map(|&i| ds.y[i]).collect();
+    let beta1 = ridge::fit_simple(ctx, kx.clone(), &xi.gather_rows(&treated), &y1, lam, block)?;
+    let beta0 = ridge::fit_simple(ctx, kx, &xi.gather_rows(&control), &y0, lam, block)?;
+    Ok((beta1, beta0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::runtime::backend::HostBackend;
+
+    fn data() -> CausalDataset {
+        generate(&SynthConfig { n: 8000, d: 4, ..Default::default() })
+    }
+
+    #[test]
+    fn s_learner_recovers_ate() {
+        let ds = data();
+        let ctx = RayContext::inline();
+        let fit = s_learner(&ctx, Arc::new(HostBackend), &ds, 1e-3, 512).unwrap();
+        assert!((fit.ate - 1.0).abs() < 0.1, "ate={}", fit.ate);
+    }
+
+    #[test]
+    fn t_learner_recovers_ate_and_heterogeneity() {
+        let ds = data();
+        let ctx = RayContext::inline();
+        let fit = t_learner(&ctx, Arc::new(HostBackend), &ds, 1e-3, 512).unwrap();
+        assert!((fit.ate - 1.0).abs() < 0.12, "ate={}", fit.ate);
+        // CATE correlates with the true CATE = 1 + 0.5 x0
+        let n = ds.n() as f64;
+        let mean_est: f64 = fit.cate.iter().map(|&c| c as f64).sum::<f64>() / n;
+        let mean_true: f64 = ds.true_cate.iter().map(|&c| c as f64).sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut var_e = 0.0;
+        let mut var_t = 0.0;
+        for i in 0..ds.n() {
+            let a = fit.cate[i] as f64 - mean_est;
+            let b = ds.true_cate[i] as f64 - mean_true;
+            cov += a * b;
+            var_e += a * a;
+            var_t += b * b;
+        }
+        let corr = cov / (var_e.sqrt() * var_t.sqrt());
+        assert!(corr > 0.8, "corr={corr}");
+    }
+
+    #[test]
+    fn x_learner_recovers_ate() {
+        let ds = data();
+        let ctx = RayContext::inline();
+        let fit = x_learner(&ctx, Arc::new(HostBackend), &ds, 1e-3, 512).unwrap();
+        assert!((fit.ate - 1.0).abs() < 0.12, "ate={}", fit.ate);
+    }
+}

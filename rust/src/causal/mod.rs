@@ -1,0 +1,18 @@
+//! The NEXUS causal estimators and validation suite.
+//!
+//! [`dml`] is the paper's headline algorithm (EconML `LinearDML`
+//! rebuilt over the raylet substrate — `DML_Ray`); [`metalearners`] and
+//! [`dr`] are the comparison estimators the platform (§4) exposes;
+//! [`refute`] and [`diagnostics`] are the "integrated validation
+//! features such as diagnostic tests, and refutations tests" from §4.
+
+pub mod dml;
+pub mod inference;
+pub mod metalearners;
+pub mod dr;
+pub mod refute;
+pub mod diagnostics;
+pub mod discovery;
+
+pub use dml::{DmlFit, fit as dml_fit};
+pub use inference::Estimate;

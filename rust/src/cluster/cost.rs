@@ -1,0 +1,80 @@
+//! EC2-style cost accounting.
+//!
+//! The paper runs on "EC2 high-memory" nodes; per-node-hour prices here
+//! are the public on-demand us-east-1 list prices (mid-2023) for the
+//! family the paper plausibly used.  Absolute dollars are illustrative;
+//! the *ratios* (sequential single node vs 5-node cluster vs autoscaled)
+//! are the reproducible content.
+
+/// One rentable node type.
+#[derive(Clone, Copy, Debug)]
+pub struct InstanceType {
+    pub name: &'static str,
+    pub vcpus: usize,
+    pub mem_gb: usize,
+    pub dollars_per_hour: f64,
+}
+
+/// A small on-demand catalog (us-east-1, mid-2023 list).
+pub const CATALOG: &[InstanceType] = &[
+    InstanceType { name: "r5.xlarge", vcpus: 4, mem_gb: 32, dollars_per_hour: 0.252 },
+    InstanceType { name: "r5.2xlarge", vcpus: 8, mem_gb: 64, dollars_per_hour: 0.504 },
+    InstanceType { name: "r5.4xlarge", vcpus: 16, mem_gb: 128, dollars_per_hour: 1.008 },
+    InstanceType { name: "r5.8xlarge", vcpus: 32, mem_gb: 256, dollars_per_hour: 2.016 },
+];
+
+pub fn instance(name: &str) -> Option<&'static InstanceType> {
+    CATALOG.iter().find(|i| i.name == name)
+}
+
+/// Cost summary of one run.
+#[derive(Clone, Debug, Default)]
+pub struct CostReport {
+    pub node_hours: f64,
+    pub dollars: f64,
+    /// Mean fraction of slot-seconds actually busy.
+    pub utilization: f64,
+}
+
+/// Fixed-size cluster held for the whole schedule.
+pub fn fixed_cluster_cost(
+    makespan_secs: f64,
+    nodes: usize,
+    dollars_per_node_hour: f64,
+    busy_secs: f64,
+    slots_per_node: usize,
+) -> CostReport {
+    let node_hours = nodes as f64 * makespan_secs / 3600.0;
+    let capacity = makespan_secs * (nodes * slots_per_node) as f64;
+    CostReport {
+        node_hours,
+        dollars: node_hours * dollars_per_node_hour,
+        utilization: if capacity > 0.0 { (busy_secs / capacity).min(1.0) } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_lookup() {
+        assert_eq!(instance("r5.4xlarge").unwrap().vcpus, 16);
+        assert!(instance("nope").is_none());
+    }
+
+    #[test]
+    fn fixed_cost_math() {
+        // 5 nodes for 30 min at $1.008 => 2.5 node-hours => $2.52
+        let r = fixed_cluster_cost(1800.0, 5, 1.008, 1800.0 * 20.0, 8);
+        assert!((r.node_hours - 2.5).abs() < 1e-9);
+        assert!((r.dollars - 2.52).abs() < 1e-9);
+        assert!((r.utilization - 0.5).abs() < 1e-9); // 20 busy of 40 slots
+    }
+
+    #[test]
+    fn utilization_clamped() {
+        let r = fixed_cluster_cost(10.0, 1, 1.0, 1e9, 1);
+        assert!(r.utilization <= 1.0);
+    }
+}

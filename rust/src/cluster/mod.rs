@@ -1,0 +1,10 @@
+//! Cluster economics: EC2-style instance catalog, cost accounting for
+//! fixed clusters, and a target-utilization autoscaler — the "cost
+//! optimizations" objective from the paper's introduction (and the
+//! Darwin/Ray-Serve autoscaling claim in §4).
+
+pub mod cost;
+pub mod autoscaler;
+
+pub use autoscaler::{AutoscalePolicy, AutoscaleReport};
+pub use cost::{CostReport, InstanceType, CATALOG};

@@ -1,0 +1,129 @@
+//! K-fold assignment for cross-fitting.
+//!
+//! The fold plan is computed once by the coordinator and shipped to tasks
+//! by value; both the sequential baseline and the distributed path consume
+//! the same plan, which is what makes their estimates bit-comparable.
+
+use crate::error::{NexusError, Result};
+use crate::util::rng::Pcg32;
+
+/// Assignment of each row to one of K folds.
+#[derive(Clone, Debug)]
+pub struct FoldPlan {
+    pub k: usize,
+    /// fold id per row
+    pub assignment: Vec<u32>,
+}
+
+impl FoldPlan {
+    /// Random (shuffled) K-fold split.
+    pub fn random(n: usize, k: usize, seed: u64) -> Result<FoldPlan> {
+        if k < 2 || k > n {
+            return Err(NexusError::Data(format!("need 2 <= k <= n, got k={k} n={n}")));
+        }
+        let mut idx: Vec<usize> = (0..n).collect();
+        let mut rng = Pcg32::with_stream(seed, 0xF01D);
+        rng.shuffle(&mut idx);
+        let mut assignment = vec![0u32; n];
+        for (pos, &row) in idx.iter().enumerate() {
+            assignment[row] = (pos % k) as u32;
+        }
+        Ok(FoldPlan { k, assignment })
+    }
+
+    /// Stratified split: preserves the treated share within each fold
+    /// (important when treatment is rare).
+    pub fn stratified(t: &[f32], k: usize, seed: u64) -> Result<FoldPlan> {
+        let n = t.len();
+        if k < 2 || k > n {
+            return Err(NexusError::Data(format!("need 2 <= k <= n, got k={k} n={n}")));
+        }
+        let mut rng = Pcg32::with_stream(seed, 0xF01D + 1);
+        let mut treated: Vec<usize> = (0..n).filter(|&i| t[i] > 0.5).collect();
+        let mut control: Vec<usize> = (0..n).filter(|&i| t[i] <= 0.5).collect();
+        rng.shuffle(&mut treated);
+        rng.shuffle(&mut control);
+        let mut assignment = vec![0u32; n];
+        for (pos, &row) in treated.iter().chain(control.iter()).enumerate() {
+            assignment[row] = (pos % k) as u32;
+        }
+        Ok(FoldPlan { k, assignment })
+    }
+
+    pub fn n(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Rows in fold `f` (the evaluation set of fold f).
+    pub fn fold_rows(&self, f: u32) -> Vec<usize> {
+        (0..self.n()).filter(|&i| self.assignment[i] == f).collect()
+    }
+
+    /// Rows NOT in fold `f` (the training set of fold f).
+    pub fn train_rows(&self, f: u32) -> Vec<usize> {
+        (0..self.n()).filter(|&i| self.assignment[i] != f).collect()
+    }
+
+    /// Size of each fold.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut out = vec![0usize; self.k];
+        for &f in &self.assignment {
+            out[f as usize] += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_exact() {
+        let plan = FoldPlan::random(103, 5, 7).unwrap();
+        let sizes = plan.sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+        // balanced within 1
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        // train + eval = everything, disjoint
+        for f in 0..5 {
+            let eval = plan.fold_rows(f);
+            let train = plan.train_rows(f);
+            assert_eq!(eval.len() + train.len(), 103);
+            let mut all: Vec<usize> = eval.iter().chain(train.iter()).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..103).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = FoldPlan::random(50, 5, 1).unwrap();
+        let b = FoldPlan::random(50, 5, 1).unwrap();
+        let c = FoldPlan::random(50, 5, 2).unwrap();
+        assert_eq!(a.assignment, b.assignment);
+        assert_ne!(a.assignment, c.assignment);
+    }
+
+    #[test]
+    fn stratified_preserves_treated_share() {
+        let mut t = vec![0.0f32; 1000];
+        for i in 0..100 {
+            t[i * 10] = 1.0; // 10% treated
+        }
+        let plan = FoldPlan::stratified(&t, 5, 3).unwrap();
+        for f in 0..5 {
+            let rows = plan.fold_rows(f);
+            let share =
+                rows.iter().filter(|&&i| t[i] > 0.5).count() as f64 / rows.len() as f64;
+            assert!((share - 0.1).abs() < 0.01, "fold {f}: share={share}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        assert!(FoldPlan::random(10, 1, 0).is_err());
+        assert!(FoldPlan::random(10, 11, 0).is_err());
+        assert!(FoldPlan::stratified(&[1.0; 4], 5, 0).is_err());
+    }
+}

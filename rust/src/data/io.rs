@@ -1,0 +1,183 @@
+//! Dataset persistence: a simple length-prefixed binary format (NXD1)
+//! for cached synthetic datasets, plus CSV export for inspection.
+//!
+//! The NEXUS platform (§4) caches generated/ingested datasets between
+//! runs; benches use this to avoid regenerating 1M-row tables.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::matrix::Matrix;
+use crate::data::synth::{CausalDataset, SynthConfig};
+use crate::error::{NexusError, Result};
+
+const MAGIC: &[u8; 4] = b"NXD1";
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = read_u64(r)? as usize;
+    if n > 1 << 33 {
+        return Err(NexusError::Data(format!("implausible vector length {n}")));
+    }
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Save a dataset (including oracle columns) to the NXD1 binary format.
+pub fn save(ds: &CausalDataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MAGIC)?;
+    write_u64(&mut w, ds.n() as u64)?;
+    write_u64(&mut w, ds.d() as u64)?;
+    write_u64(&mut w, ds.config.seed)?;
+    write_f32s(&mut w, ds.x.data())?;
+    write_f32s(&mut w, &ds.t)?;
+    write_f32s(&mut w, &ds.y)?;
+    write_f32s(&mut w, &ds.true_cate)?;
+    write_f32s(&mut w, &ds.true_propensity)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load an NXD1 dataset.
+pub fn load(path: &Path) -> Result<CausalDataset> {
+    let file = std::fs::File::open(path)?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(NexusError::Data(format!(
+            "{}: not an NXD1 file",
+            path.display()
+        )));
+    }
+    let n = read_u64(&mut r)? as usize;
+    let d = read_u64(&mut r)? as usize;
+    let seed = read_u64(&mut r)?;
+    let x = Matrix::from_vec(n, d, read_f32s(&mut r)?)?;
+    let t = read_f32s(&mut r)?;
+    let y = read_f32s(&mut r)?;
+    let true_cate = read_f32s(&mut r)?;
+    let true_propensity = read_f32s(&mut r)?;
+    for (name, v) in [("t", &t), ("y", &y), ("cate", &true_cate), ("prop", &true_propensity)] {
+        if v.len() != n {
+            return Err(NexusError::Data(format!("{name} column has wrong length")));
+        }
+    }
+    Ok(CausalDataset {
+        x,
+        t,
+        y,
+        true_cate,
+        true_propensity,
+        config: SynthConfig { n, d, seed, ..Default::default() },
+    })
+}
+
+/// Load from cache, or generate + cache.
+pub fn load_or_generate(cfg: &SynthConfig, cache_dir: &Path) -> Result<CausalDataset> {
+    std::fs::create_dir_all(cache_dir)?;
+    let path = cache_dir.join(format!("synth_n{}_d{}_s{}.nxd", cfg.n, cfg.d, cfg.seed));
+    if path.exists() {
+        if let Ok(ds) = load(&path) {
+            return Ok(ds);
+        }
+    }
+    let ds = crate::data::synth::generate(cfg);
+    save(&ds, &path)?;
+    Ok(ds)
+}
+
+/// Export the observable columns (x, t, y) as CSV.
+pub fn export_csv(ds: &CausalDataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    let header: Vec<String> = (0..ds.d())
+        .map(|j| format!("x{j}"))
+        .chain(["t".to_string(), "y".to_string()])
+        .collect();
+    writeln!(w, "{}", header.join(","))?;
+    for i in 0..ds.n() {
+        let mut cells: Vec<String> = ds.x.row(i).iter().map(|v| format!("{v}")).collect();
+        cells.push(format!("{}", ds.t[i]));
+        cells.push(format!("{}", ds.y[i]));
+        writeln!(w, "{}", cells.join(","))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::generate;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("nexus-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let ds = generate(&SynthConfig { n: 500, d: 7, ..Default::default() });
+        let path = tmp("rt.nxd");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(ds.x, back.x);
+        assert_eq!(ds.t, back.t);
+        assert_eq!(ds.y, back.y);
+        assert_eq!(ds.true_cate, back.true_cate);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage.nxd");
+        std::fs::write(&path, b"not a dataset").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn cache_hits_second_time() {
+        let dir = tmp("cache");
+        let cfg = SynthConfig { n: 200, d: 3, seed: 77, ..Default::default() };
+        let a = load_or_generate(&cfg, &dir).unwrap();
+        let b = load_or_generate(&cfg, &dir).unwrap();
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn csv_export_shape() {
+        let ds = generate(&SynthConfig { n: 10, d: 2, ..Default::default() });
+        let path = tmp("out.csv");
+        export_csv(&ds, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 11);
+        assert_eq!(lines[0], "x0,x1,t,y");
+        assert_eq!(lines[1].split(',').count(), 4);
+    }
+}

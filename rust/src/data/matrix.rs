@@ -1,0 +1,203 @@
+//! Dense row-major f32 matrix — the on-wire layout of every tensor NEXUS
+//! moves between the object store and the PJRT runtime.
+
+use crate::error::{NexusError, Result};
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Matrix> {
+        if data.len() != rows * cols {
+            return Err(NexusError::Data(format!(
+                "matrix {rows}x{cols} needs {} elements, got {}",
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Build from a row-generating closure.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        Matrix::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of the rows selected by `idx` (gather).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Contiguous row slice [start, end) as a copy.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        Matrix {
+            rows: end - start,
+            cols: self.cols,
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+        }
+    }
+
+    /// Append `extra` zero-filled columns (covariate padding for the
+    /// static-shape artifacts).
+    pub fn pad_cols(&self, target: usize) -> Matrix {
+        assert!(target >= self.cols);
+        let mut out = Matrix::zeros(self.rows, target);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Append zero rows up to `target` rows (block padding).
+    pub fn pad_rows(&self, target: usize) -> Matrix {
+        assert!(target >= self.rows);
+        let mut out = Matrix::zeros(target, self.cols);
+        out.data[..self.rows * self.cols].copy_from_slice(&self.data);
+        out
+    }
+
+    /// Insert a constant-1 column at position 0 (intercept).
+    pub fn with_intercept(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols + 1);
+        for i in 0..self.rows {
+            out.set(i, 0, 1.0);
+            out.row_mut(i)[1..].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Matrix::from_vec(2, 3, vec![0.0; 6]).is_ok());
+        assert!(Matrix::from_vec(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn get_set_row_major() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.data()[5], 5.0);
+    }
+
+    #[test]
+    fn gather_and_slice() {
+        let m = Matrix::from_fn(4, 2, |i, j| (i * 2 + j) as f32);
+        let g = m.gather_rows(&[3, 0]);
+        assert_eq!(g.row(0), &[6.0, 7.0]);
+        assert_eq!(g.row(1), &[0.0, 1.0]);
+        let s = m.slice_rows(1, 3);
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.row(0), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn padding() {
+        let m = Matrix::from_fn(2, 2, |i, j| (i + j) as f32 + 1.0);
+        let pc = m.pad_cols(4);
+        assert_eq!(pc.row(0), &[1.0, 2.0, 0.0, 0.0]);
+        let pr = m.pad_rows(3);
+        assert_eq!(pr.row(2), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn intercept_column() {
+        let m = Matrix::from_fn(2, 2, |_, j| j as f32 + 5.0);
+        let w = m.with_intercept();
+        assert_eq!(w.cols(), 3);
+        assert_eq!(w.row(0), &[1.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_fn(3, 2, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(1, 2), m.get(2, 1));
+    }
+}

@@ -1,0 +1,12 @@
+//! Datasets: dense matrices, synthetic generators, folds, and sharding.
+
+pub mod matrix;
+pub mod synth;
+pub mod folds;
+pub mod partition;
+pub mod io;
+
+pub use matrix::Matrix;
+pub use synth::{CausalDataset, SynthConfig};
+pub use folds::FoldPlan;
+pub use partition::{BlockPlan, RowBlock};

@@ -1,0 +1,156 @@
+//! Row-block sharding: how a fold's training rows are split into the
+//! fixed-size blocks the static-shape AOT artifacts accept.
+//!
+//! A [`RowBlock`] is the unit of distributed work — one `gram`/`irls`
+//! task per block.  The final short block is zero-padded; the mask rides
+//! with the block so padded rows are statistically inert (see the padding
+//! contract tests in python/tests/test_model.py and rust linalg tests).
+
+use crate::data::matrix::Matrix;
+
+/// One padded row block plus its validity mask.
+#[derive(Clone, Debug)]
+pub struct RowBlock {
+    /// b x d padded covariates (b = block size from the artifact manifest).
+    pub x: Matrix,
+    /// length-b outcome slice (padded with zeros).
+    pub y: Vec<f32>,
+    /// length-b treatment slice (padded with zeros).
+    pub t: Vec<f32>,
+    /// 1.0 for real rows, 0.0 for padding.
+    pub mask: Vec<f32>,
+    /// number of real rows in this block.
+    pub valid: usize,
+    /// global indices of the real rows (for scatter-back of predictions).
+    pub rows: Vec<usize>,
+}
+
+/// Plan for splitting `rows` into blocks of exactly `block` rows.
+#[derive(Clone, Debug)]
+pub struct BlockPlan {
+    pub block: usize,
+    pub d: usize,
+    pub n_blocks: usize,
+}
+
+impl BlockPlan {
+    pub fn new(n_rows: usize, block: usize, d: usize) -> BlockPlan {
+        BlockPlan { block, d, n_blocks: n_rows.div_ceil(block) }
+    }
+}
+
+/// Materialize padded blocks for the given row subset.
+///
+/// `x` must already be padded to the artifact's covariate width `d`
+/// (including the intercept column).
+pub fn make_blocks(
+    x: &Matrix,
+    y: &[f32],
+    t: &[f32],
+    rows: &[usize],
+    block: usize,
+) -> Vec<RowBlock> {
+    let d = x.cols();
+    let mut out = Vec::with_capacity(rows.len().div_ceil(block));
+    for chunk in rows.chunks(block) {
+        let mut bx = Matrix::zeros(block, d);
+        let mut by = vec![0.0f32; block];
+        let mut bt = vec![0.0f32; block];
+        let mut mask = vec![0.0f32; block];
+        for (r, &i) in chunk.iter().enumerate() {
+            bx.row_mut(r).copy_from_slice(x.row(i));
+            by[r] = y[i];
+            bt[r] = t[i];
+            mask[r] = 1.0;
+        }
+        out.push(RowBlock {
+            x: bx,
+            y: by,
+            t: bt,
+            mask,
+            valid: chunk.len(),
+            rows: chunk.to_vec(),
+        });
+    }
+    out
+}
+
+/// Pick the smallest shipped block size whose block count stays reasonable,
+/// preferring larger blocks for larger inputs (fewer tasks, better FLOP
+/// amortization).  `shipped` must be sorted ascending.
+pub fn pick_block_size(n_rows: usize, shipped: &[usize]) -> usize {
+    assert!(!shipped.is_empty());
+    for &b in shipped {
+        // aim for at least ~4 blocks per fold so distribution has grain
+        if n_rows <= b * 8 {
+            return b;
+        }
+    }
+    *shipped.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, d: usize) -> (Matrix, Vec<f32>, Vec<f32>) {
+        let x = Matrix::from_fn(n, d, |i, j| (i * d + j) as f32);
+        let y: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let t: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        (x, y, t)
+    }
+
+    #[test]
+    fn blocks_cover_rows_exactly_once() {
+        let (x, y, t) = toy(100, 3);
+        let rows: Vec<usize> = (0..100).filter(|i| i % 3 != 0).collect(); // 66 rows
+        let blocks = make_blocks(&x, &y, &t, &rows, 32);
+        assert_eq!(blocks.len(), 3);
+        let total: usize = blocks.iter().map(|b| b.valid).sum();
+        assert_eq!(total, rows.len());
+        let mut seen: Vec<usize> = blocks.iter().flat_map(|b| b.rows.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, rows);
+    }
+
+    #[test]
+    fn padding_rows_are_zero_with_zero_mask() {
+        let (x, y, t) = toy(10, 2);
+        let rows: Vec<usize> = (0..10).collect();
+        let blocks = make_blocks(&x, &y, &t, &rows, 8);
+        let last = &blocks[1];
+        assert_eq!(last.valid, 2);
+        for r in 2..8 {
+            assert_eq!(last.mask[r], 0.0);
+            assert_eq!(last.y[r], 0.0);
+            assert!(last.x.row(r).iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn block_content_matches_source() {
+        let (x, y, t) = toy(20, 2);
+        let rows = vec![5usize, 7, 19];
+        let blocks = make_blocks(&x, &y, &t, &rows, 4);
+        let b = &blocks[0];
+        assert_eq!(b.x.row(0), x.row(5));
+        assert_eq!(b.y[1], y[7]);
+        assert_eq!(b.t[2], t[19]);
+    }
+
+    #[test]
+    fn pick_block_prefers_grain() {
+        let shipped = [256, 4096];
+        assert_eq!(pick_block_size(1000, &shipped), 256);
+        assert_eq!(pick_block_size(3000, &shipped), 4096); // > 256*8
+        assert_eq!(pick_block_size(1_000_000, &shipped), 4096);
+    }
+
+    #[test]
+    fn plan_counts() {
+        let p = BlockPlan::new(1000, 256, 64);
+        assert_eq!(p.n_blocks, 4);
+        assert_eq!(BlockPlan::new(1024, 256, 64).n_blocks, 4);
+        assert_eq!(BlockPlan::new(1025, 256, 64).n_blocks, 5);
+    }
+}

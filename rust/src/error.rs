@@ -1,0 +1,54 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every NEXUS subsystem.
+#[derive(Error, Debug)]
+pub enum NexusError {
+    /// PJRT / XLA runtime failures (compile, execute, literal conversion).
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Artifact manifest problems (missing entry, shape mismatch, io).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// JSON parse / type errors from `util::json`.
+    #[error("json: {0}")]
+    Json(String),
+
+    /// Configuration validation failures.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Scheduler / object-store failures in the raylet substrate.
+    #[error("raylet: {0}")]
+    Raylet(String),
+
+    /// Data / shape errors (dimension mismatch, empty dataset, bad fold).
+    #[error("data: {0}")]
+    Data(String),
+
+    /// Numerical failures (singular system, non-finite values).
+    #[error("numeric: {0}")]
+    Numeric(String),
+
+    /// Tuning / trial errors.
+    #[error("tune: {0}")]
+    Tune(String),
+
+    /// Serving errors.
+    #[error("serve: {0}")]
+    Serve(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for NexusError {
+    fn from(e: xla::Error) -> Self {
+        NexusError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, NexusError>;

@@ -1,0 +1,489 @@
+//! Pure-rust numeric kernels — the rust-side oracle.
+//!
+//! Every AOT artifact the runtime executes has an equivalent here;
+//! integration tests cross-check PJRT outputs against these, and the
+//! host path doubles as a fallback executor (`Backend::Host`) so the
+//! coordinator logic is testable without compiled artifacts.
+//!
+//! f64 accumulation throughout: these are the *reference* numbers, the
+//! f32 artifacts are validated against them at block scale where f32
+//! roundoff is tolerable.
+
+use crate::data::matrix::Matrix;
+use crate::data::synth::sigmoid;
+use crate::error::{NexusError, Result};
+
+/// G = X^T X with f64 accumulation, returned as f32.
+pub fn gram(x: &Matrix) -> Matrix {
+    let (n, d) = (x.rows(), x.cols());
+    let mut acc = vec![0.0f64; d * d];
+    for i in 0..n {
+        let row = x.row(i);
+        for a in 0..d {
+            let ra = row[a] as f64;
+            if ra == 0.0 {
+                continue;
+            }
+            let dst = &mut acc[a * d..(a + 1) * d];
+            for b in 0..d {
+                dst[b] += ra * row[b] as f64;
+            }
+        }
+    }
+    Matrix::from_vec(d, d, acc.into_iter().map(|v| v as f32).collect()).unwrap()
+}
+
+/// b = X^T v.
+pub fn xt_v(x: &Matrix, v: &[f32]) -> Vec<f32> {
+    let (n, d) = (x.rows(), x.cols());
+    assert_eq!(n, v.len());
+    let mut acc = vec![0.0f64; d];
+    for i in 0..n {
+        let vi = v[i] as f64;
+        if vi == 0.0 {
+            continue;
+        }
+        for (a, &xa) in x.row(i).iter().enumerate() {
+            acc[a] += vi * xa as f64;
+        }
+    }
+    acc.into_iter().map(|v| v as f32).collect()
+}
+
+/// yhat = X beta.
+pub fn mat_vec(x: &Matrix, beta: &[f32]) -> Vec<f32> {
+    assert_eq!(x.cols(), beta.len());
+    (0..x.rows())
+        .map(|i| {
+            x.row(i)
+                .iter()
+                .zip(beta)
+                .map(|(&a, &b)| a as f64 * b as f64)
+                .sum::<f64>() as f32
+        })
+        .collect()
+}
+
+/// Cholesky factorization A = L L^T (lower).  A must be symmetric
+/// positive definite; returns Numeric error otherwise.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(NexusError::Numeric("cholesky needs square matrix".into()));
+    }
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j) as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    return Err(NexusError::Numeric(format!(
+                        "cholesky: non-PD pivot {sum} at {i}"
+                    )));
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Matrix::from_vec(n, n, l.into_iter().map(|v| v as f32).collect())
+}
+
+/// Solve (A) x = b via Cholesky (A symmetric PD).
+pub fn solve_spd(a: &Matrix, b: &[f32]) -> Result<Vec<f32>> {
+    let n = a.rows();
+    assert_eq!(b.len(), n);
+    let l = cholesky(a)?;
+    // forward solve L z = b
+    let mut z = vec![0.0f64; n];
+    for i in 0..n {
+        let mut sum = b[i] as f64;
+        for k in 0..i {
+            sum -= l.get(i, k) as f64 * z[k];
+        }
+        z[i] = sum / l.get(i, i) as f64;
+    }
+    // back solve L^T x = z
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = z[i];
+        for k in i + 1..n {
+            sum -= l.get(k, i) as f64 * x[k];
+        }
+        x[i] = sum / l.get(i, i) as f64;
+    }
+    Ok(x.into_iter().map(|v| v as f32).collect())
+}
+
+/// Ridge solve: (G + diag(lam)) beta = b.
+pub fn ridge_solve(g: &Matrix, b: &[f32], lam_diag: &[f32]) -> Result<Vec<f32>> {
+    let d = g.rows();
+    assert_eq!(lam_diag.len(), d);
+    let mut a = g.clone();
+    for i in 0..d {
+        a.set(i, i, a.get(i, i) + lam_diag[i]);
+    }
+    solve_spd(&a, b)
+}
+
+/// General square solve via Gaussian elimination with partial pivoting
+/// (for the sandwich covariance, which is symmetric but may be indefinite
+/// after f32 roundoff).
+pub fn solve_general(a_in: &Matrix, b_in: &[f32]) -> Result<Vec<f32>> {
+    let n = a_in.rows();
+    assert_eq!(a_in.cols(), n);
+    assert_eq!(b_in.len(), n);
+    let mut a: Vec<f64> = a_in.data().iter().map(|&v| v as f64).collect();
+    let mut b: Vec<f64> = b_in.iter().map(|&v| v as f64).collect();
+    for col in 0..n {
+        // pivot
+        let (mut piv, mut best) = (col, a[col * n + col].abs());
+        for r in col + 1..n {
+            let v = a[r * n + col].abs();
+            if v > best {
+                piv = r;
+                best = v;
+            }
+        }
+        if best < 1e-30 {
+            return Err(NexusError::Numeric(format!("singular at column {col}")));
+        }
+        if piv != col {
+            for j in 0..n {
+                a.swap(col * n + j, piv * n + j);
+            }
+            b.swap(col, piv);
+        }
+        let p = a[col * n + col];
+        for r in col + 1..n {
+            let f = a[r * n + col] / p;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..n {
+                a[r * n + j] -= f * a[col * n + j];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut sum = b[i];
+        for j in i + 1..n {
+            sum -= a[i * n + j] * x[j];
+        }
+        x[i] = sum / a[i * n + i];
+    }
+    Ok(x.into_iter().map(|v| v as f32).collect())
+}
+
+/// Invert a symmetric PD matrix via Cholesky (for covariance sandwiches).
+pub fn inv_spd(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    let mut out = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut e = vec![0.0f32; n];
+        e[j] = 1.0;
+        let col = solve_spd(a, &e)?;
+        for i in 0..n {
+            out.set(i, j, col[i]);
+        }
+    }
+    Ok(out)
+}
+
+/// C = A B (small matrices only; used in the covariance sandwich).
+pub fn mat_mul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for l in 0..k {
+            let av = a.get(i, l) as f64;
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                let cur = out.get(i, j) as f64;
+                out.set(i, j, (cur + av * b.get(l, j) as f64) as f32);
+            }
+        }
+    }
+    out
+}
+
+/// Host equivalents of the L2 graphs (same contracts as
+/// python/compile/kernels/ref.py).
+pub mod graphs {
+    use super::*;
+
+    /// (X'X, X'y, n) over a masked block.
+    pub fn gram_block(x: &Matrix, y: &[f32], mask: &[f32]) -> (Matrix, Vec<f32>, f32) {
+        let mut xm = x.clone();
+        for i in 0..x.rows() {
+            let m = mask[i];
+            for v in xm.row_mut(i) {
+                *v *= m;
+            }
+        }
+        let ym: Vec<f32> = y.iter().zip(mask).map(|(a, b)| a * b).collect();
+        let g = gram(&xm);
+        let b = xt_v(&xm, &ym);
+        (g, b, mask.iter().sum())
+    }
+
+    /// (H, c, nll) IRLS partials — see ref.logistic_irls_block.
+    pub fn irls_block(
+        x: &Matrix,
+        t: &[f32],
+        mask: &[f32],
+        beta: &[f32],
+    ) -> (Matrix, Vec<f32>, f32) {
+        let n = x.rows();
+        let eta = mat_vec(x, beta);
+        let mut xs = x.clone();
+        let mut wz = vec![0.0f32; n];
+        let mut nll = 0.0f64;
+        for i in 0..n {
+            let p = sigmoid(eta[i]);
+            let w = (p * (1.0 - p)).max(1e-6);
+            let wm = w * mask[i];
+            let z = eta[i] + (t[i] - p) / w;
+            let sw = wm.sqrt();
+            for v in xs.row_mut(i) {
+                *v *= sw;
+            }
+            wz[i] = wm * z;
+            let eps = 1e-7f64;
+            let pd = p as f64;
+            nll -= mask[i] as f64
+                * (t[i] as f64 * (pd + eps).ln() + (1.0 - t[i] as f64) * (1.0 - pd + eps).ln());
+        }
+        let h = gram(&xs);
+        let c = xt_v(x, &wz);
+        (h, c, nll as f32)
+    }
+
+    /// Fused residualization — see ref.residualize.
+    pub fn residual_block(
+        x: &Matrix,
+        y: &[f32],
+        t: &[f32],
+        beta_y: &[f32],
+        beta_t: &[f32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let fy = mat_vec(x, beta_y);
+        let ft = mat_vec(x, beta_t);
+        let yr = y.iter().zip(&fy).map(|(a, b)| a - b).collect();
+        let tr = t.iter().zip(&ft).map(|(a, b)| a - sigmoid(*b)).collect();
+        (yr, tr)
+    }
+
+    /// Final-stage normal-equation partials (M, v).
+    pub fn final_moments(
+        y_res: &[f32],
+        t_res: &[f32],
+        phi: &Matrix,
+        mask: &[f32],
+    ) -> (Matrix, Vec<f32>) {
+        let (n, p) = (phi.rows(), phi.cols());
+        let mut tphi = Matrix::zeros(n, p);
+        for i in 0..n {
+            let s = t_res[i] * mask[i];
+            for j in 0..p {
+                tphi.set(i, j, phi.get(i, j) * s);
+            }
+        }
+        let m = gram(&tphi);
+        let v = xt_v(&tphi, y_res);
+        (m, v)
+    }
+
+    /// HC meat partial S.
+    pub fn final_score(
+        y_res: &[f32],
+        t_res: &[f32],
+        phi: &Matrix,
+        theta: &[f32],
+        mask: &[f32],
+    ) -> Matrix {
+        let (n, p) = (phi.rows(), phi.cols());
+        let mut psi = Matrix::zeros(n, p);
+        for i in 0..n {
+            let fit: f32 = phi.row(i).iter().zip(theta).map(|(a, b)| a * b).sum();
+            let e = (y_res[i] - t_res[i] * fit) * t_res[i] * mask[i];
+            for j in 0..p {
+                psi.set(i, j, phi.get(i, j) * e);
+            }
+        }
+        gram(&psi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    fn randm(rng: &mut Pcg32, n: usize, d: usize) -> Matrix {
+        Matrix::from_fn(n, d, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn gram_matches_naive() {
+        let mut rng = Pcg32::new(1);
+        let x = randm(&mut rng, 40, 7);
+        let g = gram(&x);
+        for a in 0..7 {
+            for b in 0..7 {
+                let naive: f64 = (0..40)
+                    .map(|i| x.get(i, a) as f64 * x.get(i, b) as f64)
+                    .sum();
+                assert!((g.get(a, b) as f64 - naive).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg32::new(2);
+        let x = randm(&mut rng, 50, 6);
+        let mut g = gram(&x);
+        for i in 0..6 {
+            g.set(i, i, g.get(i, i) + 1.0);
+        }
+        let l = cholesky(&g).unwrap();
+        let rec = mat_mul(&l, &l.transpose());
+        assert!(g.max_abs_diff(&rec) < 1e-2, "diff={}", g.max_abs_diff(&rec));
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]).unwrap(); // eig -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solve_spd_solves() {
+        let mut rng = Pcg32::new(3);
+        let x = randm(&mut rng, 60, 5);
+        let mut g = gram(&x);
+        for i in 0..5 {
+            g.set(i, i, g.get(i, i) + 0.5);
+        }
+        let b: Vec<f32> = (0..5).map(|i| i as f32 - 2.0).collect();
+        let sol = solve_spd(&g, &b).unwrap();
+        let back = mat_vec(&g, &sol);
+        for (bb, bk) in b.iter().zip(&back) {
+            assert!((bb - bk).abs() < 1e-2, "{b:?} vs {back:?}");
+        }
+    }
+
+    #[test]
+    fn general_solve_matches_spd_solve() {
+        let mut rng = Pcg32::new(4);
+        let x = randm(&mut rng, 80, 6);
+        let mut g = gram(&x);
+        for i in 0..6 {
+            g.set(i, i, g.get(i, i) + 1.0);
+        }
+        let b: Vec<f32> = (0..6).map(|i| (i as f32).sin()).collect();
+        let s1 = solve_spd(&g, &b).unwrap();
+        let s2 = solve_general(&g, &b).unwrap();
+        for (a, c) in s1.iter().zip(&s2) {
+            assert!((a - c).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn inv_spd_gives_identity() {
+        let mut rng = Pcg32::new(5);
+        let x = randm(&mut rng, 40, 4);
+        let mut g = gram(&x);
+        for i in 0..4 {
+            g.set(i, i, g.get(i, i) + 1.0);
+        }
+        let inv = inv_spd(&g).unwrap();
+        let prod = mat_mul(&g, &inv);
+        assert!(prod.max_abs_diff(&Matrix::identity(4)) < 1e-3);
+    }
+
+    #[test]
+    fn ridge_shrinks_towards_zero() {
+        let mut rng = Pcg32::new(6);
+        let x = randm(&mut rng, 100, 3);
+        let beta_true = [1.0f32, -2.0, 0.5];
+        let y = mat_vec(&x, &beta_true);
+        let g = gram(&x);
+        let b = xt_v(&x, &y);
+        let small = ridge_solve(&g, &b, &[1e-4; 3]).unwrap();
+        let big = ridge_solve(&g, &b, &[1e5; 3]).unwrap();
+        for i in 0..3 {
+            assert!((small[i] - beta_true[i]).abs() < 1e-2);
+            assert!(big[i].abs() < 0.1);
+        }
+    }
+
+    #[test]
+    fn prop_gram_psd_and_symmetric() {
+        forall("gram is symmetric PSD", 40, |gen| {
+            let n = gen.len_up_to(60);
+            let d = gen.usize_in(1..8);
+            let data = gen.vec_f32(n * d, -3.0, 3.0);
+            let x = Matrix::from_vec(n, d, data).unwrap();
+            let g = gram(&x);
+            // symmetric
+            assert!(g.max_abs_diff(&g.transpose()) < 1e-4);
+            // x' G x >= 0 for random probe
+            let probe = gen.vec_f32(d, -1.0, 1.0);
+            let gp = mat_vec(&g, &probe);
+            let quad: f64 = probe.iter().zip(&gp).map(|(a, b)| (a * b) as f64).sum();
+            assert!(quad > -1e-2, "quad={quad}");
+        });
+    }
+
+    #[test]
+    fn prop_solve_roundtrip() {
+        forall("ridge_solve solves the system", 30, |gen| {
+            let d = gen.usize_in(1..7);
+            let n = d * 3 + gen.usize_in(1..20);
+            let data = gen.vec_f32(n * d, -2.0, 2.0);
+            let x = Matrix::from_vec(n, d, data).unwrap();
+            let g = gram(&x);
+            let b = gen.vec_f32(d, -1.0, 1.0);
+            let lam = vec![0.5f32; d];
+            let sol = ridge_solve(&g, &b, &lam).unwrap();
+            let mut a = g.clone();
+            for i in 0..d {
+                a.set(i, i, a.get(i, i) + 0.5);
+            }
+            let back = mat_vec(&a, &sol);
+            for (u, v) in b.iter().zip(&back) {
+                assert!((u - v).abs() < 2e-2, "{b:?} vs {back:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn graphs_gram_block_masks_padding() {
+        let mut rng = Pcg32::new(7);
+        let x = randm(&mut rng, 8, 3);
+        let y: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut mask = vec![1.0f32; 8];
+        mask[6] = 0.0;
+        mask[7] = 0.0;
+        let (g, b, n) = graphs::gram_block(&x, &y, &mask);
+        let xs = x.slice_rows(0, 6);
+        let (g2, b2, _) = graphs::gram_block(&xs, &y[..6], &[1.0; 6]);
+        assert!(g.max_abs_diff(&g2) < 1e-4);
+        for (u, v) in b.iter().zip(&b2) {
+            assert!((u - v).abs() < 1e-4);
+        }
+        assert_eq!(n, 6.0);
+    }
+}

@@ -1,0 +1,284 @@
+//! `nexus` — the NEXUS causal-inference platform CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   fit       estimate ATE/CATE with LinearDML on synthetic data
+//!   tune      distributed hyper-parameter search for the nuisances
+//!   serve     batched CATE-serving demo
+//!   simulate  dry-run the paper-scale DML DAG on the simulated cluster
+//!   info      artifact manifest summary
+//!
+//! `nexus <cmd> --help`-style details live in README.md; every option
+//! has a sensible default so `nexus fit` alone reproduces the paper's
+//! §5.1 listing at reduced scale.
+
+use nexus::causal::dml;
+use nexus::config::{ClusterConfig, ExecMode, RunConfig};
+use nexus::data::synth::{generate, SynthConfig};
+use nexus::models::cost::CostModel;
+use nexus::models::crossfit::CrossfitConfig;
+use nexus::models::registry::ModelSpec;
+use nexus::raylet::api::RayContext;
+use nexus::runtime::artifacts::Manifest;
+use nexus::runtime::backend::backend_by_name;
+use nexus::serve::{BatchPolicy, CateModel, Router};
+use nexus::tune::sched::ShaSchedule;
+use nexus::tune::space::{ParamSpec, SearchSpace};
+use nexus::tune::runner::TuneRunner;
+use nexus::util::cli::Args;
+use nexus::util::rng::Pcg32;
+use nexus::Result;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("nexus: error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("fit") => cmd_fit(&args),
+        Some("tune") => cmd_tune(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            println!(
+                "nexus — distributed causal inference (paper reproduction)\n\
+                 usage: nexus <fit|tune|serve|simulate|info> [--key value ...]\n\
+                 examples:\n\
+                 \x20 nexus fit --n 20000 --d 50 --cv 5 --exec ray --workers 4\n\
+                 \x20 nexus tune --trials 16 --strategy sha\n\
+                 \x20 nexus simulate --n 1000000 --d 500 --nodes 5\n\
+                 \x20 nexus serve --requests 1000"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn run_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => RunConfig::from_json_file(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    cfg.n = args.usize_or("n", cfg.n)?;
+    cfg.d = args.usize_or("d", cfg.d)?;
+    cfg.cv = args.usize_or("cv", cfg.cv)?;
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.lam_y = args.f64_or("lam-y", cfg.lam_y as f64)? as f32;
+    cfg.lam_t = args.f64_or("lam-t", cfg.lam_t as f64)? as f32;
+    cfg.het_features = args.usize_or("het", cfg.het_features)?;
+    if let Some(exec) = args.opt("exec") {
+        cfg.exec = ExecMode::parse(exec)?;
+    }
+    if let Some(b) = args.opt("backend") {
+        cfg.backend = b.to_string();
+    }
+    cfg.cluster.nodes = args.usize_or("nodes", cfg.cluster.nodes)?;
+    cfg.cluster.slots_per_node = args.usize_or("slots", cfg.cluster.slots_per_node)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    println!(
+        "fit: n={} d={} cv={} exec={} backend={}",
+        cfg.n, cfg.d, cfg.cv, cfg.exec.name(), cfg.backend
+    );
+    let ds = generate(&SynthConfig {
+        n: cfg.n,
+        d: cfg.d,
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let start = std::time::Instant::now();
+    let fit = dml::fit(&cfg, &ds)?;
+    let wall = start.elapsed().as_secs_f64();
+    println!("theta = {:?}", fit.theta);
+    println!(
+        "ATE = {:.4} ± {:.4}  (95% CI [{:.4}, {:.4}])   truth = {:.4}",
+        fit.ate.value, fit.ate.se, fit.ate.ci_lo, fit.ate.ci_hi, ds.true_ate()
+    );
+    let m = &fit.metrics;
+    println!(
+        "tasks={} retries={} wall={:.2}s makespan={:.2}s busy={:.2}s",
+        m.tasks_run, m.retries, wall, m.makespan, m.busy_secs
+    );
+    if args.flag("json") {
+        let j = nexus::util::json::Json::obj()
+            .set("ate", fit.ate.value)
+            .set("se", fit.ate.se)
+            .set("true_ate", ds.true_ate())
+            .set("tasks", fit.metrics.tasks_run as i64)
+            .set("wall_secs", wall);
+        println!("{}", j.to_string());
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let trials = args.usize_or("trials", 16)?;
+    let strategy = args.opt_or("strategy", "grid");
+    let kx = backend_by_name(&cfg.backend)?;
+
+    let n = cfg.n.min(20_000);
+    let mut rng = Pcg32::new(cfg.seed);
+    // design width = 64: a shipped artifact shape (intercept + up to 32
+    // informative covariates + zero padding)
+    let d_real = cfg.d.min(32);
+    let d = 64usize;
+    let make = |n: usize, rng: &mut Pcg32| {
+        let x = nexus::data::matrix::Matrix::from_fn(n, d, |_, j| {
+            if j == 0 {
+                1.0
+            } else if j <= d_real {
+                rng.normal_f32()
+            } else {
+                0.0
+            }
+        });
+        let y: Vec<f32> = (0..n)
+            .map(|i| 2.0 * x.get(i, 1) - x.get(i, 2) + 0.5 * rng.normal_f32())
+            .collect();
+        (x, y)
+    };
+    let (x_train, y_train) = make(n, &mut rng);
+    let (x_val, y_val) = make(n / 4, &mut rng);
+    let runner = TuneRunner {
+        kx,
+        cost: CostModel::default(),
+        x_train,
+        target_train: y_train,
+        x_val,
+        target_val: y_val,
+        to_spec: |c| ModelSpec::Ridge { lam: c.get("lam") as f32 },
+        block: 256,
+    };
+    let space = SearchSpace::new().with("lam", ParamSpec::LogUniform(1e-6, 1e3));
+    let configs = space.grid(trials);
+    let ctx = match cfg.exec {
+        ExecMode::Sequential => RayContext::inline(),
+        ExecMode::Distributed => RayContext::threads(cfg.workers),
+        ExecMode::Simulated => RayContext::sim(cfg.cluster.clone(), true),
+    };
+    let out = match strategy.as_str() {
+        "sha" => runner.run_sha(&ctx, &configs, &ShaSchedule::geometric(1, 8, 2))?,
+        _ => runner.run_grid(&ctx, &configs)?,
+    };
+    println!(
+        "tune[{strategy}]: best {} loss={:.5} | trials={} tasks={} makespan={:.3}s busy={:.3}s",
+        out.best.config.describe(),
+        out.best.loss,
+        out.trials.len(),
+        out.tasks_run,
+        out.makespan,
+        out.busy_secs
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.usize_or("requests", 1000)?;
+    let cfg = run_config(args)?;
+    // quick fit to get a model
+    let ds = generate(&SynthConfig { n: 5000, d: 8, seed: cfg.seed, ..Default::default() });
+    let kx = backend_by_name(&cfg.backend)?;
+    let (block, d_pad, p_pad) = dml::pick_shapes(&RunConfig { n: 5000, d: 8, ..cfg.clone() })?;
+    let ccfg = CrossfitConfig::from_run(&RunConfig { n: 5000, d: 8, ..cfg.clone() }, block, d_pad);
+    let fit = dml::fit_with(
+        &RayContext::inline(),
+        kx.clone(),
+        &CostModel::default(),
+        &ds,
+        &ccfg,
+        cfg.het_features,
+        p_pad,
+    )?;
+    let serve_block = 256;
+    let model = CateModel::from_dml(&fit, serve_block, d_pad.min(16));
+    let mut router = Router::new(model, kx.as_ref(), BatchPolicy::default());
+    let mut rng = Pcg32::new(7);
+    let start = std::time::Instant::now();
+    for _ in 0..requests {
+        router.enqueue(vec![rng.normal_f32()])?;
+    }
+    router.flush()?;
+    let wall = start.elapsed().as_secs_f64();
+    let s = router.stats();
+    println!(
+        "serve: {} requests in {:.3}s ({:.0} req/s), {} batches (mean size {:.1})",
+        s.requests,
+        wall,
+        s.requests as f64 / wall,
+        s.batches,
+        s.mean_batch_size()
+    );
+    println!(
+        "latency: queue p50={:.3}ms p95={:.3}ms | exec p50={:.3}ms",
+        s.queue_wait.p50() * 1e3,
+        s.queue_wait.p95() * 1e3,
+        s.exec_time.p50() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let d_pad = (cfg.d + 1).next_power_of_two().clamp(16, 512);
+    let block = if cfg.n >= 100_000 { 4096 } else { 256 };
+    let ccfg = CrossfitConfig::from_run(&cfg, block, d_pad);
+    // calibrate against the real backend so virtual times are grounded:
+    // small shipped block, the run's actual covariate width
+    let kx = backend_by_name(&cfg.backend)?;
+    let cost = CostModel::calibrate(kx.as_ref(), 256, d_pad);
+    println!(
+        "simulate: n={} d={} cv={} cluster={}x{} (calibrated {:.2} GFLOP/s, fixed {:.1}us)",
+        cfg.n,
+        cfg.d,
+        cfg.cv,
+        cfg.cluster.nodes,
+        cfg.cluster.slots_per_node,
+        cost.gflops,
+        cost.task_fixed * 1e6
+    );
+    let ctx = RayContext::sim(cfg.cluster.clone(), false);
+    let m = dml::fit_dry(&ctx, &cost, cfg.n, &ccfg, cfg.het_features + 1)?;
+    println!(
+        "virtual makespan = {:.2}s | tasks={} busy={:.2}s overhead={:.2}s transfer={:.2}s",
+        m.makespan, m.tasks_run, m.busy_secs, m.overhead_secs, m.transfer_secs
+    );
+    println!(
+        "bytes moved = {:.2} GB | cluster cost = ${:.4}",
+        m.bytes_transferred as f64 / 1e9,
+        m.cost_dollars
+    );
+    // sequential comparison: same work, 1 node x 1 slot
+    let seq_ctx = RayContext::sim(
+        ClusterConfig { nodes: 1, slots_per_node: 1, ..cfg.cluster.clone() },
+        false,
+    );
+    let sm = dml::fit_dry(&seq_ctx, &cost, cfg.n, &ccfg, cfg.het_features + 1)?;
+    println!(
+        "sequential (1x1) makespan = {:.2}s  => speedup {:.2}x",
+        sm.makespan,
+        sm.makespan / m.makespan
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = Manifest::default_dir();
+    let m = Manifest::load(&dir)?;
+    println!("artifacts: {} entries in {}", m.entries.len(), dir.display());
+    println!("block sizes: {:?}", m.block_b);
+    println!("covariate widths: {:?}", m.dims_d);
+    println!("final-stage widths: {:?}", m.dims_p);
+    let pallas = m.entries.iter().filter(|e| e.impl_ == "pallas").count();
+    println!("impl families: pallas={} jnp={}", pallas, m.entries.len() - pallas);
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Task-cost model for the simulated cluster.
+//!
+//! Virtual task durations are FLOP counts divided by a measured
+//! effective rate, plus a fixed per-task cost (literal packing + PJRT
+//! dispatch).  [`CostModel::calibrate`] measures the actual backend on
+//! this machine so Fig 6's simulated makespans are grounded in real
+//! kernel timings (DESIGN.md §3).
+
+use std::time::Instant;
+
+use crate::data::matrix::Matrix;
+use crate::runtime::backend::KernelExec;
+use crate::util::rng::Pcg32;
+
+/// Effective execution-rate model.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Effective throughput for matmul-shaped work, GFLOP/s.
+    pub gflops: f64,
+    /// Fixed per-task seconds (packing + dispatch), measured.
+    pub task_fixed: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Conservative single-core CPU defaults; calibrate() overrides.
+        CostModel { gflops: 2.0, task_fixed: 2e-3 }
+    }
+}
+
+impl CostModel {
+    /// Measure the backend on a representative gram block and set the
+    /// effective rate.  Cheap (one warm-up + a few timed executions).
+    ///
+    /// Shapes must be valid for the backend (shipped artifact sizes under
+    /// PJRT — e.g. (256, 64) or (4096, 512)); on any execution error the
+    /// conservative defaults are returned rather than a garbage rate.
+    pub fn calibrate(kx: &dyn KernelExec, b: usize, d: usize) -> CostModel {
+        let mut rng = Pcg32::new(0xCA11B);
+        let x = Matrix::from_fn(b, d, |_, _| rng.normal_f32());
+        let y: Vec<f32> = (0..b).map(|_| rng.normal_f32()).collect();
+        let mask = vec![1.0f32; b];
+        // warm-up (compile path); bail to defaults if the shape is invalid
+        if kx.gram_block(&x, &y, &mask).is_err() {
+            return CostModel::default();
+        }
+        // min over reps: robust to background load on a shared box
+        let reps = 5;
+        let mut secs = f64::INFINITY;
+        for _ in 0..reps {
+            let start = Instant::now();
+            let _ = kx.gram_block(&x, &y, &mask);
+            secs = secs.min(start.elapsed().as_secs_f64());
+        }
+        // smallest shipped op to estimate the fixed per-task cost
+        let xs = Matrix::from_fn(256.min(b), 16.min(d), |_, _| 0.1);
+        let ys = vec![0.0f32; xs.rows()];
+        let ms = vec![1.0f32; xs.rows()];
+        let fixed = if kx.gram_block(&xs, &ys, &ms).is_ok() {
+            let mut f = f64::INFINITY;
+            for _ in 0..reps {
+                let start = Instant::now();
+                let _ = kx.gram_block(&xs, &ys, &ms);
+                f = f.min(start.elapsed().as_secs_f64());
+            }
+            f.min(secs)
+        } else {
+            1e-4
+        };
+        let flops = Self::gram_flops(b, d);
+        let gflops = (flops / (secs - fixed).max(1e-9)) / 1e9;
+        CostModel { gflops: gflops.clamp(0.05, 500.0), task_fixed: fixed.max(1e-5) }
+    }
+
+    fn rate(&self) -> f64 {
+        self.gflops * 1e9
+    }
+
+    pub fn gram_flops(b: usize, d: usize) -> f64 {
+        (2.0 * b as f64 * d as f64 * d as f64) + 2.0 * b as f64 * d as f64
+    }
+
+    /// Seconds for one gram block task.
+    pub fn gram(&self, b: usize, d: usize) -> f64 {
+        self.task_fixed + Self::gram_flops(b, d) / self.rate()
+    }
+
+    /// IRLS block: gram + 2 matvecs + elementwise.
+    pub fn irls(&self, b: usize, d: usize) -> f64 {
+        self.task_fixed
+            + (Self::gram_flops(b, d) + 6.0 * b as f64 * d as f64) / self.rate()
+    }
+
+    /// Fused residual block: 2 matvecs.
+    pub fn residual(&self, b: usize, d: usize) -> f64 {
+        self.task_fixed + (4.0 * b as f64 * d as f64) / self.rate()
+    }
+
+    pub fn predict(&self, b: usize, d: usize) -> f64 {
+        self.task_fixed + (2.0 * b as f64 * d as f64) / self.rate()
+    }
+
+    /// Summing `k` partials of d x d (+ vectors).
+    pub fn reduce(&self, k: usize, d: usize) -> f64 {
+        self.task_fixed + (k as f64 * (d as f64 * d as f64 + d as f64)) / self.rate()
+    }
+
+    /// Cholesky solve at width d.
+    pub fn solve(&self, d: usize) -> f64 {
+        self.task_fixed + (d as f64).powi(3) / 3.0 / self.rate()
+    }
+
+    /// Final-stage moments/score block at width p.
+    pub fn final_stage(&self, b: usize, p: usize) -> f64 {
+        self.task_fixed + (2.0 * b as f64 * p as f64 * (p as f64 + 1.0)) / self.rate()
+    }
+
+    /// Bytes of a gram partial (G[d,d] + b[d] + scalar).
+    pub fn gram_bytes(d: usize) -> usize {
+        4 * (d * d + d + 1)
+    }
+
+    pub fn residual_bytes(b: usize) -> usize {
+        4 * 2 * b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::HostBackend;
+
+    #[test]
+    fn costs_scale_with_shape() {
+        let c = CostModel::default();
+        assert!(c.gram(4096, 512) > c.gram(256, 512));
+        assert!(c.gram(256, 512) > c.gram(256, 16));
+        assert!(c.solve(512) > c.solve(16));
+        assert!(c.gram(256, 16) >= c.task_fixed);
+    }
+
+    #[test]
+    fn calibrate_host_backend() {
+        let c = CostModel::calibrate(&HostBackend, 256, 64);
+        assert!(c.gflops > 0.01 && c.gflops < 1000.0, "gflops={}", c.gflops);
+        assert!(c.task_fixed > 0.0 && c.task_fixed < 1.0);
+        // predicted time for the calibration shape is in the right ballpark
+        let pred = c.gram(256, 64);
+        assert!(pred > 0.0 && pred < 1.0, "pred={pred}");
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(CostModel::gram_bytes(16), 4 * (256 + 16 + 1));
+        assert_eq!(CostModel::residual_bytes(100), 800);
+    }
+}

@@ -1,0 +1,567 @@
+//! The distributed cross-fitting coordinator — the paper's §5.1.
+//!
+//! For each fold k: fit model_y (ridge) and model_t (logistic) on the
+//! other folds' blocks, then compute out-of-fold residuals on fold k's
+//! blocks.  Everything is submitted as one task DAG; the executor
+//! (inline / threads / simulated cluster) decides what runs where — the
+//! graph is identical, so the estimates are identical.
+//!
+//! ```text
+//!   blocks(fold!=k) ──gram──▶ tree-reduce ──solve──▶ beta_y[k] ─┐
+//!   blocks(fold!=k) ──irls──▶ tree-reduce ──solve──▶ beta_t[k] ─┤
+//!                                                               ▼
+//!   blocks(fold==k) ───────────────residual(beta_y, beta_t)──▶ (y~, t~)
+//! ```
+//!
+//! A dry-run variant builds the same DAG with empty payloads and noop
+//! functions: the simulated cluster then prices the paper-scale runs
+//! (1M x 500) without materializing 2 GB of data.
+
+use std::sync::Arc;
+
+use crate::data::folds::FoldPlan;
+use crate::data::matrix::Matrix;
+use crate::data::partition::make_blocks;
+use crate::data::synth::CausalDataset;
+use crate::error::{NexusError, Result};
+use crate::models::cost::CostModel;
+use crate::models::{distops, logistic, ridge};
+use crate::raylet::api::RayContext;
+use crate::raylet::payload::Payload;
+use crate::raylet::task::{ObjectRef, TaskFn};
+use crate::runtime::backend::KernelExec;
+
+/// Cross-fitting knobs (a subset of [`crate::config::RunConfig`]).
+#[derive(Clone, Debug)]
+pub struct CrossfitConfig {
+    pub cv: usize,
+    pub lam_y: f32,
+    pub lam_t: f32,
+    pub irls_iters: usize,
+    /// Block rows (must be a shipped artifact size under PJRT).
+    pub block: usize,
+    /// Padded covariate width including the intercept column (must be a
+    /// shipped artifact size under PJRT).
+    pub d_pad: usize,
+    /// Real covariate count (excluding intercept).
+    pub d_real: usize,
+    pub seed: u64,
+    pub stratified: bool,
+    /// Suffstat reuse for model_y: compute each block's Gram partial
+    /// ONCE and derive every fold's training statistics as
+    /// `total − fold_sum[k]` — exact for ridge (linear in the data),
+    /// cutting the gram map work by (K−1)/K.  f32 summation order
+    /// differs from the naive path, so estimates match to tolerance
+    /// rather than bit-for-bit; off by default (ablation E).
+    pub reuse_suffstats: bool,
+}
+
+impl Default for CrossfitConfig {
+    fn default() -> Self {
+        CrossfitConfig {
+            cv: 5,
+            lam_y: 1e-3,
+            lam_t: 1e-3,
+            irls_iters: 5,
+            block: 256,
+            d_pad: 16,
+            d_real: 10,
+            seed: 123,
+            stratified: true,
+            reuse_suffstats: false,
+        }
+    }
+}
+
+impl CrossfitConfig {
+    pub fn from_run(cfg: &crate::config::RunConfig, block: usize, d_pad: usize) -> Self {
+        CrossfitConfig {
+            cv: cfg.cv,
+            lam_y: cfg.lam_y,
+            lam_t: cfg.lam_t,
+            irls_iters: cfg.irls_iters,
+            block,
+            d_pad,
+            d_real: cfg.d,
+            seed: cfg.seed,
+            stratified: true,
+            reuse_suffstats: false,
+        }
+    }
+}
+
+/// Row membership of one block (kept driver-side for scatter).
+#[derive(Clone, Debug)]
+pub struct BlockMeta {
+    pub rows: Vec<usize>,
+}
+
+/// Everything the final stage (and tests) need after cross-fitting.
+pub struct CrossfitOutput {
+    pub fold_plan: FoldPlan,
+    /// Per fold: refs of that fold's (eval) blocks.
+    pub block_refs: Vec<Vec<ObjectRef>>,
+    /// Per fold: row membership of each block.
+    pub block_meta: Vec<Vec<BlockMeta>>,
+    /// Per fold: refs of (y_res, t_res) per eval block.
+    pub resid_refs: Vec<Vec<ObjectRef>>,
+    /// Per fold: fitted beta refs.
+    pub beta_y_refs: Vec<ObjectRef>,
+    pub beta_t_refs: Vec<ObjectRef>,
+    /// Scattered full-length residuals (empty for dry runs).
+    pub y_res: Vec<f32>,
+    pub t_res: Vec<f32>,
+    /// Fitted nuisance coefficients per fold (empty for dry runs).
+    pub beta_y: Vec<Vec<f32>>,
+    pub beta_t: Vec<Vec<f32>>,
+    pub dry: bool,
+    pub cfg: CrossfitConfig,
+}
+
+fn noop_task() -> TaskFn {
+    Arc::new(|_: &[&Payload]| Ok(Payload::Empty))
+}
+
+fn block_bytes(b: usize, d: usize) -> usize {
+    4 * (b * d + 3 * b)
+}
+
+/// Pad raw covariates with an intercept column and zero columns up to
+/// `d_pad`.
+pub fn pad_covariates(x: &Matrix, d_pad: usize) -> Result<Matrix> {
+    let with_icpt = x.with_intercept();
+    if with_icpt.cols() > d_pad {
+        return Err(NexusError::Data(format!(
+            "d+1={} exceeds padded width {d_pad}",
+            with_icpt.cols()
+        )));
+    }
+    Ok(with_icpt.pad_cols(d_pad))
+}
+
+/// Build + submit the full cross-fitting DAG over real data.
+pub fn run(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    cost: &CostModel,
+    ds: &CausalDataset,
+    cfg: &CrossfitConfig,
+) -> Result<CrossfitOutput> {
+    let n = ds.n();
+    let fold_plan = if cfg.stratified {
+        FoldPlan::stratified(&ds.t, cfg.cv, cfg.seed)?
+    } else {
+        FoldPlan::random(n, cfg.cv, cfg.seed)?
+    };
+    let x_pad = pad_covariates(&ds.x, cfg.d_pad)?;
+
+    // put blocks fold by fold
+    let mut block_refs: Vec<Vec<ObjectRef>> = Vec::with_capacity(cfg.cv);
+    let mut block_meta: Vec<Vec<BlockMeta>> = Vec::with_capacity(cfg.cv);
+    for f in 0..cfg.cv as u32 {
+        let rows = fold_plan.fold_rows(f);
+        let blocks = make_blocks(&x_pad, &ds.y, &ds.t, &rows, cfg.block);
+        let mut refs = Vec::with_capacity(blocks.len());
+        let mut metas = Vec::with_capacity(blocks.len());
+        for blk in &blocks {
+            refs.push(ctx.put(distops::block_payload(blk)));
+            metas.push(BlockMeta { rows: blk.rows.clone() });
+        }
+        block_refs.push(refs);
+        block_meta.push(metas);
+    }
+
+    let out = submit_graph(ctx, Some(kx), cost, cfg, fold_plan, block_refs, block_meta)?;
+    collect(ctx, out, n)
+}
+
+/// Build + submit the same DAG with empty payloads (timing-only).
+pub fn run_dry(
+    ctx: &RayContext,
+    cost: &CostModel,
+    n: usize,
+    cfg: &CrossfitConfig,
+) -> Result<CrossfitOutput> {
+    let fold_plan = FoldPlan::random(n, cfg.cv, cfg.seed)?;
+    let bytes = block_bytes(cfg.block, cfg.d_pad);
+    let mut block_refs: Vec<Vec<ObjectRef>> = Vec::with_capacity(cfg.cv);
+    let mut block_meta: Vec<Vec<BlockMeta>> = Vec::with_capacity(cfg.cv);
+    for f in 0..cfg.cv as u32 {
+        let rows = fold_plan.fold_rows(f);
+        let n_blocks = rows.len().div_ceil(cfg.block);
+        let refs: Vec<ObjectRef> =
+            (0..n_blocks).map(|_| ctx.put_sized(Payload::Empty, bytes)).collect();
+        // row membership still tracked (cheap) so shapes match real runs
+        let metas: Vec<BlockMeta> = rows
+            .chunks(cfg.block)
+            .map(|c| BlockMeta { rows: c.to_vec() })
+            .collect();
+        block_refs.push(refs);
+        block_meta.push(metas);
+    }
+    let mut out = submit_graph(ctx, None, cost, cfg, fold_plan, block_refs, block_meta)?;
+    ctx.drain()?;
+    out.dry = true;
+    Ok(out)
+}
+
+/// Shared DAG builder.  `kx = None` => dry (noop task bodies).
+fn submit_graph(
+    ctx: &RayContext,
+    kx: Option<Arc<dyn KernelExec>>,
+    cost: &CostModel,
+    cfg: &CrossfitConfig,
+    fold_plan: FoldPlan,
+    block_refs: Vec<Vec<ObjectRef>>,
+    block_meta: Vec<Vec<BlockMeta>>,
+) -> Result<CrossfitOutput> {
+    let (b, d) = (cfg.block, cfg.d_pad);
+    let lam_y_ref = ctx.put(Payload::Floats(ridge::lam_diag(d, cfg.d_real + 1, cfg.lam_y)));
+    let lam_t_ref = ctx.put(Payload::Floats(ridge::lam_diag(d, cfg.d_real + 1, cfg.lam_t)));
+
+    let mut beta_y_refs = Vec::with_capacity(cfg.cv);
+    let mut beta_t_refs = Vec::with_capacity(cfg.cv);
+    let mut resid_refs: Vec<Vec<ObjectRef>> = Vec::with_capacity(cfg.cv);
+
+    // suffstat reuse: per-block gram ONCE, per-fold sums, grand total —
+    // fold k's training stats come from one subtraction (exact algebra).
+    let reuse_train_stats: Option<Vec<ObjectRef>> = match (&kx, cfg.reuse_suffstats) {
+        (Some(kx), true) => {
+            let gram_bytes = CostModel::gram_bytes(d);
+            let fold_sums: Vec<ObjectRef> = block_refs
+                .iter()
+                .enumerate()
+                .map(|(f, refs)| {
+                    let partials: Vec<ObjectRef> = refs
+                        .iter()
+                        .map(|blk| {
+                            ctx.submit_sized(
+                                &format!("f{f}:gram1"),
+                                vec![*blk],
+                                cost.gram(b, d),
+                                gram_bytes,
+                                distops::gram_task(kx.clone()),
+                            )
+                        })
+                        .collect();
+                    distops::tree_reduce(
+                        ctx,
+                        partials,
+                        ridge::REDUCE_ARITY,
+                        &format!("f{f}:gram1"),
+                        cost.reduce(ridge::REDUCE_ARITY, d),
+                        gram_bytes,
+                    )
+                })
+                .collect();
+            let total = distops::tree_reduce(
+                ctx,
+                fold_sums.clone(),
+                ridge::REDUCE_ARITY,
+                "gram:total",
+                cost.reduce(ridge::REDUCE_ARITY, d),
+                gram_bytes,
+            );
+            Some(
+                fold_sums
+                    .iter()
+                    .enumerate()
+                    .map(|(f, fs)| {
+                        ctx.submit_sized(
+                            &format!("f{f}:minus"),
+                            vec![total, *fs],
+                            cost.reduce(2, d),
+                            gram_bytes,
+                            distops::sub_task(),
+                        )
+                    })
+                    .collect(),
+            )
+        }
+        _ => None,
+    };
+
+    for k in 0..cfg.cv {
+        let train: Vec<ObjectRef> = block_refs
+            .iter()
+            .enumerate()
+            .filter(|(f, _)| *f != k)
+            .flat_map(|(_, refs)| refs.iter().copied())
+            .collect();
+
+        let (by, bt) = match &kx {
+            Some(kx) => (
+                match &reuse_train_stats {
+                    Some(stats) => ctx.submit_sized(
+                        &format!("f{k}:y:solve"),
+                        vec![stats[k], lam_y_ref],
+                        cost.solve(d),
+                        4 * d,
+                        distops::solve_task(kx.clone()),
+                    ),
+                    None => ridge::fit(ctx, kx.clone(), cost, &train, b, d, lam_y_ref, &format!("f{k}:y")),
+                },
+                logistic::fit(
+                    ctx,
+                    kx.clone(),
+                    cost,
+                    &train,
+                    b,
+                    d,
+                    lam_t_ref,
+                    cfg.irls_iters,
+                    &format!("f{k}:t"),
+                ),
+            ),
+            None => (
+                dry_fit(ctx, cost, &train, b, d, 1, &format!("f{k}:y")),
+                dry_fit(ctx, cost, &train, b, d, cfg.irls_iters, &format!("f{k}:t")),
+            ),
+        };
+
+        let rb = CostModel::residual_bytes(b);
+        let fold_resids: Vec<ObjectRef> = block_refs[k]
+            .iter()
+            .map(|blk| {
+                let f: TaskFn = match &kx {
+                    Some(kx) => distops::residual_task(kx.clone()),
+                    None => noop_task(),
+                };
+                ctx.submit_sized(
+                    &format!("f{k}:resid"),
+                    vec![*blk, by, bt],
+                    cost.residual(b, d),
+                    rb,
+                    f,
+                )
+            })
+            .collect();
+
+        beta_y_refs.push(by);
+        beta_t_refs.push(bt);
+        resid_refs.push(fold_resids);
+    }
+
+    Ok(CrossfitOutput {
+        fold_plan,
+        block_refs,
+        block_meta,
+        resid_refs,
+        beta_y_refs,
+        beta_t_refs,
+        y_res: Vec::new(),
+        t_res: Vec::new(),
+        beta_y: Vec::new(),
+        beta_t: Vec::new(),
+        dry: false,
+        cfg: cfg.clone(),
+    })
+}
+
+/// Dry-run stand-in for a nuisance fit: same task/DAG shape and cost
+/// hints as ridge (1 stage) or logistic (`stages` IRLS rounds).
+fn dry_fit(
+    ctx: &RayContext,
+    cost: &CostModel,
+    train: &[ObjectRef],
+    b: usize,
+    d: usize,
+    stages: usize,
+    tag: &str,
+) -> ObjectRef {
+    let gram_bytes = CostModel::gram_bytes(d);
+    let mut beta = ctx.put_sized(Payload::Empty, 4 * d);
+    for s in 0..stages.max(1) {
+        let partials: Vec<ObjectRef> = train
+            .iter()
+            .map(|blk| {
+                ctx.submit_sized(
+                    &format!("{tag}:map{s}"),
+                    vec![*blk, beta],
+                    if stages > 1 { cost.irls(b, d) } else { cost.gram(b, d) },
+                    gram_bytes,
+                    noop_task(),
+                )
+            })
+            .collect();
+        let reduced = distops::tree_reduce(
+            ctx,
+            partials,
+            ridge::REDUCE_ARITY,
+            tag,
+            cost.reduce(ridge::REDUCE_ARITY, d),
+            gram_bytes,
+        );
+        beta = ctx.submit_sized(
+            &format!("{tag}:solve{s}"),
+            vec![reduced],
+            cost.solve(d),
+            4 * d,
+            noop_task(),
+        );
+    }
+    beta
+}
+
+/// Fetch betas and scatter residuals back into full-length vectors.
+fn collect(ctx: &RayContext, mut out: CrossfitOutput, n: usize) -> Result<CrossfitOutput> {
+    let mut y_res = vec![0.0f32; n];
+    let mut t_res = vec![0.0f32; n];
+    for k in 0..out.cfg.cv {
+        out.beta_y.push(ctx.get(&out.beta_y_refs[k])?.as_floats()?.to_vec());
+        out.beta_t.push(ctx.get(&out.beta_t_refs[k])?.as_floats()?.to_vec());
+        for (r, meta) in out.resid_refs[k].iter().zip(&out.block_meta[k]) {
+            let payload = ctx.get(r)?;
+            let ts = payload.as_tensors()?;
+            let (yr, tr) = (&ts[0].data, &ts[1].data);
+            for (slot, &row) in meta.rows.iter().enumerate() {
+                y_res[row] = yr[slot];
+                t_res[row] = tr[slot];
+            }
+        }
+    }
+    out.y_res = y_res;
+    out.t_res = t_res;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::runtime::backend::HostBackend;
+
+    fn small_cfg() -> CrossfitConfig {
+        CrossfitConfig {
+            cv: 3,
+            lam_y: 1e-3,
+            lam_t: 1e-3,
+            irls_iters: 4,
+            block: 128,
+            d_pad: 8,
+            d_real: 6,
+            seed: 7,
+            stratified: true,
+            reuse_suffstats: false,
+        }
+    }
+
+    fn small_data() -> CausalDataset {
+        generate(&SynthConfig { n: 900, d: 6, ..Default::default() })
+    }
+
+    #[test]
+    fn residuals_cover_every_row_once() {
+        let ds = small_data();
+        let ctx = RayContext::inline();
+        let out =
+            run(&ctx, Arc::new(HostBackend), &CostModel::default(), &ds, &small_cfg()).unwrap();
+        assert_eq!(out.y_res.len(), 900);
+        // residuals should not be identically zero anywhere (all rows filled)
+        let zeros = out.t_res.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros < 5, "unfilled rows? zeros={zeros}");
+        assert_eq!(out.beta_y.len(), 3);
+        assert_eq!(out.beta_y[0].len(), 8);
+    }
+
+    #[test]
+    fn executors_produce_identical_residuals() {
+        let ds = small_data();
+        let cfg = small_cfg();
+        let cost = CostModel::default();
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        let a = run(&RayContext::inline(), kx.clone(), &cost, &ds, &cfg).unwrap();
+        let b = run(&RayContext::threads(4), kx.clone(), &cost, &ds, &cfg).unwrap();
+        let c = run(&RayContext::sim(ClusterConfig::default(), true), kx, &cost, &ds, &cfg)
+            .unwrap();
+        assert_eq!(a.y_res, b.y_res, "threads != inline");
+        assert_eq!(a.y_res, c.y_res, "sim != inline");
+        assert_eq!(a.t_res, b.t_res);
+        assert_eq!(a.beta_y, b.beta_y);
+    }
+
+    #[test]
+    fn out_of_fold_residuals_are_orthogonalized() {
+        // with enough data, t_res mean ~ 0 and y_res decorrelated from x
+        let ds = generate(&SynthConfig { n: 4000, d: 4, ..Default::default() });
+        let cfg = CrossfitConfig { d_pad: 8, d_real: 4, cv: 5, ..small_cfg() };
+        let ctx = RayContext::inline();
+        let out = run(&ctx, Arc::new(HostBackend), &CostModel::default(), &ds, &cfg).unwrap();
+        let mean_t: f64 =
+            out.t_res.iter().map(|&v| v as f64).sum::<f64>() / out.t_res.len() as f64;
+        assert!(mean_t.abs() < 0.03, "mean t_res={mean_t}");
+        // correlation of y_res with x_0 should be far below raw y's
+        let n = ds.n() as f64;
+        let corr = |v: &[f32]| -> f64 {
+            (0..ds.n()).map(|i| ds.x.get(i, 0) as f64 * v[i] as f64).sum::<f64>() / n
+        };
+        assert!(corr(&out.y_res).abs() < 0.25 * corr(&ds.y).abs());
+    }
+
+    #[test]
+    fn dry_run_builds_same_dag_shape() {
+        let cfg = small_cfg();
+        let cost = CostModel::default();
+        let ctx = RayContext::sim(ClusterConfig::default(), false);
+        let out = run_dry(&ctx, &cost, 900, &cfg).unwrap();
+        assert!(out.dry);
+        let m = ctx.metrics();
+        // tasks: per fold (gram maps + reduces + solve) * 2 models + resid
+        assert!(m.tasks_run > 50, "tasks={}", m.tasks_run);
+        assert!(m.makespan > 0.0);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn suffstat_reuse_matches_naive_path() {
+        // reuse (total - fold) is exact algebra; f32 ordering differs, so
+        // compare to tolerance — and it must run FEWER gram map tasks.
+        let ds = generate(&SynthConfig { n: 4000, d: 6, ..Default::default() });
+        let naive_cfg = CrossfitConfig { cv: 4, ..small_cfg() };
+        let reuse_cfg = CrossfitConfig { reuse_suffstats: true, ..naive_cfg.clone() };
+        let cost = CostModel::default();
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+
+        let ctx_a = RayContext::inline();
+        let a = run(&ctx_a, kx.clone(), &cost, &ds, &naive_cfg).unwrap();
+        let ctx_b = RayContext::inline();
+        let b = run(&ctx_b, kx.clone(), &cost, &ds, &reuse_cfg).unwrap();
+
+        for (ba, bb) in a.beta_y.iter().zip(&b.beta_y) {
+            for (u, v) in ba.iter().zip(bb) {
+                assert!((u - v).abs() < 2e-3, "{ba:?} vs {bb:?}");
+            }
+        }
+        for (u, v) in a.y_res.iter().zip(&b.y_res) {
+            assert!((u - v).abs() < 5e-3);
+        }
+        // fewer tasks: naive runs cv*(cv-1)/cv * blocks gram maps, reuse
+        // runs each block once (+ subtract/solve overhead)
+        assert!(
+            ctx_b.metrics().tasks_run < ctx_a.metrics().tasks_run,
+            "reuse {} !< naive {}",
+            ctx_b.metrics().tasks_run,
+            ctx_a.metrics().tasks_run
+        );
+    }
+
+    #[test]
+    fn suffstat_reuse_identical_across_executors() {
+        let ds = generate(&SynthConfig { n: 1500, d: 6, ..Default::default() });
+        let cfg = CrossfitConfig { reuse_suffstats: true, ..small_cfg() };
+        let cost = CostModel::default();
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        let a = run(&RayContext::inline(), kx.clone(), &cost, &ds, &cfg).unwrap();
+        let b = run(&RayContext::threads(4), kx, &cost, &ds, &cfg).unwrap();
+        assert_eq!(a.y_res, b.y_res);
+        assert_eq!(a.beta_y, b.beta_y);
+    }
+
+    #[test]
+    fn rejects_oversized_covariates() {
+        let x = Matrix::zeros(10, 20);
+        assert!(pad_covariates(&x, 16).is_err());
+        assert!(pad_covariates(&x, 21).is_ok());
+    }
+}

@@ -1,0 +1,263 @@
+//! Distributed primitives shared by the model fits: block payloads,
+//! kernel task factories, and tree reduction.
+//!
+//! Everything here is executor-agnostic: the same task graph runs inline
+//! (sequential baseline), on threads, or on the simulated cluster.
+
+use std::sync::Arc;
+
+use crate::data::matrix::Matrix;
+use crate::data::partition::RowBlock;
+use crate::error::{NexusError, Result};
+use crate::raylet::api::RayContext;
+use crate::raylet::payload::Payload;
+use crate::raylet::task::{ObjectRef, TaskFn};
+use crate::runtime::backend::KernelExec;
+use crate::runtime::tensor::Tensor;
+
+/// Pack a padded row block for the object store (structural payload:
+/// tasks borrow it zero-copy).
+pub fn block_payload(block: &RowBlock) -> Payload {
+    Payload::Block(block.clone())
+}
+
+/// Move a block into the store without copying.
+pub fn block_payload_owned(block: RowBlock) -> Payload {
+    Payload::Block(block)
+}
+
+/// Unpack a block payload into borrowed (x, y, t, mask) views — the
+/// object-store -> kernel hot path makes NO copies here.
+pub fn unpack_block(p: &Payload) -> Result<(&Matrix, &[f32], &[f32], &[f32])> {
+    let b = p.as_block()?;
+    Ok((&b.x, &b.y, &b.t, &b.mask))
+}
+
+/// Task: gram partial over one block -> Tensors([G, b, n]).
+pub fn gram_task(kx: Arc<dyn KernelExec>) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let (x, y, _t, mask) = unpack_block(args[0])?;
+        let (g, b, n) = kx.gram_block(&x, y, mask)?;
+        Ok(Payload::Tensors(vec![
+            Tensor::from_matrix_owned(g),
+            Tensor::vector(b),
+            Tensor::scalar(n),
+        ]))
+    })
+}
+
+/// Task: gram partial regressing t on x (for linear-probability or
+/// tune scoring) — swaps the roles of y and t.
+pub fn gram_t_task(kx: Arc<dyn KernelExec>) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let (x, _y, t, mask) = unpack_block(args[0])?;
+        let (g, b, n) = kx.gram_block(&x, t, mask)?;
+        Ok(Payload::Tensors(vec![
+            Tensor::from_matrix_owned(g),
+            Tensor::vector(b),
+            Tensor::scalar(n),
+        ]))
+    })
+}
+
+/// Task: IRLS partial over one block at the current beta ->
+/// Tensors([H, c, nll]).  args = [block, beta].
+pub fn irls_task(kx: Arc<dyn KernelExec>) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let (x, _y, t, mask) = unpack_block(args[0])?;
+        let beta = args[1].as_floats()?;
+        let (h, c, nll) = kx.irls_block(&x, t, mask, beta)?;
+        Ok(Payload::Tensors(vec![
+            Tensor::from_matrix_owned(h),
+            Tensor::vector(c),
+            Tensor::scalar(nll),
+        ]))
+    })
+}
+
+/// Task: solve (G + diag(lam)) beta = b from a reduced gram partial.
+/// args = [reduced(Tensors[G, b, n]), lam_diag(Floats)].
+pub fn solve_task(kx: Arc<dyn KernelExec>) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let ts = args[0].as_tensors()?;
+        let g = ts[0].to_matrix()?;
+        let b = &ts[1].data;
+        let lam = args[1].as_floats()?;
+        let beta = kx.ridge_solve(&g, b, lam)?;
+        Ok(Payload::Floats(beta))
+    })
+}
+
+/// Task: fused residuals on an eval block.
+/// args = [block, beta_y(Floats), beta_t(Floats)] -> Tensors([y_res, t_res]).
+pub fn residual_task(kx: Arc<dyn KernelExec>) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let (x, y, t, _mask) = unpack_block(args[0])?;
+        let beta_y = args[1].as_floats()?;
+        let beta_t = args[2].as_floats()?;
+        let (yr, tr) = kx.residual_block(&x, y, t, beta_y, beta_t)?;
+        Ok(Payload::Tensors(vec![Tensor::vector(yr), Tensor::vector(tr)]))
+    })
+}
+
+/// Task: elementwise sum of Tensors payloads (the reduce combiner).
+pub fn sum_task() -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let first = args[0].as_tensors()?;
+        let mut acc: Vec<Tensor> = first.to_vec();
+        for p in &args[1..] {
+            let ts = p.as_tensors()?;
+            if ts.len() != acc.len() {
+                return Err(NexusError::Raylet("sum: arity mismatch".into()));
+            }
+            for (a, t) in acc.iter_mut().zip(ts) {
+                if a.shape != t.shape {
+                    return Err(NexusError::Raylet(format!(
+                        "sum: shape mismatch {:?} vs {:?}",
+                        a.shape, t.shape
+                    )));
+                }
+                for (av, tv) in a.data.iter_mut().zip(&t.data) {
+                    *av += tv;
+                }
+            }
+        }
+        Ok(Payload::Tensors(acc))
+    })
+}
+
+/// Task: elementwise difference of two Tensors payloads (args[0] −
+/// args[1]) — the suffstat-reuse subtraction (train = total − fold).
+pub fn sub_task() -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let a = args[0].as_tensors()?;
+        let b = args[1].as_tensors()?;
+        if a.len() != b.len() {
+            return Err(NexusError::Raylet("sub: arity mismatch".into()));
+        }
+        let mut out = a.to_vec();
+        for (o, t) in out.iter_mut().zip(b) {
+            if o.shape != t.shape {
+                return Err(NexusError::Raylet(format!(
+                    "sub: shape mismatch {:?} vs {:?}",
+                    o.shape, t.shape
+                )));
+            }
+            for (ov, tv) in o.data.iter_mut().zip(&t.data) {
+                *ov -= tv;
+            }
+        }
+        Ok(Payload::Tensors(out))
+    })
+}
+
+/// Tree-reduce `refs` with the sum combiner at the given fan-in.
+/// Deterministic structure => deterministic f32 summation order, which is
+/// what makes sequential and distributed estimates bit-identical.
+pub fn tree_reduce(
+    ctx: &RayContext,
+    mut refs: Vec<ObjectRef>,
+    arity: usize,
+    label: &str,
+    cost_per: f64,
+    out_bytes: usize,
+) -> ObjectRef {
+    assert!(!refs.is_empty());
+    assert!(arity >= 2);
+    let f = sum_task();
+    let mut level = 0;
+    while refs.len() > 1 {
+        refs = refs
+            .chunks(arity)
+            .map(|chunk| {
+                if chunk.len() == 1 {
+                    chunk[0]
+                } else {
+                    ctx.submit_sized(
+                        &format!("{label}:reduce{level}"),
+                        chunk.to_vec(),
+                        cost_per,
+                        out_bytes,
+                        f.clone(),
+                    )
+                }
+            })
+            .collect();
+        level += 1;
+    }
+    refs[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::make_blocks;
+    use crate::runtime::backend::HostBackend;
+    use crate::util::rng::Pcg32;
+
+    fn toy_block() -> RowBlock {
+        let mut rng = Pcg32::new(5);
+        let x = Matrix::from_fn(16, 4, |_, _| rng.normal_f32());
+        let y: Vec<f32> = (0..16).map(|_| rng.normal_f32()).collect();
+        let t: Vec<f32> = (0..16).map(|i| (i % 2) as f32).collect();
+        let rows: Vec<usize> = (0..16).collect();
+        make_blocks(&x, &y, &t, &rows, 16).pop().unwrap()
+    }
+
+    #[test]
+    fn block_payload_roundtrip() {
+        let b = toy_block();
+        let p = block_payload(&b);
+        let (x, y, t, mask) = unpack_block(&p).unwrap();
+        assert_eq!(*x, b.x);
+        assert_eq!(y, &b.y[..]);
+        assert_eq!(t, &b.t[..]);
+        assert_eq!(mask, &b.mask[..]);
+    }
+
+    #[test]
+    fn gram_task_runs() {
+        let ctx = RayContext::inline();
+        let b = toy_block();
+        let r = ctx.put(block_payload(&b));
+        let g = ctx.submit("gram", vec![r], 0.0, gram_task(Arc::new(HostBackend)));
+        let out = ctx.get(&g).unwrap();
+        let ts = out.as_tensors().unwrap();
+        assert_eq!(ts[0].shape, vec![4, 4]);
+        assert_eq!(ts[2].as_scalar().unwrap(), 16.0);
+    }
+
+    #[test]
+    fn tree_reduce_sums_correctly() {
+        let ctx = RayContext::threads(3);
+        let refs: Vec<ObjectRef> = (0..13)
+            .map(|i| {
+                ctx.put(Payload::Tensors(vec![
+                    Tensor::vector(vec![i as f32, 1.0]),
+                    Tensor::scalar(1.0),
+                ]))
+            })
+            .collect();
+        let root = tree_reduce(&ctx, refs, 4, "t", 0.0, 8);
+        let out = ctx.get(&root).unwrap();
+        let ts = out.as_tensors().unwrap();
+        assert_eq!(ts[0].data, vec![78.0, 13.0]); // sum 0..12, count
+        assert_eq!(ts[1].as_scalar().unwrap(), 13.0);
+    }
+
+    #[test]
+    fn tree_reduce_single_ref_is_identity() {
+        let ctx = RayContext::inline();
+        let r = ctx.put(Payload::Tensors(vec![Tensor::scalar(5.0)]));
+        let root = tree_reduce(&ctx, vec![r], 8, "t", 0.0, 0);
+        assert_eq!(root, r);
+    }
+
+    #[test]
+    fn sum_task_rejects_mismatch() {
+        let f = sum_task();
+        let a = Payload::Tensors(vec![Tensor::vector(vec![1.0, 2.0])]);
+        let b = Payload::Tensors(vec![Tensor::vector(vec![1.0])]);
+        assert!(f(&[&a, &b]).is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Nuisance models and the cross-fitting coordinator.
+//!
+//! The paper's §5.1 contribution — "run the K cross-fitting folds as Ray
+//! remote tasks" — lives in [`crossfit`].  [`ridge`] and [`logistic`]
+//! are the distributed nuisance fits (streaming sufficient statistics /
+//! blocked IRLS through the compiled kernels); [`cost`] calibrates the
+//! virtual-time task costs the simulated cluster uses.
+
+pub mod cost;
+pub mod distops;
+pub mod ridge;
+pub mod logistic;
+pub mod crossfit;
+pub mod registry;
+
+pub use cost::CostModel;
+pub use crossfit::{CrossfitConfig, CrossfitOutput};
+pub use registry::ModelSpec;

@@ -1,0 +1,184 @@
+//! Distributed ridge regression (the `model_y` nuisance).
+//!
+//! fit = map gram partials over the training blocks, tree-reduce the
+//! sufficient statistics, one solve — the classic "streaming normal
+//! equations" formulation that makes the fit embarrassingly parallel and
+//! exact (no SGD): the distributed answer equals the single-machine one
+//! to f32 summation order, which the tree's fixed structure pins down.
+
+use std::sync::Arc;
+
+use crate::models::cost::CostModel;
+use crate::models::distops;
+use crate::raylet::api::RayContext;
+use crate::raylet::payload::Payload;
+use crate::raylet::task::ObjectRef;
+use crate::runtime::backend::KernelExec;
+
+/// Reduce fan-in: 8 keeps reduce depth log8(n_blocks) while each reduce
+/// task stays cheap relative to a gram task.
+pub const REDUCE_ARITY: usize = 8;
+
+/// Build the penalty diagonal: no penalty on the intercept (col 0),
+/// `lam` on real covariates, 1.0 on padding columns (keeps the padded
+/// system PD while pinning padded coefficients at 0).
+pub fn lam_diag(d_pad: usize, d_real: usize, lam: f32) -> Vec<f32> {
+    (0..d_pad)
+        .map(|j| {
+            if j == 0 {
+                0.0
+            } else if j < d_real {
+                lam
+            } else {
+                1.0
+            }
+        })
+        .collect()
+}
+
+/// Submit the distributed ridge fit over `train_blocks`; returns the ref
+/// of the fitted beta (Floats[d_pad]).
+///
+/// * `b`, `d` — block shape (must match the shipped artifacts when the
+///   backend is PJRT).
+pub fn fit(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    cost: &CostModel,
+    train_blocks: &[ObjectRef],
+    b: usize,
+    d: usize,
+    lam_ref: ObjectRef,
+    tag: &str,
+) -> ObjectRef {
+    let gram_bytes = CostModel::gram_bytes(d);
+    let partials: Vec<ObjectRef> = train_blocks
+        .iter()
+        .map(|blk| {
+            ctx.submit_sized(
+                &format!("{tag}:gram"),
+                vec![*blk],
+                cost.gram(b, d),
+                gram_bytes,
+                distops::gram_task(kx.clone()),
+            )
+        })
+        .collect();
+    let reduced = distops::tree_reduce(
+        ctx,
+        partials,
+        REDUCE_ARITY,
+        tag,
+        cost.reduce(REDUCE_ARITY, d),
+        gram_bytes,
+    );
+    ctx.submit_sized(
+        &format!("{tag}:solve"),
+        vec![reduced, lam_ref],
+        cost.solve(d),
+        4 * d,
+        distops::solve_task(kx.clone()),
+    )
+}
+
+/// Fetch a fitted beta (driver side).
+pub fn get_beta(ctx: &RayContext, r: &ObjectRef) -> crate::error::Result<Vec<f32>> {
+    Ok(ctx.get(r)?.as_floats()?.to_vec())
+}
+
+/// Driver-side convenience used by tests and tune scoring: fully fit a
+/// ridge on raw data through any executor.
+pub fn fit_simple(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    x: &crate::data::matrix::Matrix,
+    y: &[f32],
+    lam: f32,
+    block: usize,
+) -> crate::error::Result<Vec<f32>> {
+    let t = vec![0.0f32; y.len()];
+    let rows: Vec<usize> = (0..x.rows()).collect();
+    let blocks = crate::data::partition::make_blocks(x, y, &t, &rows, block);
+    let refs: Vec<ObjectRef> =
+        blocks.iter().map(|b| ctx.put(distops::block_payload(b))).collect();
+    let lam_ref = ctx.put(Payload::Floats(lam_diag(x.cols(), x.cols(), lam)));
+    let cost = CostModel::default();
+    let beta = fit(ctx, kx, &cost, &refs, block, x.cols(), lam_ref, "ridge");
+    get_beta(ctx, &beta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+    use crate::linalg;
+    use crate::runtime::backend::HostBackend;
+    use crate::util::rng::Pcg32;
+
+    fn make_data(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg32::new(seed);
+        let x = Matrix::from_fn(n, d, |_, j| if j == 0 { 1.0 } else { rng.normal_f32() });
+        let beta: Vec<f32> = (0..d).map(|j| (j as f32 * 0.7).sin()).collect();
+        let y: Vec<f32> = (0..n)
+            .map(|i| {
+                x.row(i).iter().zip(&beta).map(|(a, b)| a * b).sum::<f32>()
+                    + 0.01 * rng.normal_f32()
+            })
+            .collect();
+        (x, y, beta)
+    }
+
+    #[test]
+    fn recovers_coefficients_inline() {
+        let (x, y, beta_true) = make_data(512, 6, 1);
+        let ctx = RayContext::inline();
+        let beta = fit_simple(&ctx, Arc::new(HostBackend), &x, &y, 1e-4, 128).unwrap();
+        for (b, t) in beta.iter().zip(&beta_true) {
+            assert!((b - t).abs() < 0.02, "{beta:?} vs {beta_true:?}");
+        }
+    }
+
+    #[test]
+    fn distributed_equals_sequential_exactly() {
+        // Same task graph, different executors: identical f32 results.
+        let (x, y, _) = make_data(800, 5, 2);
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        let seq =
+            fit_simple(&RayContext::inline(), kx.clone(), &x, &y, 1e-3, 128).unwrap();
+        let dist =
+            fit_simple(&RayContext::threads(4), kx.clone(), &x, &y, 1e-3, 128).unwrap();
+        let sim = fit_simple(
+            &RayContext::sim(crate::config::ClusterConfig::default(), true),
+            kx,
+            &x,
+            &y,
+            1e-3,
+            128,
+        )
+        .unwrap();
+        assert_eq!(seq, dist, "threads must be bit-identical to inline");
+        assert_eq!(seq, sim, "sim must be bit-identical to inline");
+    }
+
+    #[test]
+    fn matches_direct_normal_equations() {
+        let (x, y, _) = make_data(600, 4, 3);
+        let ctx = RayContext::inline();
+        let beta = fit_simple(&ctx, Arc::new(HostBackend), &x, &y, 0.5, 100).unwrap();
+        let g = linalg::gram(&x);
+        let b = linalg::xt_v(&x, &y);
+        let lam = lam_diag(4, 4, 0.5);
+        let want = linalg::ridge_solve(&g, &b, &lam).unwrap();
+        for (a, w) in beta.iter().zip(&want) {
+            assert!((a - w).abs() < 1e-3, "{beta:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn lam_diag_layout() {
+        let l = lam_diag(8, 5, 0.25);
+        assert_eq!(l[0], 0.0); // intercept unpenalized
+        assert_eq!(&l[1..5], &[0.25; 4]);
+        assert_eq!(&l[5..], &[1.0; 3]); // padding pinned
+    }
+}

@@ -1,0 +1,222 @@
+//! Actors: stateful workers with serialized mailboxes.
+//!
+//! §2.4 of the paper: Ray's unified interface covers "both task-parallel
+//! and actor-based computation".  Tasks (pool.rs / sim.rs) are the
+//! stateless half; this module adds the stateful half — an actor owns
+//! mutable state, processes its mailbox in submission order, and method
+//! calls return ObjectRef-like handles.  NEXUS uses actors for serving
+//! replicas (each replica owns a compiled model) and for streaming
+//! statistics accumulators.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::error::{NexusError, Result};
+use crate::raylet::payload::Payload;
+
+/// An actor's behaviour: state + message handler.
+pub trait Actor: Send + 'static {
+    /// Handle one message, mutating state; the return value is stored
+    /// under the call's result id.
+    fn handle(&mut self, method: &str, arg: Payload) -> Result<Payload>;
+}
+
+/// Result handle for an actor call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CallRef(pub u64);
+
+enum Envelope {
+    Call { id: u64, method: String, arg: Payload },
+    Stop,
+}
+
+struct Mailbox {
+    queue: Mutex<Vec<Envelope>>,
+    cv: Condvar,
+}
+
+struct ResultStore {
+    results: Mutex<HashMap<u64, Result<Payload>>>,
+    cv: Condvar,
+}
+
+/// Handle to a running actor (cheap to clone; methods are `&self`).
+pub struct ActorHandle {
+    mailbox: Arc<Mailbox>,
+    results: Arc<ResultStore>,
+    next_id: Arc<Mutex<u64>>,
+    stopped: Arc<AtomicBool>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+    /// Calls processed (for metrics).
+    pub name: String,
+}
+
+/// Spawn an actor on its own OS thread.
+pub fn spawn(name: &str, mut actor: impl Actor) -> ActorHandle {
+    let mailbox = Arc::new(Mailbox { queue: Mutex::new(Vec::new()), cv: Condvar::new() });
+    let results =
+        Arc::new(ResultStore { results: Mutex::new(HashMap::new()), cv: Condvar::new() });
+    let mb = mailbox.clone();
+    let rs = results.clone();
+    let thread = std::thread::Builder::new()
+        .name(format!("actor-{name}"))
+        .spawn(move || loop {
+            let env = {
+                let mut q = mb.queue.lock().unwrap();
+                loop {
+                    if !q.is_empty() {
+                        break q.remove(0);
+                    }
+                    q = mb.cv.wait(q).unwrap();
+                }
+            };
+            match env {
+                Envelope::Stop => return,
+                Envelope::Call { id, method, arg } => {
+                    let out = actor.handle(&method, arg);
+                    let mut r = rs.results.lock().unwrap();
+                    r.insert(id, out);
+                    rs.cv.notify_all();
+                }
+            }
+        })
+        .expect("spawn actor");
+    ActorHandle {
+        mailbox,
+        results,
+        next_id: Arc::new(Mutex::new(1)),
+        stopped: Arc::new(AtomicBool::new(false)),
+        thread: Mutex::new(Some(thread)),
+        name: name.to_string(),
+    }
+}
+
+impl ActorHandle {
+    /// Fire an asynchronous method call; returns immediately.
+    pub fn call(&self, method: &str, arg: Payload) -> CallRef {
+        let id = {
+            let mut n = self.next_id.lock().unwrap();
+            *n += 1;
+            *n
+        };
+        let mut q = self.mailbox.queue.lock().unwrap();
+        q.push(Envelope::Call { id, method: method.to_string(), arg });
+        drop(q);
+        self.mailbox.cv.notify_one();
+        CallRef(id)
+    }
+
+    /// Block for a call's result.
+    pub fn get(&self, r: &CallRef) -> Result<Payload> {
+        let mut res = self.results.results.lock().unwrap();
+        loop {
+            if let Some(v) = res.remove(&r.0) {
+                return v;
+            }
+            if self.stopped.load(Ordering::SeqCst) {
+                return Err(NexusError::Raylet(format!(
+                    "actor '{}' stopped before producing call {}",
+                    self.name, r.0
+                )));
+            }
+            res = self.results.cv.wait(res).unwrap();
+        }
+    }
+
+    /// Synchronous call (fire + get).
+    pub fn ask(&self, method: &str, arg: Payload) -> Result<Payload> {
+        let r = self.call(method, arg);
+        self.get(&r)
+    }
+
+    /// Stop the actor after draining its mailbox.
+    pub fn stop(&self) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        {
+            let mut q = self.mailbox.queue.lock().unwrap();
+            q.push(Envelope::Stop);
+        }
+        self.mailbox.cv.notify_one();
+        if let Some(h) = self.thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.results.cv.notify_all();
+    }
+}
+
+impl Drop for ActorHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Running-mean accumulator (the streaming-statistics actor NEXUS
+    /// uses for monitoring).
+    struct MeanActor {
+        sum: f64,
+        n: u64,
+    }
+
+    impl Actor for MeanActor {
+        fn handle(&mut self, method: &str, arg: Payload) -> Result<Payload> {
+            match method {
+                "add" => {
+                    self.sum += arg.as_scalar()?;
+                    self.n += 1;
+                    Ok(Payload::Scalar(self.sum / self.n as f64))
+                }
+                "mean" => Ok(Payload::Scalar(if self.n == 0 {
+                    0.0
+                } else {
+                    self.sum / self.n as f64
+                })),
+                other => Err(NexusError::Raylet(format!("no method '{other}'"))),
+            }
+        }
+    }
+
+    #[test]
+    fn stateful_calls_in_order() {
+        let a = spawn("mean", MeanActor { sum: 0.0, n: 0 });
+        for i in 1..=10 {
+            a.call("add", Payload::Scalar(i as f64));
+        }
+        let mean = a.ask("mean", Payload::Empty).unwrap().as_scalar().unwrap();
+        assert_eq!(mean, 5.5);
+    }
+
+    #[test]
+    fn async_refs_resolve() {
+        let a = spawn("mean", MeanActor { sum: 0.0, n: 0 });
+        let refs: Vec<CallRef> =
+            (1..=4).map(|i| a.call("add", Payload::Scalar(i as f64))).collect();
+        // running means 1, 1.5, 2, 2.5 — order preserved
+        let means: Vec<f64> =
+            refs.iter().map(|r| a.get(r).unwrap().as_scalar().unwrap()).collect();
+        assert_eq!(means, vec![1.0, 1.5, 2.0, 2.5]);
+    }
+
+    #[test]
+    fn unknown_method_is_error_not_crash() {
+        let a = spawn("mean", MeanActor { sum: 0.0, n: 0 });
+        assert!(a.ask("nope", Payload::Empty).is_err());
+        // actor still alive
+        assert!(a.ask("mean", Payload::Empty).is_ok());
+    }
+
+    #[test]
+    fn stop_is_idempotent_and_joins() {
+        let a = spawn("mean", MeanActor { sum: 0.0, n: 0 });
+        a.ask("add", Payload::Scalar(1.0)).unwrap();
+        a.stop();
+        a.stop();
+    }
+}

@@ -1,0 +1,343 @@
+//! The Ray-like user API: one facade over both executors.
+//!
+//! Coordinator code (crossfit, tune, benches) is written once against
+//! [`RayContext`]; whether it runs on real threads, the virtual-time
+//! cluster, or inline (the paper's sequential EconML baseline) is a
+//! config knob — exactly the property the paper's DML vs DML_Ray
+//! comparison needs: *the same task graph*, different executors.
+
+use std::sync::Arc;
+
+use crate::config::ClusterConfig;
+use crate::error::Result;
+use crate::raylet::fault::FaultPlan;
+use crate::raylet::payload::Payload;
+use crate::raylet::pool::{PoolMetrics, ThreadPool};
+use crate::raylet::sim::{GanttEntry, SimCluster, SimMetrics};
+use crate::raylet::task::{ObjectRef, TaskFn};
+
+/// Unified executor metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub tasks_run: u64,
+    pub retries: u64,
+    pub failed: u64,
+    pub reconstructions: u64,
+    /// Real seconds for threads/inline; virtual seconds for sim.
+    pub makespan: f64,
+    pub busy_secs: f64,
+    pub overhead_secs: f64,
+    pub transfer_secs: f64,
+    pub bytes_transferred: u64,
+    /// Virtual-time $ cost (sim only).
+    pub cost_dollars: f64,
+}
+
+enum Impl {
+    /// Run tasks inline at submit time — the sequential baseline.
+    Inline(InlineExec),
+    Threads(ThreadPool),
+    Sim(SimCluster),
+}
+
+/// One execution context (≈ a `ray.init`).
+pub struct RayContext {
+    imp: Impl,
+    started: std::time::Instant,
+}
+
+impl RayContext {
+    /// Sequential inline executor (the EconML single-process baseline).
+    pub fn inline() -> RayContext {
+        RayContext { imp: Impl::Inline(InlineExec::default()), started: std::time::Instant::now() }
+    }
+
+    /// Real worker threads.
+    pub fn threads(workers: usize) -> RayContext {
+        RayContext { imp: Impl::Threads(ThreadPool::new(workers)), started: std::time::Instant::now() }
+    }
+
+    pub fn threads_with_faults(workers: usize, fault: FaultPlan) -> RayContext {
+        RayContext {
+            imp: Impl::Threads(ThreadPool::with_faults(workers, fault)),
+            started: std::time::Instant::now(),
+        }
+    }
+
+    /// Virtual-time cluster; `execute` controls whether task bodies run.
+    pub fn sim(cfg: ClusterConfig, execute: bool) -> RayContext {
+        RayContext { imp: Impl::Sim(SimCluster::new(cfg, execute)), started: std::time::Instant::now() }
+    }
+
+    pub fn sim_with_faults(cfg: ClusterConfig, execute: bool, fault: FaultPlan) -> RayContext {
+        RayContext {
+            imp: Impl::Sim(SimCluster::with_faults(cfg, execute, fault)),
+            started: std::time::Instant::now(),
+        }
+    }
+
+    pub fn put(&self, value: Payload) -> ObjectRef {
+        match &self.imp {
+            Impl::Inline(e) => e.put(value),
+            Impl::Threads(p) => p.put(value),
+            Impl::Sim(s) => s.put(value),
+        }
+    }
+
+    /// Put with an explicit byte-size hint (sim dry runs).
+    pub fn put_sized(&self, value: Payload, bytes: usize) -> ObjectRef {
+        match &self.imp {
+            Impl::Sim(s) => s.put_sized(value, bytes),
+            _ => self.put(value),
+        }
+    }
+
+    /// Submit a remote task.
+    pub fn submit(&self, label: &str, args: Vec<ObjectRef>, cost_hint: f64, f: TaskFn) -> ObjectRef {
+        self.submit_sized(label, args, cost_hint, 0, f)
+    }
+
+    /// Submit with a declared output size (sim dry-run transfer modeling).
+    pub fn submit_sized(
+        &self,
+        label: &str,
+        args: Vec<ObjectRef>,
+        cost_hint: f64,
+        out_bytes: usize,
+        f: TaskFn,
+    ) -> ObjectRef {
+        match &self.imp {
+            Impl::Inline(e) => e.submit(label, args, cost_hint, f),
+            Impl::Threads(p) => p.submit(label, args, cost_hint, f),
+            Impl::Sim(s) => s.submit(label, args, cost_hint, out_bytes, f),
+        }
+    }
+
+    pub fn get(&self, r: &ObjectRef) -> Result<Arc<Payload>> {
+        match &self.imp {
+            Impl::Inline(e) => e.get(r),
+            Impl::Threads(p) => p.get(r),
+            Impl::Sim(s) => s.get(r),
+        }
+    }
+
+    pub fn wait_all(&self, refs: &[ObjectRef]) -> Result<()> {
+        for r in refs {
+            self.get(r)?;
+        }
+        Ok(())
+    }
+
+    /// Simulate object loss (thread mode: lineage-reconstruction tests).
+    pub fn drop_object(&self, r: &ObjectRef) -> Result<()> {
+        match &self.imp {
+            Impl::Threads(p) => p.drop_object(r),
+            _ => Err(crate::error::NexusError::Raylet(
+                "drop_object only supported on the thread executor".into(),
+            )),
+        }
+    }
+
+    /// Finish all outstanding work (no-op for inline/threads-get patterns).
+    pub fn drain(&self) -> Result<()> {
+        match &self.imp {
+            Impl::Sim(s) => s.drain(),
+            _ => Ok(()),
+        }
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        match &self.imp {
+            Impl::Inline(e) => {
+                let m = e.metrics();
+                Metrics {
+                    tasks_run: m.tasks_run,
+                    busy_secs: m.busy_secs,
+                    makespan: self.started.elapsed().as_secs_f64(),
+                    ..Default::default()
+                }
+            }
+            Impl::Threads(p) => {
+                let m: PoolMetrics = p.metrics();
+                Metrics {
+                    tasks_run: m.tasks_run,
+                    retries: m.retries,
+                    failed: m.failed,
+                    reconstructions: m.reconstructions,
+                    busy_secs: m.busy_secs,
+                    overhead_secs: m.dispatch_secs,
+                    makespan: self.started.elapsed().as_secs_f64(),
+                    ..Default::default()
+                }
+            }
+            Impl::Sim(s) => {
+                let m: SimMetrics = s.metrics();
+                Metrics {
+                    tasks_run: m.tasks_run,
+                    retries: m.retries,
+                    failed: m.failed,
+                    reconstructions: m.reconstructions,
+                    busy_secs: m.busy_secs,
+                    overhead_secs: m.overhead_secs,
+                    transfer_secs: m.transfer_secs,
+                    bytes_transferred: m.bytes_transferred,
+                    makespan: m.makespan,
+                    cost_dollars: m.cost_dollars(&s.cfg),
+                }
+            }
+        }
+    }
+
+    /// Schedule bars (sim only; empty otherwise).
+    pub fn gantt(&self) -> Vec<GanttEntry> {
+        match &self.imp {
+            Impl::Sim(s) => s.gantt(),
+            _ => Vec::new(),
+        }
+    }
+
+    pub fn mode(&self) -> &'static str {
+        match &self.imp {
+            Impl::Inline(_) => "inline",
+            Impl::Threads(_) => "threads",
+            Impl::Sim(_) => "sim",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Inline executor: tasks run immediately on the caller thread.
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct InlineExec {
+    state: std::sync::Mutex<InlineInner>,
+}
+
+#[derive(Default)]
+struct InlineInner {
+    next_id: u64,
+    store: std::collections::HashMap<u64, Arc<Payload>>,
+    errors: std::collections::HashMap<u64, String>,
+    tasks_run: u64,
+    busy_secs: f64,
+}
+
+impl InlineExec {
+    fn put(&self, value: Payload) -> ObjectRef {
+        let mut st = self.state.lock().unwrap();
+        st.next_id += 1;
+        let id = st.next_id;
+        st.store.insert(id, Arc::new(value));
+        ObjectRef(id)
+    }
+
+    fn submit(&self, label: &str, args: Vec<ObjectRef>, _cost: f64, f: TaskFn) -> ObjectRef {
+        let mut st = self.state.lock().unwrap();
+        st.next_id += 1;
+        let id = st.next_id;
+        let vals: Vec<Arc<Payload>> = args
+            .iter()
+            .filter_map(|a| st.store.get(&a.0).cloned())
+            .collect();
+        if vals.len() != args.len() {
+            st.errors.insert(id, format!("task '{label}': missing argument object"));
+            return ObjectRef(id);
+        }
+        let borrowed: Vec<&Payload> = vals.iter().map(|a| a.as_ref()).collect();
+        let start = std::time::Instant::now();
+        match f(&borrowed) {
+            Ok(v) => {
+                st.store.insert(id, Arc::new(v));
+            }
+            Err(e) => {
+                st.errors.insert(id, format!("task '{label}': {e}"));
+            }
+        }
+        st.busy_secs += start.elapsed().as_secs_f64();
+        st.tasks_run += 1;
+        ObjectRef(id)
+    }
+
+    fn get(&self, r: &ObjectRef) -> Result<Arc<Payload>> {
+        let st = self.state.lock().unwrap();
+        if let Some(v) = st.store.get(&r.0) {
+            return Ok(v.clone());
+        }
+        Err(crate::error::NexusError::Raylet(
+            st.errors
+                .get(&r.0)
+                .cloned()
+                .unwrap_or_else(|| format!("object {} unknown", r.0)),
+        ))
+    }
+
+    fn metrics(&self) -> InlineMetrics {
+        let st = self.state.lock().unwrap();
+        InlineMetrics { tasks_run: st.tasks_run, busy_secs: st.busy_secs }
+    }
+}
+
+struct InlineMetrics {
+    tasks_run: u64,
+    busy_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn add_fn() -> TaskFn {
+        Arc::new(|args: &[&Payload]| {
+            Ok(Payload::Scalar(args.iter().map(|a| a.as_scalar().unwrap()).sum()))
+        })
+    }
+
+    /// The same task graph gives the same answer on all three executors —
+    /// the equivalence the paper's DML vs DML_Ray comparison relies on.
+    #[test]
+    fn executors_agree_on_dag_result() {
+        let run = |ctx: RayContext| -> f64 {
+            let leaves: Vec<ObjectRef> = (0..10)
+                .map(|i| ctx.put(Payload::Scalar(i as f64)))
+                .collect();
+            let mids: Vec<ObjectRef> = leaves
+                .chunks(2)
+                .map(|pair| ctx.submit("add", pair.to_vec(), 0.01, add_fn()))
+                .collect();
+            let root = ctx.submit("add", mids, 0.01, add_fn());
+            ctx.get(&root).unwrap().as_scalar().unwrap()
+        };
+        let want = 45.0;
+        assert_eq!(run(RayContext::inline()), want);
+        assert_eq!(run(RayContext::threads(3)), want);
+        assert_eq!(run(RayContext::sim(ClusterConfig::default(), true)), want);
+    }
+
+    #[test]
+    fn inline_error_propagates() {
+        let ctx = RayContext::inline();
+        let r = ctx.submit(
+            "boom",
+            vec![],
+            0.0,
+            Arc::new(|_: &[&Payload]| Err(crate::error::NexusError::Raylet("x".into()))),
+        );
+        assert!(ctx.get(&r).is_err());
+    }
+
+    #[test]
+    fn metrics_modes() {
+        let ctx = RayContext::inline();
+        ctx.submit("t", vec![], 0.0, add_fn());
+        assert_eq!(ctx.metrics().tasks_run, 1);
+        assert_eq!(ctx.mode(), "inline");
+
+        let sim = RayContext::sim(ClusterConfig::default(), false);
+        sim.submit("t", vec![], 2.0, add_fn());
+        sim.drain().unwrap();
+        let m = sim.metrics();
+        assert!(m.makespan >= 2.0);
+        assert!(m.cost_dollars > 0.0);
+    }
+}

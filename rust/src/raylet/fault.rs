@@ -1,0 +1,82 @@
+//! Failure injection for fault-tolerance testing.
+//!
+//! Thread mode: per-attempt crash probability, drawn deterministically
+//! from (seed, task id, attempt) so failing runs are reproducible.
+//! Sim mode: scripted whole-node failures at virtual times.
+
+/// Failure policy shared by both executors.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Probability a task *attempt* crashes before producing output.
+    pub fail_prob: f64,
+    /// Re-executions allowed per task before it is marked Failed
+    /// (Ray's `max_retries`).
+    pub max_retries: u32,
+    pub seed: u64,
+    /// (virtual time, node id) whole-node failures — sim mode only.
+    pub node_failures: Vec<(f64, usize)>,
+}
+
+impl FaultPlan {
+    /// No failures (the default for production runs).
+    pub fn none() -> FaultPlan {
+        FaultPlan { fail_prob: 0.0, max_retries: 3, seed: 0, node_failures: vec![] }
+    }
+
+    pub fn with_prob(fail_prob: f64, max_retries: u32, seed: u64) -> FaultPlan {
+        FaultPlan { fail_prob, max_retries, seed, node_failures: vec![] }
+    }
+
+    /// Deterministic crash decision for (task, attempt).
+    pub fn should_fail(&self, task_id: u64, attempt: u32) -> bool {
+        if self.fail_prob <= 0.0 {
+            return false;
+        }
+        let h = splitmix(self.seed ^ task_id.wrapping_mul(0x9E3779B97F4A7C15) ^ (attempt as u64) << 32);
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < self.fail_prob
+    }
+}
+
+#[inline]
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_fails() {
+        let f = FaultPlan::none();
+        assert!((0..1000).all(|i| !f.should_fail(i, 0)));
+    }
+
+    #[test]
+    fn deterministic() {
+        let f = FaultPlan::with_prob(0.5, 3, 42);
+        let a: Vec<bool> = (0..100).map(|i| f.should_fail(i, 1)).collect();
+        let b: Vec<bool> = (0..100).map(|i| f.should_fail(i, 1)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rate_is_approximately_right() {
+        let f = FaultPlan::with_prob(0.3, 3, 7);
+        let fails = (0..10_000).filter(|&i| f.should_fail(i, 0)).count();
+        assert!((fails as f64 / 10_000.0 - 0.3).abs() < 0.03, "{fails}");
+    }
+
+    #[test]
+    fn attempts_redraw() {
+        let f = FaultPlan::with_prob(0.5, 3, 9);
+        // across many tasks, attempt 0 and attempt 1 decisions must differ
+        let diff = (0..200)
+            .filter(|&i| f.should_fail(i, 0) != f.should_fail(i, 1))
+            .count();
+        assert!(diff > 50, "{diff}");
+    }
+}

@@ -1,0 +1,43 @@
+//! The mini-Ray substrate: remote tasks, an object store, a DAG
+//! scheduler, a worker pool, lineage-based fault tolerance, and a
+//! discrete-event simulated multi-node cluster.
+//!
+//! The paper's entire contribution is "dispatch the iterative steps of
+//! causal algorithms as Ray remote tasks".  Ray itself is a large C++
+//! system; this module rebuilds the slice of it the paper exercises,
+//! with the same user-facing shape:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use nexus::raylet::{Payload, RayContext};
+//! let ctx = RayContext::threads(4);
+//! let a = ctx.put(Payload::Scalar(2.0));
+//! let b = ctx.submit("square", vec![a], 1e-6, Arc::new(|args: &[&Payload]| {
+//!     let x = args[0].as_scalar()?;
+//!     Ok(Payload::Scalar(x * x))
+//! }));
+//! assert_eq!(ctx.get(&b).unwrap().as_scalar().unwrap(), 4.0);
+//! ```
+//!
+//! Two executors implement the same submission API:
+//!
+//! * [`pool::ThreadPool`] — real OS threads; used for correctness and for
+//!   wall-clock speedup measurements at small scale.
+//! * [`sim::SimCluster`] — virtual-time discrete-event simulation of an
+//!   N-node cluster (slots, network transfers, per-task overhead).  This
+//!   is how the paper's 5-node EC2 runtime figure is reproduced on a
+//!   single-core box: task *costs* are measured from real PJRT
+//!   executions, the *schedule* is simulated.  See DESIGN.md §3.
+
+pub mod payload;
+pub mod task;
+pub mod pool;
+pub mod sim;
+pub mod fault;
+pub mod actor;
+pub mod api;
+
+pub use api::{Metrics, RayContext};
+pub use fault::FaultPlan;
+pub use payload::Payload;
+pub use task::{ObjectRef, TaskFn};

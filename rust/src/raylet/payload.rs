@@ -1,0 +1,136 @@
+//! Values that live in the object store and flow between tasks.
+
+use crate::data::matrix::Matrix;
+use crate::error::{NexusError, Result};
+use crate::runtime::tensor::Tensor;
+
+/// A task argument / result.  Sizes are tracked so the simulated cluster
+/// can model network transfers.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    Scalar(f64),
+    Floats(Vec<f32>),
+    Tensor(Tensor),
+    Tensors(Vec<Tensor>),
+    /// A padded data block (x, y, t, mask) — stored structurally so block
+    /// tasks borrow it zero-copy (the object-store -> kernel hot path).
+    Block(crate::data::partition::RowBlock),
+    /// Placeholder stored by dry-run simulations (timing only, no values).
+    Empty,
+}
+
+impl Payload {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Payload::Scalar(_) => 8,
+            Payload::Floats(v) => v.len() * 4,
+            Payload::Tensor(t) => t.size_bytes(),
+            Payload::Tensors(ts) => ts.iter().map(|t| t.size_bytes()).sum(),
+            Payload::Block(b) => {
+                4 * (b.x.rows() * b.x.cols() + b.y.len() + b.t.len() + b.mask.len())
+            }
+            Payload::Empty => 0,
+        }
+    }
+
+    pub fn as_scalar(&self) -> Result<f64> {
+        match self {
+            Payload::Scalar(x) => Ok(*x),
+            Payload::Tensor(t) => Ok(t.as_scalar()? as f64),
+            other => Err(NexusError::Raylet(format!("expected scalar, got {}", other.kind()))),
+        }
+    }
+
+    pub fn as_floats(&self) -> Result<&[f32]> {
+        match self {
+            Payload::Floats(v) => Ok(v),
+            Payload::Tensor(t) => Ok(&t.data),
+            other => Err(NexusError::Raylet(format!("expected floats, got {}", other.kind()))),
+        }
+    }
+
+    pub fn as_tensor(&self) -> Result<&Tensor> {
+        match self {
+            Payload::Tensor(t) => Ok(t),
+            other => Err(NexusError::Raylet(format!("expected tensor, got {}", other.kind()))),
+        }
+    }
+
+    pub fn as_tensors(&self) -> Result<&[Tensor]> {
+        match self {
+            Payload::Tensors(ts) => Ok(ts),
+            other => Err(NexusError::Raylet(format!("expected tensors, got {}", other.kind()))),
+        }
+    }
+
+    pub fn as_matrix(&self) -> Result<Matrix> {
+        self.as_tensor()?.to_matrix()
+    }
+
+    pub fn as_block(&self) -> Result<&crate::data::partition::RowBlock> {
+        match self {
+            Payload::Block(b) => Ok(b),
+            other => Err(NexusError::Raylet(format!("expected block, got {}", other.kind()))),
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::Scalar(_) => "scalar",
+            Payload::Floats(_) => "floats",
+            Payload::Tensor(_) => "tensor",
+            Payload::Tensors(_) => "tensors",
+            Payload::Block(_) => "block",
+            Payload::Empty => "empty",
+        }
+    }
+}
+
+impl From<Tensor> for Payload {
+    fn from(t: Tensor) -> Payload {
+        Payload::Tensor(t)
+    }
+}
+
+impl From<Vec<Tensor>> for Payload {
+    fn from(ts: Vec<Tensor>) -> Payload {
+        Payload::Tensors(ts)
+    }
+}
+
+impl From<f64> for Payload {
+    fn from(x: f64) -> Payload {
+        Payload::Scalar(x)
+    }
+}
+
+impl From<Vec<f32>> for Payload {
+    fn from(v: Vec<f32>) -> Payload {
+        Payload::Floats(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(Payload::Scalar(1.0).size_bytes(), 8);
+        assert_eq!(Payload::Floats(vec![0.0; 10]).size_bytes(), 40);
+        let t = Tensor { shape: vec![2, 3], data: vec![0.0; 6] };
+        assert_eq!(Payload::Tensor(t.clone()).size_bytes(), 24);
+        assert_eq!(Payload::Tensors(vec![t.clone(), t]).size_bytes(), 48);
+        assert_eq!(Payload::Empty.size_bytes(), 0);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        assert_eq!(Payload::Scalar(2.5).as_scalar().unwrap(), 2.5);
+        assert!(Payload::Scalar(1.0).as_tensor().is_err());
+        let p: Payload = vec![1.0f32, 2.0].into();
+        assert_eq!(p.as_floats().unwrap(), &[1.0, 2.0]);
+        let t = Tensor::scalar(3.0);
+        assert_eq!(Payload::Tensor(t).as_scalar().unwrap(), 3.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Task specs, object references, and the lineage registry.
+//!
+//! Every submitted task produces exactly one object.  The spec (function
+//! + argument refs) is retained after completion: that is the *lineage*
+//! Ray uses for fault tolerance — if an object is lost, its producing
+//! task re-executes, recursively reconstructing missing arguments first.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::raylet::payload::Payload;
+
+/// Handle to a (possibly not-yet-computed) object in the store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ObjectRef(pub u64);
+
+/// The function a task runs.  Plain data in, plain data out; shared so
+/// lineage can re-invoke it.  Arguments are borrowed from the object
+/// store (no copies on the hot path).
+pub type TaskFn = Arc<dyn Fn(&[&Payload]) -> Result<Payload> + Send + Sync>;
+
+/// An immutable task description (the lineage record).
+#[derive(Clone)]
+pub struct TaskSpec {
+    /// The object this task produces (doubles as the task id).
+    pub out: ObjectRef,
+    pub label: String,
+    pub args: Vec<ObjectRef>,
+    pub func: TaskFn,
+    /// Estimated execution seconds — drives the simulated executor;
+    /// ignored by the thread pool.
+    pub cost_hint: f64,
+}
+
+/// Mutable scheduling state attached to a task.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TaskStatus {
+    /// Waiting on `missing_deps` arguments.
+    Pending,
+    /// In the ready queue / running.
+    Ready,
+    /// Output stored.
+    Done,
+    /// Permanently failed (retries exhausted); error text kept.
+    Failed(String),
+}
+
+pub struct TaskState {
+    pub spec: TaskSpec,
+    pub status: TaskStatus,
+    pub missing_deps: usize,
+    pub attempts: u32,
+    /// Tasks waiting on this task's output.
+    pub dependents: Vec<ObjectRef>,
+}
+
+impl TaskState {
+    pub fn new(spec: TaskSpec, missing_deps: usize) -> TaskState {
+        let status = if missing_deps == 0 { TaskStatus::Ready } else { TaskStatus::Pending };
+        TaskState { spec, status, missing_deps, attempts: 0, dependents: Vec::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_iff_no_missing_deps() {
+        let f: TaskFn = Arc::new(|_: &[&Payload]| Ok(Payload::Scalar(0.0)));
+        let spec = TaskSpec {
+            out: ObjectRef(1),
+            label: "t".into(),
+            args: vec![],
+            func: f.clone(),
+            cost_hint: 0.0,
+        };
+        assert_eq!(TaskState::new(spec.clone(), 0).status, TaskStatus::Ready);
+        assert_eq!(TaskState::new(spec, 2).status, TaskStatus::Pending);
+    }
+}

@@ -1,0 +1,204 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.  `make artifacts` writes `artifacts/manifest.json` listing
+//! every compiled graph with its exact input/output shapes; this module
+//! indexes it and answers "which artifact serves (kind, b, d) under impl X".
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{NexusError, Result};
+use crate::util::json;
+
+/// One AOT-compiled graph.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    /// "pallas" (L1 kernels inside) or "jnp" (plain contractions).
+    pub impl_: String,
+    /// File name under the artifact dir.
+    pub file: String,
+    /// (b, d) for block graphs, (d,) for solve, (b, p) for final stage.
+    pub dims: Vec<usize>,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest with lookup indices.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+    /// Shipped block sizes (ascending).
+    pub block_b: Vec<usize>,
+    /// Shipped covariate widths (ascending).
+    pub dims_d: Vec<usize>,
+    /// Shipped final-stage widths (ascending).
+    pub dims_p: Vec<usize>,
+    /// Shipped solve widths (ascending).
+    pub solve_d: Vec<usize>,
+    by_key: BTreeMap<(String, Vec<usize>, String), usize>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let root = json::parse_file(&dir.join("manifest.json"))?;
+        let version = root.req("version")?.as_i64()?;
+        if version != 1 {
+            return Err(NexusError::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let mut entries = Vec::new();
+        let mut by_key = BTreeMap::new();
+        for e in root.req("artifacts")?.as_arr()? {
+            let entry = ArtifactEntry {
+                name: e.req("name")?.as_str()?.to_string(),
+                kind: e.req("kind")?.as_str()?.to_string(),
+                impl_: e.req("impl")?.as_str()?.to_string(),
+                file: e.req("file")?.as_str()?.to_string(),
+                dims: e.req("dims")?.as_shape()?,
+                inputs: e
+                    .req("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_shape())
+                    .collect::<Result<_>>()?,
+                outputs: e
+                    .req("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_shape())
+                    .collect::<Result<_>>()?,
+            };
+            by_key.insert(
+                (entry.kind.clone(), entry.dims.clone(), entry.impl_.clone()),
+                entries.len(),
+            );
+            entries.push(entry);
+        }
+        let shape_list = |key: &str| -> Result<Vec<usize>> {
+            let mut v = root.req(key)?.as_shape()?;
+            v.sort_unstable();
+            Ok(v)
+        };
+        Ok(Manifest {
+            dir,
+            block_b: shape_list("block_b")?,
+            dims_d: shape_list("dims_d")?,
+            dims_p: shape_list("dims_p")?,
+            solve_d: shape_list("solve_d")?,
+            entries,
+            by_key,
+        })
+    }
+
+    /// Exact lookup.
+    pub fn find(&self, kind: &str, dims: &[usize], impl_: &str) -> Result<&ArtifactEntry> {
+        self.by_key
+            .get(&(kind.to_string(), dims.to_vec(), impl_.to_string()))
+            .map(|&i| &self.entries[i])
+            .ok_or_else(|| {
+                NexusError::Artifact(format!(
+                    "no artifact for kind={kind} dims={dims:?} impl={impl_}"
+                ))
+            })
+    }
+
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Smallest shipped covariate width >= raw (raw includes intercept).
+    pub fn pick_d(&self, raw: usize) -> Result<usize> {
+        self.dims_d
+            .iter()
+            .copied()
+            .find(|&d| d >= raw)
+            .ok_or_else(|| {
+                NexusError::Artifact(format!(
+                    "covariate width {raw} exceeds largest shipped artifact ({:?})",
+                    self.dims_d
+                ))
+            })
+    }
+
+    /// Smallest shipped final-stage width >= raw.
+    pub fn pick_p(&self, raw: usize) -> Result<usize> {
+        self.dims_p
+            .iter()
+            .copied()
+            .find(|&p| p >= raw)
+            .ok_or_else(|| {
+                NexusError::Artifact(format!(
+                    "final-stage width {raw} exceeds shipped ({:?})",
+                    self.dims_p
+                ))
+            })
+    }
+
+    /// Smallest shipped solve width >= raw.
+    pub fn pick_solve_d(&self, raw: usize) -> Result<usize> {
+        self.solve_d
+            .iter()
+            .copied()
+            .find(|&d| d >= raw)
+            .ok_or_else(|| {
+                NexusError::Artifact(format!("solve width {raw} exceeds shipped ({:?})", self.solve_d))
+            })
+    }
+
+    /// Default artifact directory: `$NEXUS_ARTIFACTS` or `<crate>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("NEXUS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Manifest::load(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = manifest() else { return };
+        assert!(!m.entries.is_empty());
+        assert!(m.block_b.contains(&256));
+        // every entry's file exists
+        for e in &m.entries {
+            assert!(m.path_of(e).exists(), "{} missing", e.file);
+        }
+    }
+
+    #[test]
+    fn exact_lookup_and_misses() {
+        let Some(m) = manifest() else { return };
+        let e = m.find("gram", &[256, 16], "pallas").unwrap();
+        assert_eq!(e.inputs[0], vec![256, 16]);
+        assert_eq!(e.outputs[0], vec![16, 16]);
+        assert!(m.find("gram", &[256, 17], "pallas").is_err());
+        assert!(m.find("nope", &[256, 16], "pallas").is_err());
+    }
+
+    #[test]
+    fn pick_widths() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.pick_d(10).unwrap(), 16);
+        assert_eq!(m.pick_d(16).unwrap(), 16);
+        assert_eq!(m.pick_d(17).unwrap(), 64);
+        assert_eq!(m.pick_d(501).unwrap(), 512);
+        assert!(m.pick_d(513).is_err());
+        assert_eq!(m.pick_p(2).unwrap(), 2);
+        assert_eq!(m.pick_p(3).unwrap(), 8);
+    }
+}

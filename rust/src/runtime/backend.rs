@@ -1,0 +1,445 @@
+//! Typed kernel interface over the runtime.
+//!
+//! The models/causal layers call [`KernelExec`] methods; two
+//! implementations exist:
+//!
+//! * [`PjrtBackend`] — the production path: each call executes an AOT
+//!   artifact through the PJRT engine.  Block inputs must already be at
+//!   shipped shapes (the partition layer produces exact blocks); small
+//!   one-off ops (`ridge_solve`, final stage) are padded here.
+//! * [`HostBackend`] — pure-rust `linalg` fallback: exact same contracts,
+//!   no artifacts needed.  Used by unit tests, as the cross-check oracle,
+//!   and for tiny problems where PJRT dispatch overhead dominates.
+
+use crate::data::matrix::Matrix;
+use crate::error::{NexusError, Result};
+use crate::linalg;
+use crate::runtime::engine::Engine;
+use crate::runtime::tensor::Tensor;
+
+/// Typed kernel calls shared by every backend.  All `&self`; impls must be
+/// thread-safe (`Send + Sync`) so raylet tasks can share one instance.
+pub trait KernelExec: Send + Sync {
+    /// (X'X, X'y, n) over a masked block.
+    fn gram_block(&self, x: &Matrix, y: &[f32], mask: &[f32]) -> Result<(Matrix, Vec<f32>, f32)>;
+
+    /// beta = (G + diag(lam))^-1 b.
+    fn ridge_solve(&self, g: &Matrix, b: &[f32], lam: &[f32]) -> Result<Vec<f32>>;
+
+    /// X beta.
+    fn predict(&self, x: &Matrix, beta: &[f32]) -> Result<Vec<f32>>;
+
+    /// sigmoid(X beta).
+    fn predict_proba(&self, x: &Matrix, beta: &[f32]) -> Result<Vec<f32>>;
+
+    /// IRLS partials (H, c, nll).
+    fn irls_block(
+        &self,
+        x: &Matrix,
+        t: &[f32],
+        mask: &[f32],
+        beta: &[f32],
+    ) -> Result<(Matrix, Vec<f32>, f32)>;
+
+    /// Fused residuals (y - Xb_y, t - sigmoid(Xb_t)).
+    fn residual_block(
+        &self,
+        x: &Matrix,
+        y: &[f32],
+        t: &[f32],
+        beta_y: &[f32],
+        beta_t: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Final-stage normal-equation partials (M, v).
+    fn final_moments(
+        &self,
+        y_res: &[f32],
+        t_res: &[f32],
+        phi: &Matrix,
+        mask: &[f32],
+    ) -> Result<(Matrix, Vec<f32>)>;
+
+    /// Final-stage HC meat partial S.
+    fn final_score(
+        &self,
+        y_res: &[f32],
+        t_res: &[f32],
+        phi: &Matrix,
+        theta: &[f32],
+        mask: &[f32],
+    ) -> Result<Matrix>;
+
+    /// Human-readable backend name (for reports).
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// Host backend
+// ---------------------------------------------------------------------------
+
+/// Pure-rust backend over `linalg` — no artifacts required.
+#[derive(Clone, Default)]
+pub struct HostBackend;
+
+impl KernelExec for HostBackend {
+    fn gram_block(&self, x: &Matrix, y: &[f32], mask: &[f32]) -> Result<(Matrix, Vec<f32>, f32)> {
+        Ok(linalg::graphs::gram_block(x, y, mask))
+    }
+
+    fn ridge_solve(&self, g: &Matrix, b: &[f32], lam: &[f32]) -> Result<Vec<f32>> {
+        linalg::ridge_solve(g, b, lam)
+    }
+
+    fn predict(&self, x: &Matrix, beta: &[f32]) -> Result<Vec<f32>> {
+        Ok(linalg::mat_vec(x, beta))
+    }
+
+    fn predict_proba(&self, x: &Matrix, beta: &[f32]) -> Result<Vec<f32>> {
+        Ok(linalg::mat_vec(x, beta)
+            .into_iter()
+            .map(crate::data::synth::sigmoid)
+            .collect())
+    }
+
+    fn irls_block(
+        &self,
+        x: &Matrix,
+        t: &[f32],
+        mask: &[f32],
+        beta: &[f32],
+    ) -> Result<(Matrix, Vec<f32>, f32)> {
+        Ok(linalg::graphs::irls_block(x, t, mask, beta))
+    }
+
+    fn residual_block(
+        &self,
+        x: &Matrix,
+        y: &[f32],
+        t: &[f32],
+        beta_y: &[f32],
+        beta_t: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        Ok(linalg::graphs::residual_block(x, y, t, beta_y, beta_t))
+    }
+
+    fn final_moments(
+        &self,
+        y_res: &[f32],
+        t_res: &[f32],
+        phi: &Matrix,
+        mask: &[f32],
+    ) -> Result<(Matrix, Vec<f32>)> {
+        Ok(linalg::graphs::final_moments(y_res, t_res, phi, mask))
+    }
+
+    fn final_score(
+        &self,
+        y_res: &[f32],
+        t_res: &[f32],
+        phi: &Matrix,
+        theta: &[f32],
+        mask: &[f32],
+    ) -> Result<Matrix> {
+        Ok(linalg::graphs::final_score(y_res, t_res, phi, theta, mask))
+    }
+
+    fn name(&self) -> &'static str {
+        "host"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// AOT-artifact backend: every call is one PJRT execution.
+#[derive(Clone)]
+pub struct PjrtBackend {
+    pub engine: Engine,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: Engine) -> PjrtBackend {
+        PjrtBackend { engine }
+    }
+
+    fn block_dims(&self, x: &Matrix, kind: &str) -> Result<Vec<usize>> {
+        let dims = vec![x.rows(), x.cols()];
+        // Validate against shipped shapes early for a clear error.
+        self.engine.entry(kind, &dims)?;
+        Ok(dims)
+    }
+}
+
+impl KernelExec for PjrtBackend {
+    fn gram_block(&self, x: &Matrix, y: &[f32], mask: &[f32]) -> Result<(Matrix, Vec<f32>, f32)> {
+        let dims = self.block_dims(x, "gram")?;
+        let out = self.engine.run_slices(
+            "gram",
+            &dims,
+            &[(x.data(), &dims), (y, &dims[..1]), (mask, &dims[..1])],
+        )?;
+        let n = out[2].as_scalar()?;
+        let mut it = out.into_iter();
+        let g = it.next().unwrap().into_matrix()?;
+        let b = it.next().unwrap().data;
+        Ok((g, b, n))
+    }
+
+    fn ridge_solve(&self, g: &Matrix, b: &[f32], lam: &[f32]) -> Result<Vec<f32>> {
+        let d_raw = g.rows();
+        let d = self.engine.manifest.pick_solve_d(d_raw)?;
+        // pad: G -> D x D with unit diagonal, b -> 0, lam -> 1 on padding
+        let (gp, bp, lamp) = if d == d_raw {
+            (g.clone(), b.to_vec(), lam.to_vec())
+        } else {
+            let mut gp = Matrix::zeros(d, d);
+            for i in 0..d_raw {
+                for j in 0..d_raw {
+                    gp.set(i, j, g.get(i, j));
+                }
+            }
+            for i in d_raw..d {
+                gp.set(i, i, 1.0);
+            }
+            let mut bp = b.to_vec();
+            bp.resize(d, 0.0);
+            let mut lamp = lam.to_vec();
+            lamp.resize(d, 1.0);
+            (gp, bp, lamp)
+        };
+        let out = self.engine.run(
+            "solve",
+            &[d],
+            &[Tensor::from_matrix(&gp), Tensor::vector(bp), Tensor::vector(lamp)],
+        )?;
+        Ok(out[0].data[..d_raw].to_vec())
+    }
+
+    fn predict(&self, x: &Matrix, beta: &[f32]) -> Result<Vec<f32>> {
+        let dims = self.block_dims(x, "predict")?;
+        let out = self
+            .engine
+            .run_slices("predict", &dims, &[(x.data(), &dims), (beta, &dims[1..])])?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+
+    fn predict_proba(&self, x: &Matrix, beta: &[f32]) -> Result<Vec<f32>> {
+        let dims = self.block_dims(x, "predict_proba")?;
+        let out = self
+            .engine
+            .run_slices("predict_proba", &dims, &[(x.data(), &dims), (beta, &dims[1..])])?;
+        Ok(out.into_iter().next().unwrap().data)
+    }
+
+    fn irls_block(
+        &self,
+        x: &Matrix,
+        t: &[f32],
+        mask: &[f32],
+        beta: &[f32],
+    ) -> Result<(Matrix, Vec<f32>, f32)> {
+        let dims = self.block_dims(x, "irls")?;
+        let out = self.engine.run_slices(
+            "irls",
+            &dims,
+            &[
+                (x.data(), &dims),
+                (t, &dims[..1]),
+                (mask, &dims[..1]),
+                (beta, &dims[1..]),
+            ],
+        )?;
+        let nll = out[2].as_scalar()?;
+        let mut it = out.into_iter();
+        let h = it.next().unwrap().into_matrix()?;
+        let c = it.next().unwrap().data;
+        Ok((h, c, nll))
+    }
+
+    fn residual_block(
+        &self,
+        x: &Matrix,
+        y: &[f32],
+        t: &[f32],
+        beta_y: &[f32],
+        beta_t: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let dims = self.block_dims(x, "residual")?;
+        let out = self.engine.run_slices(
+            "residual",
+            &dims,
+            &[
+                (x.data(), &dims),
+                (y, &dims[..1]),
+                (t, &dims[..1]),
+                (beta_y, &dims[1..]),
+                (beta_t, &dims[1..]),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let yr = it.next().unwrap().data;
+        let tr = it.next().unwrap().data;
+        Ok((yr, tr))
+    }
+
+    fn final_moments(
+        &self,
+        y_res: &[f32],
+        t_res: &[f32],
+        phi: &Matrix,
+        mask: &[f32],
+    ) -> Result<(Matrix, Vec<f32>)> {
+        let dims = vec![phi.rows(), phi.cols()];
+        let out = self.engine.run_slices(
+            "final_moments",
+            &dims,
+            &[
+                (y_res, &dims[..1]),
+                (t_res, &dims[..1]),
+                (phi.data(), &dims),
+                (mask, &dims[..1]),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let m = it.next().unwrap().into_matrix()?;
+        let v = it.next().unwrap().data;
+        Ok((m, v))
+    }
+
+    fn final_score(
+        &self,
+        y_res: &[f32],
+        t_res: &[f32],
+        phi: &Matrix,
+        theta: &[f32],
+        mask: &[f32],
+    ) -> Result<Matrix> {
+        let dims = vec![phi.rows(), phi.cols()];
+        let out = self.engine.run_slices(
+            "final_score",
+            &dims,
+            &[
+                (y_res, &dims[..1]),
+                (t_res, &dims[..1]),
+                (phi.data(), &dims),
+                (theta, &dims[1..]),
+                (mask, &dims[..1]),
+            ],
+        )?;
+        out.into_iter().next().unwrap().into_matrix()
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Build the backend selected by name: "host", "pjrt" (jnp family) or
+/// "pjrt-pallas" (L1 kernel family).
+pub fn backend_by_name(name: &str) -> Result<std::sync::Arc<dyn KernelExec>> {
+    match name {
+        "host" => Ok(std::sync::Arc::new(HostBackend)),
+        "pjrt" => Ok(std::sync::Arc::new(PjrtBackend::new(Engine::default_engine()?))),
+        "pjrt-pallas" => {
+            let mut e = Engine::default_engine()?;
+            e.impl_ = "pallas".into();
+            Ok(std::sync::Arc::new(PjrtBackend::new(e)))
+        }
+        other => Err(NexusError::Config(format!("unknown backend '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+    use crate::util::rng::Pcg32;
+
+    fn pjrt() -> Option<PjrtBackend> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(PjrtBackend::new(Engine::default_engine().unwrap()))
+        } else {
+            None
+        }
+    }
+
+    fn randm(seed: u64, n: usize, d: usize) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn pjrt_matches_host_on_every_kernel() {
+        let Some(p) = pjrt() else { return };
+        let h = HostBackend;
+        let (b, d) = (256, 16);
+        let x = randm(10, b, d);
+        let mut rng = Pcg32::new(11);
+        let y: Vec<f32> = (0..b).map(|_| rng.normal_f32()).collect();
+        let t: Vec<f32> = (0..b).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+        let mut mask = vec![1.0f32; b];
+        for m in mask.iter_mut().skip(200) {
+            *m = 0.0;
+        }
+        let beta: Vec<f32> = (0..d).map(|_| 0.2 * rng.normal_f32()).collect();
+        let beta2: Vec<f32> = (0..d).map(|_| 0.2 * rng.normal_f32()).collect();
+
+        // gram
+        let (g1, b1, n1) = p.gram_block(&x, &y, &mask).unwrap();
+        let (g2, b2, n2) = h.gram_block(&x, &y, &mask).unwrap();
+        assert!(g1.max_abs_diff(&g2) < 1e-2);
+        assert!(b1.iter().zip(&b2).all(|(a, c)| (a - c).abs() < 1e-2));
+        assert_eq!(n1, n2);
+
+        // solve (including padding path at d_raw = 10 < 16)
+        let xsub = randm(12, 100, 10);
+        let gsub = crate::linalg::gram(&xsub);
+        let bsub: Vec<f32> = (0..10).map(|i| i as f32 * 0.1).collect();
+        let lam = vec![0.3f32; 10];
+        let s1 = p.ridge_solve(&gsub, &bsub, &lam).unwrap();
+        let s2 = h.ridge_solve(&gsub, &bsub, &lam).unwrap();
+        assert_eq!(s1.len(), 10);
+        assert!(s1.iter().zip(&s2).all(|(a, c)| (a - c).abs() < 1e-2), "{s1:?} vs {s2:?}");
+
+        // predict / predict_proba
+        let p1 = p.predict(&x, &beta).unwrap();
+        let p2 = h.predict(&x, &beta).unwrap();
+        assert!(p1.iter().zip(&p2).all(|(a, c)| (a - c).abs() < 1e-3));
+        let q1 = p.predict_proba(&x, &beta).unwrap();
+        let q2 = h.predict_proba(&x, &beta).unwrap();
+        assert!(q1.iter().zip(&q2).all(|(a, c)| (a - c).abs() < 1e-3));
+
+        // irls
+        let (h1, c1, l1) = p.irls_block(&x, &t, &mask, &beta).unwrap();
+        let (h2, c2, l2) = h.irls_block(&x, &t, &mask, &beta).unwrap();
+        assert!(h1.max_abs_diff(&h2) < 1e-2);
+        assert!(c1.iter().zip(&c2).all(|(a, c)| (a - c).abs() < 1e-2));
+        assert!((l1 - l2).abs() < 0.5, "nll {l1} vs {l2}");
+
+        // residual
+        let (yr1, tr1) = p.residual_block(&x, &y, &t, &beta, &beta2).unwrap();
+        let (yr2, tr2) = h.residual_block(&x, &y, &t, &beta, &beta2).unwrap();
+        assert!(yr1.iter().zip(&yr2).all(|(a, c)| (a - c).abs() < 1e-3));
+        assert!(tr1.iter().zip(&tr2).all(|(a, c)| (a - c).abs() < 1e-3));
+
+        // final stage at p=2
+        let phi = randm(13, b, 2);
+        let theta = vec![0.7f32, -0.2];
+        let (m1, v1) = p.final_moments(&yr1, &tr1, &phi, &mask).unwrap();
+        let (m2, v2) = h.final_moments(&yr2, &tr2, &phi, &mask).unwrap();
+        assert!(m1.max_abs_diff(&m2) < 1e-2);
+        assert!(v1.iter().zip(&v2).all(|(a, c)| (a - c).abs() < 1e-2));
+        let s1m = p.final_score(&yr1, &tr1, &phi, &theta, &mask).unwrap();
+        let s2m = h.final_score(&yr2, &tr2, &phi, &theta, &mask).unwrap();
+        assert!(s1m.max_abs_diff(&s2m) < 1e-2);
+    }
+
+    #[test]
+    fn backend_by_name_resolves() {
+        assert!(backend_by_name("host").is_ok());
+        assert!(backend_by_name("bogus").is_err());
+    }
+}

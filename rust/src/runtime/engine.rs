@@ -1,0 +1,281 @@
+//! PJRT execution engine.
+//!
+//! [`Engine`] is a cheap-to-clone, `Send + Sync` handle carrying only
+//! configuration (artifact dir + manifest + impl family).  The actual
+//! PJRT client and compiled executables live in a thread-local cache:
+//! the `xla` crate's handles wrap raw C pointers (not `Send`), so each
+//! raylet worker thread compiles its own copy of the artifacts it runs —
+//! compile happens once per (thread, artifact), then execution is
+//! pointer-chasing only.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{NexusError, Result};
+use crate::runtime::artifacts::{ArtifactEntry, Manifest};
+use crate::runtime::tensor::Tensor;
+
+/// Global counters for the perf report (compiles are the cold path;
+/// executions are the hot path).
+pub static COMPILE_COUNT: AtomicU64 = AtomicU64::new(0);
+pub static EXECUTE_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Shareable engine handle.
+#[derive(Clone)]
+pub struct Engine {
+    pub manifest: Arc<Manifest>,
+    /// Which artifact family to execute: "jnp" (fast on CPU PJRT) or
+    /// "pallas" (the L1 kernel path, interpret-mode loop HLO).
+    pub impl_: String,
+}
+
+thread_local! {
+    static TL: RefCell<Option<ThreadState>> = const { RefCell::new(None) };
+}
+
+struct ThreadState {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn new(manifest: Arc<Manifest>, impl_: &str) -> Engine {
+        Engine { manifest, impl_: impl_.to_string() }
+    }
+
+    /// Engine over the default artifact dir with the default (fast) family.
+    pub fn default_engine() -> Result<Engine> {
+        let m = Manifest::load(Manifest::default_dir())?;
+        Ok(Engine::new(Arc::new(m), "jnp"))
+    }
+
+    /// Look up the artifact entry for (kind, dims) under this engine's impl
+    /// family; `solve` graphs only exist as "jnp".
+    pub fn entry(&self, kind: &str, dims: &[usize]) -> Result<ArtifactEntry> {
+        let impl_ = if kind == "solve" { "jnp" } else { self.impl_.as_str() };
+        self.manifest.find(kind, dims, impl_).cloned()
+    }
+
+    /// Execute an artifact with the given inputs; returns one [`Tensor`]
+    /// per manifest output.
+    pub fn execute(&self, entry: &ArtifactEntry, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let parts: Vec<(&[f32], &[usize])> =
+            inputs.iter().map(|t| (t.data.as_slice(), t.shape.as_slice())).collect();
+        self.execute_slices(entry, &parts)
+    }
+
+    /// Zero-intermediate-copy execution: inputs as raw (data, shape)
+    /// slices.  Exactly ONE host copy per input happens here (into the
+    /// XLA literal via `create_from_shape_and_untyped_data`); the
+    /// previous path (`Tensor` clone -> `vec1` -> `reshape`) copied
+    /// three times.  See EXPERIMENTS.md §Perf.
+    pub fn execute_slices(
+        &self,
+        entry: &ArtifactEntry,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Tensor>> {
+        if inputs.len() != entry.inputs.len() {
+            return Err(NexusError::Artifact(format!(
+                "{}: expected {} inputs, got {}",
+                entry.name,
+                entry.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, ((data, shape), spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if shape != spec {
+                return Err(NexusError::Artifact(format!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    entry.name, shape, spec
+                )));
+            }
+            if data.len() != spec.iter().product::<usize>().max(1) {
+                return Err(NexusError::Artifact(format!(
+                    "{}: input {i} numel {} != manifest {:?}",
+                    entry.name,
+                    data.len(),
+                    spec
+                )));
+            }
+        }
+
+        TL.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(ThreadState {
+                    client: xla::PjRtClient::cpu()?,
+                    executables: HashMap::new(),
+                });
+            }
+            let state = slot.as_mut().unwrap();
+
+            if !state.executables.contains_key(&entry.name) {
+                let path = self.manifest.path_of(entry);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| NexusError::Artifact("bad path".into()))?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = state.client.compile(&comp)?;
+                state.executables.insert(entry.name.clone(), exe);
+                COMPILE_COUNT.fetch_add(1, Ordering::Relaxed);
+            }
+            let exe = &state.executables[&entry.name];
+
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, shape)| {
+                    let bytes: &[u8] = unsafe {
+                        std::slice::from_raw_parts(
+                            data.as_ptr() as *const u8,
+                            std::mem::size_of_val(*data),
+                        )
+                    };
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::F32,
+                        shape,
+                        bytes,
+                    )
+                    .map_err(NexusError::from)
+                })
+                .collect::<Result<_>>()?;
+
+            let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+            EXECUTE_COUNT.fetch_add(1, Ordering::Relaxed);
+            // aot.py lowers with return_tuple=True: always a tuple.
+            let parts = result.to_tuple()?;
+            if parts.len() != entry.outputs.len() {
+                return Err(NexusError::Artifact(format!(
+                    "{}: expected {} outputs, got {}",
+                    entry.name,
+                    entry.outputs.len(),
+                    parts.len()
+                )));
+            }
+            parts
+                .into_iter()
+                .zip(&entry.outputs)
+                .map(|(lit, shape)| {
+                    let data = if shape.iter().product::<usize>() == 0 && shape.is_empty() {
+                        vec![lit.get_first_element::<f32>()?]
+                    } else {
+                        lit.to_vec::<f32>()?
+                    };
+                    let expect: usize = shape.iter().product();
+                    if data.len() != expect.max(1) {
+                        return Err(NexusError::Artifact(format!(
+                            "{}: output numel {} != manifest {:?}",
+                            entry.name,
+                            data.len(),
+                            shape
+                        )));
+                    }
+                    Ok(Tensor { shape: shape.clone(), data })
+                })
+                .collect()
+        })
+    }
+
+    /// Convenience: look up + execute.
+    pub fn run(&self, kind: &str, dims: &[usize], inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let entry = self.entry(kind, dims)?;
+        self.execute(&entry, inputs)
+    }
+
+    /// Convenience: look up + execute from raw slices (hot path).
+    pub fn run_slices(
+        &self,
+        kind: &str,
+        dims: &[usize],
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Tensor>> {
+        let entry = self.entry(kind, dims)?;
+        self.execute_slices(&entry, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::matrix::Matrix;
+    use crate::linalg;
+    use crate::util::rng::Pcg32;
+
+    fn engine() -> Option<Engine> {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Engine::default_engine().unwrap())
+        } else {
+            None
+        }
+    }
+
+    fn randm(seed: u64, n: usize, d: usize) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn gram_artifact_matches_linalg() {
+        let Some(e) = engine() else { return };
+        let x = randm(1, 256, 16);
+        let y: Vec<f32> = (0..256).map(|i| (i as f32).sin()).collect();
+        let mask = vec![1.0f32; 256];
+        let out = e
+            .run(
+                "gram",
+                &[256, 16],
+                &[Tensor::from_matrix(&x), Tensor::vector(y.clone()), Tensor::vector(mask.clone())],
+            )
+            .unwrap();
+        let (g_ref, b_ref, n_ref) = linalg::graphs::gram_block(&x, &y, &mask);
+        let g = out[0].to_matrix().unwrap();
+        assert!(g.max_abs_diff(&g_ref) < 1e-2, "diff={}", g.max_abs_diff(&g_ref));
+        for (a, b) in out[1].data.iter().zip(&b_ref) {
+            assert!((a - b).abs() < 1e-2);
+        }
+        assert_eq!(out[2].as_scalar().unwrap(), n_ref);
+    }
+
+    #[test]
+    fn pallas_family_matches_jnp_family() {
+        let Some(e) = engine() else { return };
+        let ep = Engine::new(e.manifest.clone(), "pallas");
+        let x = randm(2, 256, 16);
+        let y = vec![1.0f32; 256];
+        let mask = vec![1.0f32; 256];
+        let inputs = [Tensor::from_matrix(&x), Tensor::vector(y), Tensor::vector(mask)];
+        let a = e.run("gram", &[256, 16], &inputs).unwrap();
+        let b = ep.run("gram", &[256, 16], &inputs).unwrap();
+        let diff = a[0].to_matrix().unwrap().max_abs_diff(&b[0].to_matrix().unwrap());
+        assert!(diff < 1e-3, "pallas vs jnp diff={diff}");
+    }
+
+    #[test]
+    fn solve_artifact_matches_linalg() {
+        let Some(e) = engine() else { return };
+        let x = randm(3, 100, 16);
+        let g = linalg::gram(&x);
+        let b: Vec<f32> = (0..16).map(|i| (i as f32).cos()).collect();
+        let lam = vec![0.5f32; 16];
+        let out = e
+            .run(
+                "solve",
+                &[16],
+                &[Tensor::from_matrix(&g), Tensor::vector(b.clone()), Tensor::vector(lam.clone())],
+            )
+            .unwrap();
+        let want = linalg::ridge_solve(&g, &b, &lam).unwrap();
+        for (a, w) in out[0].data.iter().zip(&want) {
+            assert!((a - w).abs() < 1e-2, "{:?} vs {:?}", out[0].data, want);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let Some(e) = engine() else { return };
+        let bad = [Tensor::from_matrix(&randm(4, 256, 8))];
+        assert!(e.run("gram", &[256, 16], &bad).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT-compiled XLA artifacts and execute them
+//! from the rust hot path.  Python never runs here — `make artifacts`
+//! produced HLO text once; this module compiles and caches executables
+//! per worker thread (the `xla` crate's PJRT handles wrap raw pointers
+//! and are not `Send`, so each worker owns its own client).
+
+pub mod tensor;
+pub mod artifacts;
+pub mod engine;
+pub mod backend;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use backend::{HostBackend, KernelExec, PjrtBackend};
+pub use engine::Engine;
+pub use tensor::Tensor;

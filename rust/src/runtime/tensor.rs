@@ -1,0 +1,107 @@
+//! The dense f32 tensor that crosses the object store and PJRT boundary.
+
+use crate::data::matrix::Matrix;
+use crate::error::{NexusError, Result};
+
+/// Shape + row-major f32 data.  Rank 0 = scalar, rank 1 = vector,
+/// rank 2 = matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vector(v: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![v.len()], data: v }
+    }
+
+    pub fn from_matrix(m: &Matrix) -> Tensor {
+        Tensor { shape: vec![m.rows(), m.cols()], data: m.data().to_vec() }
+    }
+
+    /// Move a matrix's storage into a tensor (no copy).
+    pub fn from_matrix_owned(m: Matrix) -> Tensor {
+        let shape = vec![m.rows(), m.cols()];
+        Tensor { shape, data: m.into_data() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * std::mem::size_of::<f32>()
+    }
+
+    pub fn as_scalar(&self) -> Result<f32> {
+        if self.numel() != 1 {
+            return Err(NexusError::Data(format!(
+                "expected scalar, shape {:?}",
+                self.shape
+            )));
+        }
+        Ok(self.data[0])
+    }
+
+    pub fn as_vector(&self) -> Result<&[f32]> {
+        if self.shape.len() > 1 {
+            return Err(NexusError::Data(format!(
+                "expected vector, shape {:?}",
+                self.shape
+            )));
+        }
+        Ok(&self.data)
+    }
+
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        if self.shape.len() != 2 {
+            return Err(NexusError::Data(format!(
+                "expected matrix, shape {:?}",
+                self.shape
+            )));
+        }
+        Matrix::from_vec(self.shape[0], self.shape[1], self.data.clone())
+    }
+
+    /// Move the storage into a matrix (no copy).
+    pub fn into_matrix(self) -> Result<Matrix> {
+        if self.shape.len() != 2 {
+            return Err(NexusError::Data(format!(
+                "expected matrix, shape {:?}",
+                self.shape
+            )));
+        }
+        Matrix::from_vec(self.shape[0], self.shape[1], self.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        assert_eq!(Tensor::scalar(2.5).as_scalar().unwrap(), 2.5);
+        let v = Tensor::vector(vec![1.0, 2.0]);
+        assert_eq!(v.as_vector().unwrap(), &[1.0, 2.0]);
+        assert_eq!(v.numel(), 2);
+        assert_eq!(v.size_bytes(), 8);
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let t = Tensor::from_matrix(&m);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.to_matrix().unwrap(), m);
+    }
+
+    #[test]
+    fn type_errors() {
+        assert!(Tensor::vector(vec![1.0, 2.0]).as_scalar().is_err());
+        assert!(Tensor::scalar(1.0).to_matrix().is_err());
+        let m = Tensor::from_matrix(&Matrix::zeros(2, 2));
+        assert!(m.as_vector().is_err());
+    }
+}

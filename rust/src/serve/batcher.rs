@@ -1,0 +1,117 @@
+//! Dynamic batching: coalesce requests up to `max_batch` or `max_delay`,
+//! whichever comes first — the standard serving trade-off (throughput
+//! from batching vs tail latency from waiting).
+
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_delay: Duration::from_millis(5) }
+    }
+}
+
+/// A pending request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub features: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// An accumulating batch.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    queue: Vec<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, queue: Vec::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should the current queue be flushed now?
+    pub fn should_flush(&self, now: Instant) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        now.duration_since(self.queue[0].enqueued) >= self.policy.max_delay
+    }
+
+    /// Take up to `max_batch` requests.
+    pub fn take_batch(&mut self) -> Vec<Request> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, at: Instant) -> Request {
+        Request { id, features: vec![0.0; 4], enqueued: at }
+    }
+
+    #[test]
+    fn flush_on_size() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_delay: Duration::from_secs(10) });
+        let now = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, now));
+        }
+        assert!(b.should_flush(now));
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flush_on_delay() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_delay: Duration::from_millis(1) });
+        let past = Instant::now() - Duration::from_millis(5);
+        b.push(req(0, past));
+        assert!(b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn no_flush_when_fresh_and_small() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 10, max_delay: Duration::from_secs(1) });
+        b.push(req(0, Instant::now()));
+        assert!(!b.should_flush(Instant::now()));
+        assert!(!b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn take_batch_respects_cap() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_delay: Duration::ZERO });
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, now));
+        }
+        assert_eq!(b.take_batch().len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+}

@@ -1,0 +1,12 @@
+//! CATE serving — the Ray Serve slice of the NEXUS platform (§4:
+//! "efficient deployment and autoscaling capabilities using Ray Serve").
+//!
+//! [`batcher`] coalesces single-row requests into padded blocks for the
+//! compiled predict artifact; [`router`] owns replica dispatch and
+//! latency accounting.
+
+pub mod batcher;
+pub mod router;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use router::{CateModel, Router, ServeStats};

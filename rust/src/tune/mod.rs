@@ -1,0 +1,18 @@
+//! Distributed hyper-parameter tuning — the paper's §5.2 (Ray Tune as a
+//! drop-in for sklearn's grid search inside DML).
+//!
+//! [`space`] declares search spaces, [`search`] generates candidate
+//! configs (grid / random), [`sched`] implements synchronous successive
+//! halving (the ASHA family member that fits a DAG executor), and
+//! [`runner`] executes trials as raylet tasks — serially, on threads, or
+//! on the simulated cluster, which is how Fig 5's serial-vs-distributed
+//! comparison is produced.
+
+pub mod space;
+pub mod search;
+pub mod sched;
+pub mod runner;
+
+pub use runner::{TuneOutcome, TuneRunner, TrialResult};
+pub use search::{GridSearch, RandomSearch, Searcher};
+pub use space::{ParamSpec, SearchSpace, TrialConfig};

@@ -1,0 +1,127 @@
+//! Early-stopping schedulers: synchronous successive halving (SHA, the
+//! synchronous member of the ASHA family) and a median-stopping rule.
+//!
+//! SHA with reduction factor eta: all trials run at the smallest budget;
+//! the top 1/eta advance to an eta-times-larger budget, repeating until
+//! one rung remains.  Total work ~ n_trials * r_min * log_eta levels —
+//! far less than n_trials * r_max, which is the Fig 5 efficiency claim.
+
+/// Budget ladder for successive halving.
+#[derive(Clone, Debug)]
+pub struct ShaSchedule {
+    pub eta: usize,
+    /// Budgets per rung (ascending), e.g. [1, 3, 9] blocks/iters.
+    pub rungs: Vec<usize>,
+}
+
+impl ShaSchedule {
+    /// Geometric ladder from `r_min` to `r_max` with factor `eta`.
+    pub fn geometric(r_min: usize, r_max: usize, eta: usize) -> ShaSchedule {
+        assert!(eta >= 2 && r_min >= 1 && r_max >= r_min);
+        let mut rungs = vec![r_min];
+        let mut r = r_min;
+        while r * eta <= r_max {
+            r *= eta;
+            rungs.push(r);
+        }
+        ShaSchedule { eta, rungs }
+    }
+
+    /// How many of `n` trials survive into rung `level+1`.
+    pub fn survivors(&self, n: usize) -> usize {
+        (n / self.eta).max(1)
+    }
+
+    /// Indices of the trials (by ascending loss) promoted to the next rung.
+    pub fn promote(&self, losses: &[(usize, f64)]) -> Vec<usize> {
+        let mut sorted = losses.to_vec();
+        sorted.sort_by(|a, b| a.1.total_cmp(&b.1));
+        sorted.truncate(self.survivors(losses.len()));
+        sorted.into_iter().map(|(i, _)| i).collect()
+    }
+
+    /// Total budget consumed by SHA over `n` trials (units of rung budget),
+    /// vs the full-budget grid cost — the headline saving.
+    pub fn total_budget(&self, n: usize) -> usize {
+        let mut alive = n;
+        let mut total = 0;
+        for &r in &self.rungs {
+            total += alive * r;
+            alive = self.survivors(alive);
+        }
+        total
+    }
+}
+
+/// Median-stopping rule: stop a trial whose running loss is worse than
+/// the median of completed trials at the same step.
+#[derive(Clone, Debug, Default)]
+pub struct MedianRule {
+    /// Completed losses per step index.
+    history: Vec<Vec<f64>>,
+}
+
+impl MedianRule {
+    pub fn new() -> MedianRule {
+        MedianRule::default()
+    }
+
+    pub fn record(&mut self, step: usize, loss: f64) {
+        if self.history.len() <= step {
+            self.history.resize(step + 1, Vec::new());
+        }
+        self.history[step].push(loss);
+    }
+
+    /// Should a trial with `loss` at `step` be stopped?
+    pub fn should_stop(&self, step: usize, loss: f64) -> bool {
+        let Some(hist) = self.history.get(step) else { return false };
+        if hist.len() < 3 {
+            return false;
+        }
+        let mut v = hist.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let median = v[v.len() / 2];
+        loss > median
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometric_ladder() {
+        let s = ShaSchedule::geometric(1, 9, 3);
+        assert_eq!(s.rungs, vec![1, 3, 9]);
+        assert_eq!(ShaSchedule::geometric(2, 16, 2).rungs, vec![2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn promote_keeps_best() {
+        let s = ShaSchedule::geometric(1, 9, 3);
+        let losses = vec![(0, 0.9), (1, 0.1), (2, 0.5), (3, 0.2), (4, 0.8), (5, 0.3)];
+        let keep = s.promote(&losses);
+        assert_eq!(keep, vec![1, 3]); // top 6/3 = 2
+    }
+
+    #[test]
+    fn sha_budget_beats_full_grid() {
+        let s = ShaSchedule::geometric(1, 9, 3);
+        let n = 27;
+        let sha = s.total_budget(n);
+        let full = n * 9;
+        assert!(sha < full / 2, "sha={sha} full={full}");
+    }
+
+    #[test]
+    fn median_rule() {
+        let mut m = MedianRule::new();
+        for l in [0.1, 0.2, 0.3, 0.4] {
+            m.record(0, l);
+        }
+        assert!(m.should_stop(0, 0.5));
+        assert!(!m.should_stop(0, 0.15));
+        assert!(!m.should_stop(7, 99.0)); // unseen step: no opinion
+    }
+}

@@ -1,0 +1,92 @@
+//! Search algorithms: exhaustive grid and random sampling.
+
+use crate::tune::space::{SearchSpace, TrialConfig};
+use crate::util::rng::Pcg32;
+
+/// A source of candidate configurations.
+pub trait Searcher {
+    /// Next candidate, or None when exhausted.
+    fn next_config(&mut self) -> Option<TrialConfig>;
+    /// Total candidates this searcher will produce (if known).
+    fn len_hint(&self) -> Option<usize>;
+}
+
+/// Exhaustive grid search.
+pub struct GridSearch {
+    configs: Vec<TrialConfig>,
+    cursor: usize,
+}
+
+impl GridSearch {
+    pub fn new(space: &SearchSpace, k_per_continuous: usize) -> GridSearch {
+        GridSearch { configs: space.grid(k_per_continuous), cursor: 0 }
+    }
+}
+
+impl Searcher for GridSearch {
+    fn next_config(&mut self) -> Option<TrialConfig> {
+        let c = self.configs.get(self.cursor).cloned();
+        self.cursor += 1;
+        c
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.configs.len())
+    }
+}
+
+/// Random search with a fixed sample budget.
+pub struct RandomSearch {
+    space: SearchSpace,
+    rng: Pcg32,
+    remaining: usize,
+}
+
+impl RandomSearch {
+    pub fn new(space: SearchSpace, n: usize, seed: u64) -> RandomSearch {
+        RandomSearch { space, rng: Pcg32::with_stream(seed, 0x70E), remaining: n }
+    }
+}
+
+impl Searcher for RandomSearch {
+    fn next_config(&mut self) -> Option<TrialConfig> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        Some(self.space.sample(&mut self.rng))
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.remaining)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::space::ParamSpec;
+
+    #[test]
+    fn grid_search_exhausts() {
+        let space = SearchSpace::new().with("lam", ParamSpec::Grid(vec![1.0, 2.0, 3.0]));
+        let mut s = GridSearch::new(&space, 0);
+        assert_eq!(s.len_hint(), Some(3));
+        let mut seen = Vec::new();
+        while let Some(c) = s.next_config() {
+            seen.push(c.get("lam"));
+        }
+        assert_eq!(seen, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn random_search_budget() {
+        let space = SearchSpace::new().with("x", ParamSpec::Uniform(0.0, 1.0));
+        let mut s = RandomSearch::new(space, 5, 1);
+        let mut n = 0;
+        while s.next_config().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 5);
+    }
+}

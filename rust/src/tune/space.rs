@@ -1,0 +1,153 @@
+//! Search-space declaration: named parameters with grid / continuous
+//! distributions (the `tune_grid_search_reg` / `_clf` analog).
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::Pcg32;
+
+/// One tunable parameter.
+#[derive(Clone, Debug)]
+pub enum ParamSpec {
+    /// Explicit grid values.
+    Grid(Vec<f64>),
+    /// Uniform in [lo, hi].
+    Uniform(f64, f64),
+    /// Log-uniform in [lo, hi] (lo > 0).
+    LogUniform(f64, f64),
+    /// Integer choice in [lo, hi].
+    IntRange(i64, i64),
+}
+
+impl ParamSpec {
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        match self {
+            ParamSpec::Grid(vals) => vals[rng.below(vals.len() as u64) as usize],
+            ParamSpec::Uniform(lo, hi) => rng.range_f64(*lo, *hi),
+            ParamSpec::LogUniform(lo, hi) => {
+                assert!(*lo > 0.0);
+                (rng.range_f64(lo.ln(), hi.ln())).exp()
+            }
+            ParamSpec::IntRange(lo, hi) => (*lo + rng.below((hi - lo + 1) as u64) as i64) as f64,
+        }
+    }
+
+    /// Grid values (grids enumerate; continuous specs discretize to k).
+    pub fn grid_values(&self, k: usize) -> Vec<f64> {
+        match self {
+            ParamSpec::Grid(vals) => vals.clone(),
+            ParamSpec::Uniform(lo, hi) => linspace(*lo, *hi, k),
+            ParamSpec::LogUniform(lo, hi) => {
+                linspace(lo.ln(), hi.ln(), k).into_iter().map(f64::exp).collect()
+            }
+            ParamSpec::IntRange(lo, hi) => (*lo..=*hi).map(|v| v as f64).collect(),
+        }
+    }
+}
+
+fn linspace(lo: f64, hi: f64, k: usize) -> Vec<f64> {
+    if k <= 1 {
+        return vec![lo];
+    }
+    (0..k).map(|i| lo + (hi - lo) * i as f64 / (k - 1) as f64).collect()
+}
+
+/// A named set of parameters.
+#[derive(Clone, Debug, Default)]
+pub struct SearchSpace {
+    pub params: BTreeMap<String, ParamSpec>,
+}
+
+impl SearchSpace {
+    pub fn new() -> SearchSpace {
+        SearchSpace::default()
+    }
+
+    pub fn with(mut self, name: &str, spec: ParamSpec) -> SearchSpace {
+        self.params.insert(name.to_string(), spec);
+        self
+    }
+
+    pub fn sample(&self, rng: &mut Pcg32) -> TrialConfig {
+        TrialConfig {
+            values: self.params.iter().map(|(k, p)| (k.clone(), p.sample(rng))).collect(),
+        }
+    }
+
+    /// Cartesian product of per-param grids.
+    pub fn grid(&self, k_per_continuous: usize) -> Vec<TrialConfig> {
+        let mut configs = vec![TrialConfig::default()];
+        for (name, spec) in &self.params {
+            let vals = spec.grid_values(k_per_continuous);
+            let mut next = Vec::with_capacity(configs.len() * vals.len());
+            for c in &configs {
+                for &v in &vals {
+                    let mut c2 = c.clone();
+                    c2.values.insert(name.clone(), v);
+                    next.push(c2);
+                }
+            }
+            configs = next;
+        }
+        configs
+    }
+}
+
+/// One concrete assignment of parameter values.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TrialConfig {
+    pub values: BTreeMap<String, f64>,
+}
+
+impl TrialConfig {
+    pub fn get(&self, name: &str) -> f64 {
+        *self.values.get(name).unwrap_or_else(|| panic!("missing param {name}"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name).round().max(0.0) as usize
+    }
+
+    pub fn describe(&self) -> String {
+        self.values
+            .iter()
+            .map(|(k, v)| format!("{k}={v:.4e}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_cartesian_product() {
+        let space = SearchSpace::new()
+            .with("lam", ParamSpec::Grid(vec![0.1, 1.0]))
+            .with("iters", ParamSpec::IntRange(2, 4));
+        let grid = space.grid(0);
+        assert_eq!(grid.len(), 6);
+        assert!(grid.iter().any(|c| c.get("lam") == 0.1 && c.get_usize("iters") == 3));
+    }
+
+    #[test]
+    fn loguniform_samples_in_range() {
+        let p = ParamSpec::LogUniform(1e-6, 1e-1);
+        let mut rng = Pcg32::new(1);
+        for _ in 0..100 {
+            let v = p.sample(&mut rng);
+            assert!((1e-6..=1e-1).contains(&v));
+        }
+        // spread across decades
+        let vals = p.grid_values(6);
+        assert!(vals[0] < 1e-5 && vals[5] > 1e-2);
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let space = SearchSpace::new().with("x", ParamSpec::Uniform(0.0, 1.0));
+        let a = space.sample(&mut Pcg32::new(5));
+        let b = space.sample(&mut Pcg32::new(5));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `nexus <subcommand> [--flag] [--key value] [--key=value] [pos...]`
+
+use std::collections::BTreeMap;
+
+use crate::error::{NexusError, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (program name excluded).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    return Err(NexusError::Config("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| NexusError::Config(format!("--{name}: expected integer, got '{s}'"))),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| NexusError::Config(format!("--{name}: expected number, got '{s}'"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| NexusError::Config(format!("--{name}: expected u64, got '{s}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: a bare `--key value` pair always binds; flags that must
+        // precede positionals need `=` (documented parser behaviour).
+        let a = parse("fit data.bin --n 1000 --cv=5 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("fit"));
+        assert_eq!(a.opt("n"), Some("1000"));
+        assert_eq!(a.usize_or("cv", 0).unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["data.bin"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("bench --quick --json");
+        assert!(a.flag("quick") && a.flag("json"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse("fit --lam -0.5");
+        assert_eq!(a.f64_or("lam", 0.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("fit");
+        assert_eq!(a.usize_or("cv", 5).unwrap(), 5);
+        assert_eq!(a.opt_or("impl", "jnp"), "jnp");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse("fit --n abc");
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! From-scratch substrates the offline environment denies us as crates:
+//! deterministic RNG, JSON, CLI parsing, timing statistics, and a mini
+//! property-testing framework.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod timer;
+pub mod prop;

@@ -1,0 +1,129 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! `forall` runs a property over `cases` randomly generated inputs; on
+//! failure it retries with progressively simpler inputs drawn from the
+//! same generator at smaller "size" (a light-weight stand-in for
+//! shrinking) and reports the seed so the failure is reproducible:
+//!
+//! ```no_run
+//! use nexus::util::prop::{forall, Gen};
+//! forall("sort is idempotent", 100, |g| {
+//!     let mut v = g.vec_usize(0..50, 100);
+//!     v.sort_unstable();
+//!     let w = { let mut w = v.clone(); w.sort_unstable(); w };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    pub rng: Pcg32,
+    /// Size hint in [0, 1]; properties can scale their inputs by it.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, range: std::ops::Range<usize>) -> usize {
+        assert!(range.start < range.end);
+        range.start + self.rng.below((range.end - range.start) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// A length scaled down by the current size hint (shrink-friendly).
+    pub fn len_up_to(&mut self, max: usize) -> usize {
+        let cap = ((max as f64) * self.size).ceil().max(1.0) as usize;
+        self.usize_in(1..cap + 1)
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, range: std::ops::Range<usize>, n: usize) -> Vec<usize> {
+        (0..n).map(|_| self.usize_in(range.clone())).collect()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs.  Panics (with seed) on the
+/// first failing case after attempting smaller-sized reproductions.
+pub fn forall(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base_seed = 0x5eed_0000u64;
+    for case in 0..cases {
+        let seed = base_seed + case;
+        let size = ((case + 1) as f64 / cases as f64).min(1.0);
+        let run = |seed: u64, size: f64| {
+            let mut g = Gen { rng: Pcg32::new(seed), size };
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)))
+        };
+        if let Err(panic) = run(seed, size) {
+            // try smaller sizes with the same seed to report a simpler repro
+            let mut simplest = size;
+            for frac in [0.5, 0.25, 0.1, 0.05] {
+                let s = size * frac;
+                if run(seed, s).is_err() {
+                    simplest = s;
+                }
+            }
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed: case={case} seed={seed:#x} size={simplest:.3}: {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("reverse twice is identity", 50, |g| {
+            let n = g.len_up_to(64);
+            let v = g.vec_f32(n, -1.0, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        forall("always fails", 5, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!(x < 0.0, "x={x}");
+        });
+    }
+
+    #[test]
+    fn generator_ranges() {
+        let mut g = Gen { rng: Pcg32::new(1), size: 1.0 };
+        for _ in 0..100 {
+            let u = g.usize_in(3..7);
+            assert!((3..7).contains(&u));
+            let f = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&f));
+            let n = g.len_up_to(10);
+            assert!((1..=10).contains(&n));
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Timing instrumentation: wall-clock scopes + summary statistics.
+//!
+//! The bench harness (criterion is unavailable offline) and the raylet
+//! profiler both report through [`Stats`].
+
+use std::time::{Duration, Instant};
+
+/// A running collection of duration samples with summary statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    samples: Vec<f64>, // seconds
+}
+
+impl Stats {
+    pub fn new() -> Stats {
+        Stats::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&mut self, s: f64) {
+        self.samples.push(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.total() / self.samples.len() as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Percentile by nearest-rank on the sorted samples (q in [0, 1]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1;
+        v[idx]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} mean={:.6}s p50={:.6}s p95={:.6}s min={:.6}s max={:.6}s",
+            self.len(),
+            self.mean(),
+            self.p50(),
+            self.p95(),
+            self.min(),
+            self.max()
+        )
+    }
+}
+
+/// Time a closure, returning (result, elapsed).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// Run `f` repeatedly: `warmup` untimed runs then `iters` timed runs.
+pub fn bench_loop<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut stats = Stats::new();
+    for _ in 0..iters {
+        let (out, d) = time(&mut f);
+        std::hint::black_box(out);
+        stats.record(d);
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.record_secs(x);
+        }
+        assert_eq!(s.len(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+        assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let mut s = Stats::new();
+        s.record_secs(7.0);
+        assert_eq!(s.percentile(0.0), 7.0);
+        assert_eq!(s.percentile(1.0), 7.0);
+        assert_eq!(Stats::new().percentile(0.5), 0.0);
+    }
+
+    #[test]
+    fn time_measures() {
+        let ((), d) = time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(d >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn bench_loop_counts() {
+        let s = bench_loop(2, 10, || 1 + 1);
+        assert_eq!(s.len(), 10);
+    }
+}

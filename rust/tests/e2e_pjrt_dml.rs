@@ -1,0 +1,193 @@
+//! End-to-end integration over the REAL runtime: synthetic data ->
+//! distributed cross-fit DML through the AOT-compiled PJRT artifacts ->
+//! estimate vs ground truth.  These are the tests that prove the three
+//! layers (pallas-authored kernels, jax-lowered graphs, rust
+//! coordinator) compose.
+
+use std::sync::Arc;
+
+use nexus::causal::dml;
+use nexus::config::ClusterConfig;
+use nexus::data::synth::{generate, SynthConfig};
+use nexus::models::cost::CostModel;
+use nexus::models::crossfit::CrossfitConfig;
+use nexus::raylet::api::RayContext;
+use nexus::runtime::artifacts::Manifest;
+use nexus::runtime::backend::{backend_by_name, KernelExec};
+
+fn artifacts_available() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+fn cfg_small() -> CrossfitConfig {
+    CrossfitConfig {
+        cv: 5,
+        lam_y: 1e-3,
+        lam_t: 1e-3,
+        irls_iters: 5,
+        block: 256,
+        d_pad: 16,
+        d_real: 10,
+        seed: 42,
+        stratified: true,
+        reuse_suffstats: false,
+    }
+}
+
+#[test]
+fn pjrt_dml_recovers_ate() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = generate(&SynthConfig { n: 6000, d: 10, ..Default::default() });
+    let kx = backend_by_name("pjrt").unwrap();
+    let cost = CostModel::default();
+    let fit = dml::fit_with(&RayContext::inline(), kx, &cost, &ds, &cfg_small(), 1, 2).unwrap();
+    assert!(
+        (fit.ate.value - 1.0).abs() < 0.12,
+        "PJRT DML ate={} truth=1",
+        fit.ate.value
+    );
+    assert!(fit.ate.contains(1.0), "CI [{}, {}]", fit.ate.ci_lo, fit.ate.ci_hi);
+}
+
+#[test]
+fn pjrt_sequential_vs_distributed_identical() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = generate(&SynthConfig { n: 3000, d: 10, ..Default::default() });
+    let kx: Arc<dyn KernelExec> = backend_by_name("pjrt").unwrap();
+    let cost = CostModel::default();
+    let cfg = cfg_small();
+    let seq = dml::fit_with(&RayContext::inline(), kx.clone(), &cost, &ds, &cfg, 1, 2).unwrap();
+    let ray = dml::fit_with(&RayContext::threads(3), kx.clone(), &cost, &ds, &cfg, 1, 2).unwrap();
+    assert_eq!(seq.theta, ray.theta, "DML_Ray != DML under PJRT");
+    assert_eq!(seq.ate.value, ray.ate.value);
+}
+
+#[test]
+fn pjrt_matches_host_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Same data, same fold plan: the XLA path and the pure-rust oracle
+    // must land on (numerically) the same estimate.
+    let ds = generate(&SynthConfig { n: 4000, d: 10, ..Default::default() });
+    let cost = CostModel::default();
+    let cfg = cfg_small();
+    let pjrt = dml::fit_with(
+        &RayContext::inline(),
+        backend_by_name("pjrt").unwrap(),
+        &cost,
+        &ds,
+        &cfg,
+        1,
+        2,
+    )
+    .unwrap();
+    let host = dml::fit_with(
+        &RayContext::inline(),
+        backend_by_name("host").unwrap(),
+        &cost,
+        &ds,
+        &cfg,
+        1,
+        2,
+    )
+    .unwrap();
+    assert!(
+        (pjrt.ate.value - host.ate.value).abs() < 5e-3,
+        "pjrt={} host={}",
+        pjrt.ate.value,
+        host.ate.value
+    );
+    for (a, b) in pjrt.theta.iter().zip(&host.theta) {
+        assert!((a - b).abs() < 5e-3, "{:?} vs {:?}", pjrt.theta, host.theta);
+    }
+}
+
+#[test]
+fn pallas_impl_family_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // The L1 pallas kernels (interpret-mode loop HLO) must give the same
+    // estimate as the jnp family — this is the end-to-end check that the
+    // TPU-shaped kernel path is numerically sound.
+    let ds = generate(&SynthConfig { n: 1500, d: 10, ..Default::default() });
+    let cost = CostModel::default();
+    let cfg = CrossfitConfig { cv: 3, ..cfg_small() };
+    let jnp = dml::fit_with(
+        &RayContext::inline(),
+        backend_by_name("pjrt").unwrap(),
+        &cost,
+        &ds,
+        &cfg,
+        1,
+        2,
+    )
+    .unwrap();
+    let pallas = dml::fit_with(
+        &RayContext::inline(),
+        backend_by_name("pjrt-pallas").unwrap(),
+        &cost,
+        &ds,
+        &cfg,
+        1,
+        2,
+    )
+    .unwrap();
+    assert!(
+        (jnp.ate.value - pallas.ate.value).abs() < 1e-3,
+        "jnp={} pallas={}",
+        jnp.ate.value,
+        pallas.ate.value
+    );
+}
+
+#[test]
+fn sim_cluster_executes_pjrt_dag_correctly() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let ds = generate(&SynthConfig { n: 2000, d: 10, ..Default::default() });
+    let kx = backend_by_name("pjrt").unwrap();
+    let cost = CostModel::default();
+    let cfg = CrossfitConfig { cv: 3, ..cfg_small() };
+    let sim_ctx = RayContext::sim(ClusterConfig::default(), true);
+    let sim = dml::fit_with(&sim_ctx, kx.clone(), &cost, &ds, &cfg, 1, 2).unwrap();
+    let seq = dml::fit_with(&RayContext::inline(), kx, &cost, &ds, &cfg, 1, 2).unwrap();
+    assert_eq!(sim.theta, seq.theta);
+    // and the virtual schedule must show parallelism
+    assert!(sim.metrics.makespan < sim.metrics.busy_secs, "no parallelism in sim?");
+}
+
+#[test]
+fn paper_width_d500_single_block_roundtrip() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // exercise the d=512 artifacts (the paper's ~500 covariates) on one
+    // block: PJRT vs host oracle.
+    use nexus::data::matrix::Matrix;
+    use nexus::util::rng::Pcg32;
+    let kx = backend_by_name("pjrt").unwrap();
+    let host = backend_by_name("host").unwrap();
+    let mut rng = Pcg32::new(9);
+    let x = Matrix::from_fn(256, 512, |_, _| 0.25 * rng.normal_f32());
+    let y: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect();
+    let mask = vec![1.0f32; 256];
+    let (g1, b1, n1) = kx.gram_block(&x, &y, &mask).unwrap();
+    let (g2, b2, n2) = host.gram_block(&x, &y, &mask).unwrap();
+    assert_eq!(n1, n2);
+    assert!(g1.max_abs_diff(&g2) < 5e-2, "diff={}", g1.max_abs_diff(&g2));
+    let bdiff = b1.iter().zip(&b2).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(bdiff < 5e-2, "bdiff={bdiff}");
+}

@@ -1,0 +1,117 @@
+//! Fault-tolerance integration: the full DML pipeline under injected
+//! failures must produce EXACTLY the failure-free estimate (lineage
+//! re-execution is deterministic), in both executors.
+
+use std::sync::Arc;
+
+use nexus::causal::dml;
+use nexus::config::ClusterConfig;
+use nexus::data::synth::{generate, SynthConfig};
+use nexus::models::cost::CostModel;
+use nexus::models::crossfit::CrossfitConfig;
+use nexus::raylet::api::RayContext;
+use nexus::raylet::fault::FaultPlan;
+use nexus::runtime::backend::HostBackend;
+use nexus::util::prop::forall;
+
+fn cfg() -> CrossfitConfig {
+    CrossfitConfig {
+        cv: 3,
+        lam_y: 1e-3,
+        lam_t: 1e-3,
+        irls_iters: 4,
+        block: 256,
+        d_pad: 8,
+        d_real: 6,
+        seed: 1,
+        stratified: true,
+        reuse_suffstats: false,
+    }
+}
+
+#[test]
+fn dml_survives_heavy_crash_rates() {
+    let ds = generate(&SynthConfig { n: 3000, d: 6, ..Default::default() });
+    let cost = CostModel::default();
+    let clean = dml::fit_with(
+        &RayContext::threads(4),
+        Arc::new(HostBackend),
+        &cost,
+        &ds,
+        &cfg(),
+        1,
+        2,
+    )
+    .unwrap();
+    for prob in [0.1, 0.3, 0.5] {
+        let ctx = RayContext::threads_with_faults(4, FaultPlan::with_prob(prob, 50, 1234));
+        let fit = dml::fit_with(&ctx, Arc::new(HostBackend), &cost, &ds, &cfg(), 1, 2).unwrap();
+        assert_eq!(
+            clean.theta, fit.theta,
+            "estimate changed under crash prob {prob}"
+        );
+        let m = fit.metrics;
+        assert!(m.retries > 0, "no retries at prob {prob}?");
+        assert_eq!(m.failed, 0);
+    }
+}
+
+#[test]
+fn dml_survives_node_failures_in_sim() {
+    let ds = generate(&SynthConfig { n: 3000, d: 6, ..Default::default() });
+    let cost = CostModel::default();
+    let cluster = ClusterConfig { nodes: 4, slots_per_node: 2, ..Default::default() };
+    let clean_ctx = RayContext::sim(cluster.clone(), true);
+    let clean =
+        dml::fit_with(&clean_ctx, Arc::new(HostBackend), &cost, &ds, &cfg(), 1, 2).unwrap();
+    // kill two nodes at different points in the schedule
+    let t1 = clean.metrics.makespan * 0.2;
+    let t2 = clean.metrics.makespan * 0.6;
+    let ctx = RayContext::sim_with_faults(
+        cluster,
+        true,
+        FaultPlan { node_failures: vec![(t1, 1), (t2, 3)], ..FaultPlan::none() },
+    );
+    let fit = dml::fit_with(&ctx, Arc::new(HostBackend), &cost, &ds, &cfg(), 1, 2).unwrap();
+    assert_eq!(clean.theta, fit.theta);
+    assert!(fit.metrics.makespan >= clean.metrics.makespan);
+}
+
+#[test]
+fn prop_random_failure_seeds_never_change_results() {
+    let ds = generate(&SynthConfig { n: 1200, d: 4, ..Default::default() });
+    let cost = CostModel::default();
+    let base_cfg = CrossfitConfig { d_pad: 8, d_real: 4, ..cfg() };
+    let clean = dml::fit_with(
+        &RayContext::threads(2),
+        Arc::new(HostBackend),
+        &cost,
+        &ds,
+        &base_cfg,
+        0,
+        1,
+    )
+    .unwrap();
+    forall("fault seeds", 6, |g| {
+        let seed = g.usize_in(0..100_000) as u64;
+        let prob = g.f64_in(0.05, 0.4);
+        let ctx = RayContext::threads_with_faults(3, FaultPlan::with_prob(prob, 60, seed));
+        let fit =
+            dml::fit_with(&ctx, Arc::new(HostBackend), &cost, &ds, &base_cfg, 0, 1).unwrap();
+        assert_eq!(clean.theta, fit.theta, "seed={seed} prob={prob}");
+    });
+}
+
+#[test]
+fn exhausted_retries_surface_as_errors_not_hangs() {
+    use nexus::raylet::payload::Payload;
+    let ctx = RayContext::threads_with_faults(2, FaultPlan::with_prob(1.0, 2, 7));
+    let r = ctx.submit(
+        "doomed",
+        vec![],
+        0.0,
+        Arc::new(|_: &[&Payload]| Ok(Payload::Scalar(1.0))),
+    );
+    let err = ctx.get(&r).unwrap_err();
+    assert!(err.to_string().contains("injected crash"), "{err}");
+}

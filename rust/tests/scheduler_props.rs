@@ -1,0 +1,185 @@
+//! Property-based tests on the raylet coordinator invariants: for
+//! randomized task DAGs, every executor computes the same values, and
+//! the simulated schedule obeys makespan bounds.  (proptest is
+//! unavailable offline; `nexus::util::prop` is the in-tree equivalent.)
+
+use std::sync::Arc;
+
+use nexus::config::ClusterConfig;
+use nexus::raylet::api::RayContext;
+use nexus::raylet::payload::Payload;
+use nexus::raylet::task::{ObjectRef, TaskFn};
+use nexus::util::prop::{forall, Gen};
+
+/// A reproducible random layered DAG: `layers` levels of tasks, each
+/// task combining 1..=3 results from the previous level.
+struct DagSpec {
+    /// per layer: list of (parent indices into previous layer, op id)
+    layers: Vec<Vec<(Vec<usize>, u8)>>,
+    leaves: Vec<f64>,
+}
+
+fn random_dag(g: &mut Gen) -> DagSpec {
+    let n_leaves = g.usize_in(1..8);
+    let leaves: Vec<f64> = (0..n_leaves).map(|_| g.f64_in(-4.0, 4.0)).collect();
+    let n_layers = g.usize_in(1..5);
+    let mut layers = Vec::new();
+    let mut prev = n_leaves;
+    for _ in 0..n_layers {
+        let width = g.usize_in(1..7);
+        let mut layer = Vec::new();
+        for _ in 0..width {
+            let k = g.usize_in(1..4.min(prev + 1));
+            let parents: Vec<usize> = (0..k).map(|_| g.usize_in(0..prev)).collect();
+            layer.push((parents, g.usize_in(0..3) as u8));
+        }
+        layers.push(layer);
+        prev = width;
+    }
+    DagSpec { layers, leaves }
+}
+
+fn op_fn(op: u8) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let vals: Vec<f64> = args.iter().map(|a| a.as_scalar().unwrap()).collect();
+        let out = match op {
+            0 => vals.iter().sum::<f64>(),
+            1 => vals.iter().product::<f64>().clamp(-1e12, 1e12),
+            _ => vals.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        };
+        Ok(Payload::Scalar(out))
+    })
+}
+
+/// Submit the DAG and return the value of every sink task.
+fn run_dag(ctx: &RayContext, spec: &DagSpec, cost: f64) -> Vec<f64> {
+    let mut prev: Vec<ObjectRef> =
+        spec.leaves.iter().map(|&v| ctx.put(Payload::Scalar(v))).collect();
+    for layer in &spec.layers {
+        let mut next = Vec::with_capacity(layer.len());
+        for (parents, op) in layer {
+            let args: Vec<ObjectRef> = parents.iter().map(|&p| prev[p]).collect();
+            next.push(ctx.submit("op", args, cost, op_fn(*op)));
+        }
+        prev = next;
+    }
+    ctx.drain().unwrap();
+    prev.iter().map(|r| ctx.get(r).unwrap().as_scalar().unwrap()).collect()
+}
+
+#[test]
+fn prop_all_executors_agree_on_random_dags() {
+    forall("executors agree", 30, |g| {
+        let spec = random_dag(g);
+        let inline = run_dag(&RayContext::inline(), &spec, 0.001);
+        let threads = run_dag(&RayContext::threads(3), &spec, 0.001);
+        let sim = run_dag(
+            &RayContext::sim(ClusterConfig::default(), true),
+            &spec,
+            0.001,
+        );
+        assert_eq!(inline, threads, "threads != inline");
+        assert_eq!(inline, sim, "sim != inline");
+    });
+}
+
+#[test]
+fn prop_sim_makespan_bounds() {
+    forall("sim makespan bounds", 30, |g| {
+        let spec = random_dag(g);
+        let cost = g.f64_in(0.01, 1.0);
+        let nodes = g.usize_in(1..5);
+        let slots = g.usize_in(1..4);
+        let cfg = ClusterConfig {
+            nodes,
+            slots_per_node: slots,
+            task_overhead: 0.0,
+            net_latency: 0.0,
+            ..Default::default()
+        };
+        let ctx = RayContext::sim(cfg, true);
+        run_dag(&ctx, &spec, cost);
+        let m = ctx.metrics();
+        let n_tasks: usize = spec.layers.iter().map(|l| l.len()).sum();
+        assert_eq!(m.tasks_run as usize, n_tasks);
+        // lower bounds: critical path (depth * cost) and work / slots
+        let depth = spec.layers.len() as f64;
+        let work = n_tasks as f64 * cost;
+        let lower = (depth * cost).max(work / (nodes * slots) as f64);
+        // upper bound: fully serial
+        assert!(
+            m.makespan + 1e-9 >= lower,
+            "makespan {} < lower bound {}",
+            m.makespan,
+            lower
+        );
+        assert!(
+            m.makespan <= work + m.transfer_secs + 1e-6,
+            "makespan {} > serial {}",
+            m.makespan,
+            work
+        );
+    });
+}
+
+#[test]
+fn prop_sim_schedule_deterministic() {
+    forall("sim deterministic", 15, |g| {
+        let spec = random_dag(g);
+        let run = |spec: &DagSpec| {
+            let ctx = RayContext::sim(ClusterConfig::default(), true);
+            let vals = run_dag(&ctx, spec, 0.05);
+            (vals, ctx.metrics().makespan)
+        };
+        let (v1, m1) = run(&spec);
+        let (v2, m2) = run(&spec);
+        assert_eq!(v1, v2);
+        assert_eq!(m1, m2);
+    });
+}
+
+#[test]
+fn prop_thread_pool_handles_deep_chains() {
+    forall("deep chains", 10, |g| {
+        let depth = g.usize_in(1..100);
+        let ctx = RayContext::threads(2);
+        let mut r = ctx.put(Payload::Scalar(0.0));
+        for _ in 0..depth {
+            r = ctx.submit(
+                "inc",
+                vec![r],
+                0.0,
+                Arc::new(|a: &[&Payload]| Ok(Payload::Scalar(a[0].as_scalar()? + 1.0))),
+            );
+        }
+        assert_eq!(ctx.get(&r).unwrap().as_scalar().unwrap(), depth as f64);
+    });
+}
+
+#[test]
+fn prop_tree_reduce_equals_flat_sum() {
+    use nexus::models::distops::tree_reduce;
+    use nexus::runtime::tensor::Tensor;
+    forall("tree reduce sums", 25, |g| {
+        let n = g.usize_in(1..40);
+        let arity = g.usize_in(2..9);
+        let len = g.usize_in(1..16);
+        let ctx = RayContext::threads(3);
+        let mut expect = vec![0.0f32; len];
+        let refs: Vec<ObjectRef> = (0..n)
+            .map(|_| {
+                let v = g.vec_f32(len, -2.0, 2.0);
+                for (e, x) in expect.iter_mut().zip(&v) {
+                    *e += x;
+                }
+                ctx.put(Payload::Tensors(vec![Tensor::vector(v)]))
+            })
+            .collect();
+        let root = tree_reduce(&ctx, refs, arity, "t", 0.0, 0);
+        let got = ctx.get(&root).unwrap();
+        let got = &got.as_tensors().unwrap()[0].data;
+        for (a, b) in got.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-3, "{got:?} vs {expect:?}");
+        }
+    });
+}
