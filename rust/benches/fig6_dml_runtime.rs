@@ -5,8 +5,14 @@
 //! simulated — task costs are CALIBRATED from real PJRT kernel
 //! executions on this machine, then the schedule runs under a virtual
 //! clock.  Part A validates the simulator: a real sequential run at 10k
-//! is compared against the 1-node-1-slot virtual makespan.  Part B
-//! regenerates the figure's series at all three scales.
+//! is compared against the 1-node-1-slot virtual makespan, and a real
+//! thread-pool run tracks the wall-clock of the locality-aware
+//! scheduler.  Part B regenerates the figure's series at all three
+//! scales.
+//!
+//! Every run is appended to `BENCH_dml_runtime.json` (machine-readable:
+//! mode, workers, makespan, busy/overhead/transfer secs, spills) so the
+//! perf trajectory is tracked across PRs.
 //!
 //!     cargo bench --offline --bench fig6_dml_runtime
 //!     NEXUS_BENCH_QUICK=1 ... (skips the real 10k x 500 validation run)
@@ -19,8 +25,9 @@ use nexus::config::ClusterConfig;
 use nexus::data::synth::{generate, SynthConfig};
 use nexus::models::cost::CostModel;
 use nexus::models::crossfit::CrossfitConfig;
-use nexus::raylet::api::RayContext;
+use nexus::raylet::api::{Metrics, RayContext};
 use nexus::runtime::backend::backend_by_name;
+use nexus::util::json::Json;
 
 fn ccfg(n: usize, d: usize, d_pad: usize) -> CrossfitConfig {
     CrossfitConfig {
@@ -37,10 +44,30 @@ fn ccfg(n: usize, d: usize, d_pad: usize) -> CrossfitConfig {
     }
 }
 
+/// One machine-readable benchmark record.
+fn record(mode: &str, workers: usize, n: usize, d: usize, m: &Metrics) -> Json {
+    Json::obj()
+        .set("mode", mode)
+        .set("workers", workers)
+        .set("n", n)
+        .set("d", d)
+        .set("makespan_secs", m.makespan)
+        .set("busy_secs", m.busy_secs)
+        .set("overhead_secs", m.overhead_secs)
+        .set("transfer_secs", m.transfer_secs)
+        .set("tasks", m.tasks_run as i64)
+        .set("retries", m.retries as i64)
+        .set("spills", m.spills as i64)
+        .set("peak_store_bytes", m.peak_store_bytes as i64)
+        .set("bytes_transferred", m.bytes_transferred as i64)
+        .set("cost_dollars", m.cost_dollars)
+}
+
 fn main() -> nexus::Result<()> {
     let quick = std::env::var("NEXUS_BENCH_QUICK").is_ok();
     let d = 500;
     let d_pad = 512;
+    let mut records: Vec<Json> = Vec::new();
 
     let kx = backend_by_name("pjrt").or_else(|_| backend_by_name("host"))?;
     println!("backend: {}", kx.name());
@@ -58,8 +85,10 @@ fn main() -> nexus::Result<()> {
         let ds = generate(&SynthConfig { n, d, seed: 123, ..Default::default() });
         let cfg = ccfg(n, d, d_pad);
         let t0 = Instant::now();
-        let fit = dml::fit_with(&RayContext::inline(), kx.clone(), &cost, &ds, &cfg, 1, 2)?;
+        let ctx = RayContext::inline();
+        let fit = dml::fit_with(&ctx, kx.clone(), &cost, &ds, &cfg, 1, 2)?;
         let real_seq = t0.elapsed().as_secs_f64();
+        records.push(record("inline", 1, n, d, &ctx.metrics()));
         let sim_seq = {
             let ctx = RayContext::sim(
                 ClusterConfig { nodes: 1, slots_per_node: 1, ..Default::default() },
@@ -74,6 +103,28 @@ fn main() -> nexus::Result<()> {
             real_seq / sim_seq,
             fit.ate.value
         );
+    }
+
+    // ---- Part A2: real thread-pool run (locality-aware scheduler) --------
+    {
+        let (tn, td) = if quick { (4_000, 50) } else { (10_000, d) };
+        let td_pad = (td + 1).next_power_of_two().clamp(16, 512);
+        let workers = 4;
+        let ds = generate(&SynthConfig { n: tn, d: td, seed: 123, ..Default::default() });
+        let cfg = ccfg(tn, td, td_pad);
+        let ctx = RayContext::threads(workers);
+        let t0 = Instant::now();
+        let fit = dml::fit_with(&ctx, kx.clone(), &cost, &ds, &cfg, 1, 2)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let m = ctx.metrics();
+        println!(
+            "\n[threads] {tn} x {td} on {workers} workers: wall {} | busy {} | dispatch {} | ATE={:.3}",
+            fmt_secs(wall),
+            fmt_secs(m.busy_secs),
+            fmt_secs(m.overhead_secs),
+            fit.ate.value
+        );
+        records.push(record("threads", workers, tn, td, &m));
     }
 
     // ---- Part B: the figure ----------------------------------------------
@@ -93,6 +144,8 @@ fn main() -> nexus::Result<()> {
         let seq = dml::fit_dry(&seq_ctx, &cost, n, &cfg, 2)?;
         let ray_ctx = RayContext::sim(cluster.clone(), false);
         let ray = dml::fit_dry(&ray_ctx, &cost, n, &cfg, 2)?;
+        records.push(record("sim-seq", 1, n, d, &seq));
+        records.push(record("sim-ray", cluster.nodes * cluster.slots_per_node, n, d, &ray));
         tbl.row(vec![
             format!("{n}"),
             fmt_secs(seq.makespan),
@@ -103,6 +156,29 @@ fn main() -> nexus::Result<()> {
         ]);
     }
     tbl.print();
+
+    // append this invocation as one session so the trajectory across
+    // PRs/invocations accumulates instead of being overwritten
+    let path = std::path::Path::new("BENCH_dml_runtime.json");
+    let mut sessions: Vec<Json> = nexus::util::json::parse_file(path)
+        .ok()
+        .and_then(|old| old.get("sessions").and_then(|s| s.as_arr().ok().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    let n_runs = records.len();
+    sessions.push(
+        Json::obj()
+            .set("backend", kx.name())
+            .set("quick", quick)
+            .set("gflops_effective", cost.gflops)
+            .set("runs", Json::Arr(records)),
+    );
+    let n_sessions = sessions.len();
+    let out = Json::obj()
+        .set("bench", "fig6_dml_runtime")
+        .set("sessions", Json::Arr(sessions));
+    std::fs::write(path, out.to_string())?;
+    println!("\nwrote BENCH_dml_runtime.json ({n_runs} runs this session, {n_sessions} sessions total)");
+
     println!(
         "\npaper shape check: DML_Ray << DML at every scale, gap grows with n\n\
          (paper Fig 6 has no numeric axes; the validated content is the ordering + growth)"

@@ -22,7 +22,7 @@ use crate::models::crossfit::{self, CrossfitConfig, CrossfitOutput};
 use crate::models::distops::unpack_block;
 use crate::models::ridge::REDUCE_ARITY;
 use crate::models::distops;
-use crate::raylet::api::{Metrics, RayContext};
+use crate::raylet::api::{ExecOpts, Metrics, RayContext};
 use crate::raylet::payload::Payload;
 use crate::raylet::task::TaskFn;
 use crate::runtime::backend::{backend_by_name, KernelExec};
@@ -212,12 +212,19 @@ pub fn fit(cfg: &RunConfig, ds: &CausalDataset) -> Result<DmlFit> {
     let ccfg = CrossfitConfig::from_run(cfg, block, d_pad);
     // calibrate on a small shipped shape with the run's covariate width
     let cost = CostModel::calibrate(kx.as_ref(), 256, d_pad.min(64));
-    let ctx = match cfg.exec {
-        ExecMode::Sequential => RayContext::inline(),
-        ExecMode::Distributed => RayContext::threads(cfg.workers),
-        ExecMode::Simulated => RayContext::sim(cfg.cluster.clone(), true),
-    };
+    let ctx = executor_for(cfg);
     fit_with(&ctx, kx, &cost, ds, &ccfg, cfg.het_features, p_pad)
+}
+
+/// Build the configured executor, honoring `cluster.store_cap_bytes`
+/// on every mode (not just the simulator).
+pub fn executor_for(cfg: &RunConfig) -> RayContext {
+    let opts = ExecOpts { store_cap: cfg.cluster.store_cap(), ..Default::default() };
+    match cfg.exec {
+        ExecMode::Sequential => RayContext::inline_with(opts),
+        ExecMode::Distributed => RayContext::threads_with(cfg.workers, opts),
+        ExecMode::Simulated => RayContext::sim_with(cfg.cluster.clone(), true, opts),
+    }
 }
 
 /// Shapes: under PJRT the block/width must be shipped artifact sizes;

@@ -56,6 +56,23 @@ pub struct ClusterConfig {
     pub dollars_per_node_hour: f64,
     /// Scheduler dispatch overhead per task, seconds (Ray: ~ms-level).
     pub task_overhead: f64,
+    /// Object-store byte cap (0 = unbounded).  Over-cap inserts evict
+    /// least-recently-used reconstructable objects (spill); spilled
+    /// objects rebuild on demand through lineage.
+    pub store_cap_bytes: usize,
+}
+
+impl ClusterConfig {
+    /// The `store_cap_bytes` knob as an executor cap (0 = unbounded).
+    /// Single home for the rule — every executor constructor resolves
+    /// the cap through here.
+    pub fn store_cap(&self) -> Option<usize> {
+        if self.store_cap_bytes > 0 {
+            Some(self.store_cap_bytes)
+        } else {
+            None
+        }
+    }
 }
 
 impl Default for ClusterConfig {
@@ -67,6 +84,7 @@ impl Default for ClusterConfig {
             net_latency: 0.5e-3,
             dollars_per_node_hour: 1.008, // r5.4xlarge on-demand
             task_overhead: 1e-3,
+            store_cap_bytes: 0,
         }
     }
 }
@@ -199,6 +217,9 @@ impl RunConfig {
             if let Some(x) = c.get("task_overhead") {
                 cfg.cluster.task_overhead = x.as_f64()?;
             }
+            if let Some(x) = c.get("store_cap_bytes") {
+                cfg.cluster.store_cap_bytes = x.as_usize()?;
+            }
         }
         cfg.validate()?;
         Ok(cfg)
@@ -225,7 +246,8 @@ impl RunConfig {
                     .set("net_bandwidth", self.cluster.net_bandwidth)
                     .set("net_latency", self.cluster.net_latency)
                     .set("dollars_per_node_hour", self.cluster.dollars_per_node_hour)
-                    .set("task_overhead", self.cluster.task_overhead),
+                    .set("task_overhead", self.cluster.task_overhead)
+                    .set("store_cap_bytes", self.cluster.store_cap_bytes),
             )
     }
 }

@@ -1,52 +1,77 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls instead of `thiserror`: the crate
+//! builds fully offline with zero external dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every NEXUS subsystem.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum NexusError {
     /// PJRT / XLA runtime failures (compile, execute, literal conversion).
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Artifact manifest problems (missing entry, shape mismatch, io).
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// JSON parse / type errors from `util::json`.
-    #[error("json: {0}")]
     Json(String),
 
     /// Configuration validation failures.
-    #[error("config: {0}")]
     Config(String),
 
     /// Scheduler / object-store failures in the raylet substrate.
-    #[error("raylet: {0}")]
     Raylet(String),
 
     /// Data / shape errors (dimension mismatch, empty dataset, bad fold).
-    #[error("data: {0}")]
     Data(String),
 
     /// Numerical failures (singular system, non-finite values).
-    #[error("numeric: {0}")]
     Numeric(String),
 
     /// Tuning / trial errors.
-    #[error("tune: {0}")]
     Tune(String),
 
     /// Serving errors.
-    #[error("serve: {0}")]
     Serve(String),
 
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
-impl From<xla::Error> for NexusError {
-    fn from(e: xla::Error) -> Self {
+impl fmt::Display for NexusError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NexusError::Xla(m) => write!(f, "xla runtime: {m}"),
+            NexusError::Artifact(m) => write!(f, "artifact: {m}"),
+            NexusError::Json(m) => write!(f, "json: {m}"),
+            NexusError::Config(m) => write!(f, "config: {m}"),
+            NexusError::Raylet(m) => write!(f, "raylet: {m}"),
+            NexusError::Data(m) => write!(f, "data: {m}"),
+            NexusError::Numeric(m) => write!(f, "numeric: {m}"),
+            NexusError::Tune(m) => write!(f, "tune: {m}"),
+            NexusError::Serve(m) => write!(f, "serve: {m}"),
+            NexusError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for NexusError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            NexusError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for NexusError {
+    fn from(e: std::io::Error) -> Self {
+        NexusError::Io(e)
+    }
+}
+
+impl From<crate::runtime::xla_shim::Error> for NexusError {
+    fn from(e: crate::runtime::xla_shim::Error) -> Self {
         NexusError::Xla(e.to_string())
     }
 }

@@ -108,12 +108,18 @@ fn cmd_fit(args: &Args) -> Result<()> {
         "tasks={} retries={} wall={:.2}s makespan={:.2}s busy={:.2}s",
         m.tasks_run, m.retries, wall, m.makespan, m.busy_secs
     );
+    println!(
+        "store: peak={} B spills={} reconstructions={}",
+        m.peak_store_bytes, m.spills, m.reconstructions
+    );
     if args.flag("json") {
         let j = nexus::util::json::Json::obj()
             .set("ate", fit.ate.value)
             .set("se", fit.ate.se)
             .set("true_ate", ds.true_ate())
             .set("tasks", fit.metrics.tasks_run as i64)
+            .set("spills", fit.metrics.spills as i64)
+            .set("peak_store_bytes", fit.metrics.peak_store_bytes as i64)
             .set("wall_secs", wall);
         println!("{}", j.to_string());
     }
@@ -161,11 +167,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
     };
     let space = SearchSpace::new().with("lam", ParamSpec::LogUniform(1e-6, 1e3));
     let configs = space.grid(trials);
-    let ctx = match cfg.exec {
-        ExecMode::Sequential => RayContext::inline(),
-        ExecMode::Distributed => RayContext::threads(cfg.workers),
-        ExecMode::Simulated => RayContext::sim(cfg.cluster.clone(), true),
-    };
+    let ctx = dml::executor_for(&cfg);
     let out = match strategy.as_str() {
         "sha" => runner.run_sha(&ctx, &configs, &ShaSchedule::geometric(1, 8, 2))?,
         _ => runner.run_grid(&ctx, &configs)?,

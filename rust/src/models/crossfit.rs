@@ -564,4 +564,25 @@ mod tests {
         assert!(pad_covariates(&x, 16).is_err());
         assert!(pad_covariates(&x, 21).is_ok());
     }
+
+    #[test]
+    fn memory_capped_store_spills_without_changing_results() {
+        // a 16 KB cap is far below the DAG's intermediate footprint:
+        // finished-stage outputs spill, lineage rebuilds them on demand,
+        // and the residuals stay bit-identical to the uncapped run.
+        use crate::raylet::api::ExecOpts;
+        let ds = small_data();
+        let cfg = small_cfg();
+        let cost = CostModel::default();
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        let free = run(&RayContext::inline(), kx.clone(), &cost, &ds, &cfg).unwrap();
+        let opts = ExecOpts { store_cap: Some(16 * 1024), ..Default::default() };
+        let ctx = RayContext::threads_with(3, opts);
+        let capped = run(&ctx, kx, &cost, &ds, &cfg).unwrap();
+        assert_eq!(free.y_res, capped.y_res);
+        assert_eq!(free.beta_y, capped.beta_y);
+        let m = ctx.metrics();
+        assert!(m.spills > 0, "cap never engaged: spills=0");
+        assert_eq!(m.failed, 0);
+    }
 }

@@ -14,6 +14,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::error::{NexusError, Result};
+use crate::raylet::fault::FaultPlan;
 use crate::raylet::payload::Payload;
 
 /// An actor's behaviour: state + message handler.
@@ -54,7 +55,15 @@ pub struct ActorHandle {
 }
 
 /// Spawn an actor on its own OS thread.
-pub fn spawn(name: &str, mut actor: impl Actor) -> ActorHandle {
+pub fn spawn(name: &str, actor: impl Actor) -> ActorHandle {
+    spawn_with_faults(name, actor, FaultPlan::none())
+}
+
+/// Spawn with crash injection: the same [`FaultPlan`] the task executors
+/// use, applied per call attempt.  An injected crash hits *before* the
+/// handler mutates state (a worker dying between messages), so retrying
+/// is always safe; retries exhaust into an error result for that call.
+pub fn spawn_with_faults(name: &str, mut actor: impl Actor, fault: FaultPlan) -> ActorHandle {
     let mailbox = Arc::new(Mailbox { queue: Mutex::new(Vec::new()), cv: Condvar::new() });
     let results =
         Arc::new(ResultStore { results: Mutex::new(HashMap::new()), cv: Condvar::new() });
@@ -75,7 +84,19 @@ pub fn spawn(name: &str, mut actor: impl Actor) -> ActorHandle {
             match env {
                 Envelope::Stop => return,
                 Envelope::Call { id, method, arg } => {
-                    let out = actor.handle(&method, arg);
+                    let mut attempt = 0u32;
+                    let out = loop {
+                        if fault.should_fail(id, attempt) {
+                            attempt += 1;
+                            if attempt > fault.max_retries {
+                                break Err(NexusError::Raylet(format!(
+                                    "actor call {id}: injected crash (attempt {attempt})"
+                                )));
+                            }
+                            continue;
+                        }
+                        break actor.handle(&method, arg);
+                    };
                     let mut r = rs.results.lock().unwrap();
                     r.insert(id, out);
                     rs.cv.notify_all();
@@ -218,5 +239,32 @@ mod tests {
         a.ask("add", Payload::Scalar(1.0)).unwrap();
         a.stop();
         a.stop();
+    }
+
+    #[test]
+    fn injected_crashes_retry_without_corrupting_state() {
+        // 50% of call attempts crash before processing; with retries the
+        // running mean is exactly what a failure-free actor computes.
+        let a = spawn_with_faults(
+            "mean",
+            MeanActor { sum: 0.0, n: 0 },
+            FaultPlan::with_prob(0.5, 20, 42),
+        );
+        for i in 1..=10 {
+            a.call("add", Payload::Scalar(i as f64));
+        }
+        let mean = a.ask("mean", Payload::Empty).unwrap().as_scalar().unwrap();
+        assert_eq!(mean, 5.5);
+    }
+
+    #[test]
+    fn exhausted_actor_retries_error_per_call() {
+        let a = spawn_with_faults(
+            "mean",
+            MeanActor { sum: 0.0, n: 0 },
+            FaultPlan::with_prob(1.0, 2, 9),
+        );
+        let err = a.ask("add", Payload::Scalar(1.0)).unwrap_err();
+        assert!(err.to_string().contains("injected crash"), "{err}");
     }
 }

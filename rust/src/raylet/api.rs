@@ -1,28 +1,40 @@
-//! The Ray-like user API: one facade over both executors.
+//! The Ray-like user API: one facade over every executor.
 //!
 //! Coordinator code (crossfit, tune, benches) is written once against
 //! [`RayContext`]; whether it runs on real threads, the virtual-time
 //! cluster, or inline (the paper's sequential EconML baseline) is a
 //! config knob — exactly the property the paper's DML vs DML_Ray
 //! comparison needs: *the same task graph*, different executors.
+//!
+//! Dispatch goes through the [`Executor`] trait (not an enum match):
+//! all three built-in executors are thin drivers over the shared
+//! [`crate::raylet::core::SchedCore`], and adding a fourth executor is
+//! one `impl Executor` — no facade changes.
 
 use std::sync::Arc;
 
 use crate::config::ClusterConfig;
 use crate::error::Result;
 use crate::raylet::fault::FaultPlan;
+use crate::raylet::inline::InlineExec;
 use crate::raylet::payload::Payload;
-use crate::raylet::pool::{PoolMetrics, ThreadPool};
-use crate::raylet::sim::{GanttEntry, SimCluster, SimMetrics};
+use crate::raylet::pool::ThreadPool;
+use crate::raylet::sim::{GanttEntry, SimCluster};
 use crate::raylet::task::{ObjectRef, TaskFn};
 
-/// Unified executor metrics.
+/// Unified executor metrics.  Every field is populated by every
+/// executor where meaningful; virtual-time-only fields stay zero on the
+/// real executors.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub tasks_run: u64,
     pub retries: u64,
     pub failed: u64,
     pub reconstructions: u64,
+    /// Objects evicted by the memory-capped store (LRU spill).
+    pub spills: u64,
+    /// High-water mark of total object-store bytes.
+    pub peak_store_bytes: u64,
     /// Real seconds for threads/inline; virtual seconds for sim.
     pub makespan: f64,
     pub busy_secs: f64,
@@ -31,70 +43,222 @@ pub struct Metrics {
     pub bytes_transferred: u64,
     /// Virtual-time $ cost (sim only).
     pub cost_dollars: f64,
+    /// Bytes currently resident per node (workers for the thread pool,
+    /// cluster nodes for sim, one entry for inline).
+    pub node_residency: Vec<u64>,
 }
 
-enum Impl {
-    /// Run tasks inline at submit time — the sequential baseline.
-    Inline(InlineExec),
-    Threads(ThreadPool),
-    Sim(SimCluster),
+/// Execution options shared by every executor: the fault plan and the
+/// object-store memory cap (LRU spill-and-reconstruct).
+#[derive(Clone, Debug)]
+pub struct ExecOpts {
+    pub fault: FaultPlan,
+    /// Object-store byte cap; `None` = unbounded.
+    pub store_cap: Option<usize>,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        ExecOpts { fault: FaultPlan::none(), store_cap: None }
+    }
+}
+
+/// The executor contract: what a backend must provide to sit behind
+/// [`RayContext`].  Implementations are drivers over the shared
+/// scheduler core; see `pool.rs`, `sim.rs`, `inline.rs`.
+pub trait Executor: Send + Sync {
+    fn put_sized(&self, value: Payload, bytes: usize) -> ObjectRef;
+    fn submit_sized(
+        &self,
+        label: &str,
+        args: Vec<ObjectRef>,
+        cost_hint: f64,
+        out_bytes: usize,
+        f: TaskFn,
+    ) -> ObjectRef;
+    fn get(&self, r: &ObjectRef) -> Result<Arc<Payload>>;
+    /// Simulate object loss; lineage reconstruction rebuilds on demand.
+    fn drop_object(&self, r: &ObjectRef) -> Result<()>;
+    /// Finish all outstanding work (no-op for eager executors).
+    fn drain(&self) -> Result<()> {
+        Ok(())
+    }
+    fn metrics(&self) -> Metrics;
+    /// Schedule bars (virtual-time executors only; empty otherwise).
+    fn gantt(&self) -> Vec<GanttEntry> {
+        Vec::new()
+    }
+    /// True when the executor reports makespan in its own (virtual)
+    /// clock; false means [`RayContext`] fills makespan with wall time.
+    fn virtual_time(&self) -> bool {
+        false
+    }
+    fn mode(&self) -> &'static str;
+}
+
+impl Executor for InlineExec {
+    fn put_sized(&self, value: Payload, bytes: usize) -> ObjectRef {
+        InlineExec::put_sized(self, value, bytes)
+    }
+    fn submit_sized(
+        &self,
+        label: &str,
+        args: Vec<ObjectRef>,
+        cost_hint: f64,
+        _out_bytes: usize,
+        f: TaskFn,
+    ) -> ObjectRef {
+        InlineExec::submit(self, label, args, cost_hint, f)
+    }
+    fn get(&self, r: &ObjectRef) -> Result<Arc<Payload>> {
+        InlineExec::get(self, r)
+    }
+    fn drop_object(&self, r: &ObjectRef) -> Result<()> {
+        InlineExec::drop_object(self, r)
+    }
+    fn drain(&self) -> Result<()> {
+        InlineExec::drain(self)
+    }
+    fn metrics(&self) -> Metrics {
+        InlineExec::metrics(self)
+    }
+    fn mode(&self) -> &'static str {
+        "inline"
+    }
+}
+
+impl Executor for ThreadPool {
+    fn put_sized(&self, value: Payload, bytes: usize) -> ObjectRef {
+        ThreadPool::put_sized(self, value, bytes)
+    }
+    fn submit_sized(
+        &self,
+        label: &str,
+        args: Vec<ObjectRef>,
+        cost_hint: f64,
+        _out_bytes: usize,
+        f: TaskFn,
+    ) -> ObjectRef {
+        ThreadPool::submit(self, label, args, cost_hint, f)
+    }
+    fn get(&self, r: &ObjectRef) -> Result<Arc<Payload>> {
+        ThreadPool::get(self, r)
+    }
+    fn drop_object(&self, r: &ObjectRef) -> Result<()> {
+        ThreadPool::drop_object(self, r)
+    }
+    fn metrics(&self) -> Metrics {
+        ThreadPool::metrics(self)
+    }
+    fn mode(&self) -> &'static str {
+        "threads"
+    }
+}
+
+impl Executor for SimCluster {
+    fn put_sized(&self, value: Payload, bytes: usize) -> ObjectRef {
+        SimCluster::put_sized(self, value, bytes)
+    }
+    fn submit_sized(
+        &self,
+        label: &str,
+        args: Vec<ObjectRef>,
+        cost_hint: f64,
+        out_bytes: usize,
+        f: TaskFn,
+    ) -> ObjectRef {
+        SimCluster::submit(self, label, args, cost_hint, out_bytes, f)
+    }
+    fn get(&self, r: &ObjectRef) -> Result<Arc<Payload>> {
+        SimCluster::get(self, r)
+    }
+    fn drop_object(&self, r: &ObjectRef) -> Result<()> {
+        SimCluster::drop_object(self, r)
+    }
+    fn drain(&self) -> Result<()> {
+        SimCluster::drain(self)
+    }
+    fn metrics(&self) -> Metrics {
+        SimCluster::metrics(self)
+    }
+    fn gantt(&self) -> Vec<GanttEntry> {
+        SimCluster::gantt(self)
+    }
+    fn virtual_time(&self) -> bool {
+        true
+    }
+    fn mode(&self) -> &'static str {
+        "sim"
+    }
 }
 
 /// One execution context (≈ a `ray.init`).
 pub struct RayContext {
-    imp: Impl,
+    exec: Box<dyn Executor>,
     started: std::time::Instant,
 }
 
 impl RayContext {
+    /// Wrap any executor implementation.
+    pub fn from_executor(exec: Box<dyn Executor>) -> RayContext {
+        RayContext { exec, started: std::time::Instant::now() }
+    }
+
     /// Sequential inline executor (the EconML single-process baseline).
     pub fn inline() -> RayContext {
-        RayContext { imp: Impl::Inline(InlineExec::default()), started: std::time::Instant::now() }
+        RayContext::inline_with(ExecOpts::default())
+    }
+
+    pub fn inline_with(opts: ExecOpts) -> RayContext {
+        RayContext::from_executor(Box::new(InlineExec::new(opts.fault, opts.store_cap)))
     }
 
     /// Real worker threads.
     pub fn threads(workers: usize) -> RayContext {
-        RayContext { imp: Impl::Threads(ThreadPool::new(workers)), started: std::time::Instant::now() }
+        RayContext::threads_with(workers, ExecOpts::default())
     }
 
     pub fn threads_with_faults(workers: usize, fault: FaultPlan) -> RayContext {
-        RayContext {
-            imp: Impl::Threads(ThreadPool::with_faults(workers, fault)),
-            started: std::time::Instant::now(),
-        }
+        RayContext::threads_with(workers, ExecOpts { fault, store_cap: None })
+    }
+
+    pub fn threads_with(workers: usize, opts: ExecOpts) -> RayContext {
+        RayContext::from_executor(Box::new(ThreadPool::with_opts(
+            workers,
+            opts.fault,
+            opts.store_cap,
+        )))
     }
 
     /// Virtual-time cluster; `execute` controls whether task bodies run.
     pub fn sim(cfg: ClusterConfig, execute: bool) -> RayContext {
-        RayContext { imp: Impl::Sim(SimCluster::new(cfg, execute)), started: std::time::Instant::now() }
+        RayContext::sim_with(cfg, execute, ExecOpts::default())
     }
 
     pub fn sim_with_faults(cfg: ClusterConfig, execute: bool, fault: FaultPlan) -> RayContext {
-        RayContext {
-            imp: Impl::Sim(SimCluster::with_faults(cfg, execute, fault)),
-            started: std::time::Instant::now(),
-        }
+        RayContext::sim_with(cfg, execute, ExecOpts { fault, store_cap: None })
+    }
+
+    pub fn sim_with(cfg: ClusterConfig, execute: bool, opts: ExecOpts) -> RayContext {
+        let cap = opts.store_cap.or(cfg.store_cap());
+        RayContext::from_executor(Box::new(SimCluster::with_opts(
+            cfg, execute, opts.fault, cap,
+        )))
     }
 
     pub fn put(&self, value: Payload) -> ObjectRef {
-        match &self.imp {
-            Impl::Inline(e) => e.put(value),
-            Impl::Threads(p) => p.put(value),
-            Impl::Sim(s) => s.put(value),
-        }
+        let bytes = value.size_bytes();
+        self.exec.put_sized(value, bytes)
     }
 
     /// Put with an explicit byte-size hint (sim dry runs).
     pub fn put_sized(&self, value: Payload, bytes: usize) -> ObjectRef {
-        match &self.imp {
-            Impl::Sim(s) => s.put_sized(value, bytes),
-            _ => self.put(value),
-        }
+        self.exec.put_sized(value, bytes)
     }
 
     /// Submit a remote task.
     pub fn submit(&self, label: &str, args: Vec<ObjectRef>, cost_hint: f64, f: TaskFn) -> ObjectRef {
-        self.submit_sized(label, args, cost_hint, 0, f)
+        self.exec.submit_sized(label, args, cost_hint, 0, f)
     }
 
     /// Submit with a declared output size (sim dry-run transfer modeling).
@@ -106,19 +270,11 @@ impl RayContext {
         out_bytes: usize,
         f: TaskFn,
     ) -> ObjectRef {
-        match &self.imp {
-            Impl::Inline(e) => e.submit(label, args, cost_hint, f),
-            Impl::Threads(p) => p.submit(label, args, cost_hint, f),
-            Impl::Sim(s) => s.submit(label, args, cost_hint, out_bytes, f),
-        }
+        self.exec.submit_sized(label, args, cost_hint, out_bytes, f)
     }
 
     pub fn get(&self, r: &ObjectRef) -> Result<Arc<Payload>> {
-        match &self.imp {
-            Impl::Inline(e) => e.get(r),
-            Impl::Threads(p) => p.get(r),
-            Impl::Sim(s) => s.get(r),
-        }
+        self.exec.get(r)
     }
 
     pub fn wait_all(&self, refs: &[ObjectRef]) -> Result<()> {
@@ -128,159 +284,33 @@ impl RayContext {
         Ok(())
     }
 
-    /// Simulate object loss (thread mode: lineage-reconstruction tests).
+    /// Simulate object loss; every executor reconstructs via lineage.
     pub fn drop_object(&self, r: &ObjectRef) -> Result<()> {
-        match &self.imp {
-            Impl::Threads(p) => p.drop_object(r),
-            _ => Err(crate::error::NexusError::Raylet(
-                "drop_object only supported on the thread executor".into(),
-            )),
-        }
+        self.exec.drop_object(r)
     }
 
     /// Finish all outstanding work (no-op for inline/threads-get patterns).
     pub fn drain(&self) -> Result<()> {
-        match &self.imp {
-            Impl::Sim(s) => s.drain(),
-            _ => Ok(()),
-        }
+        self.exec.drain()
     }
 
     pub fn metrics(&self) -> Metrics {
-        match &self.imp {
-            Impl::Inline(e) => {
-                let m = e.metrics();
-                Metrics {
-                    tasks_run: m.tasks_run,
-                    busy_secs: m.busy_secs,
-                    makespan: self.started.elapsed().as_secs_f64(),
-                    ..Default::default()
-                }
-            }
-            Impl::Threads(p) => {
-                let m: PoolMetrics = p.metrics();
-                Metrics {
-                    tasks_run: m.tasks_run,
-                    retries: m.retries,
-                    failed: m.failed,
-                    reconstructions: m.reconstructions,
-                    busy_secs: m.busy_secs,
-                    overhead_secs: m.dispatch_secs,
-                    makespan: self.started.elapsed().as_secs_f64(),
-                    ..Default::default()
-                }
-            }
-            Impl::Sim(s) => {
-                let m: SimMetrics = s.metrics();
-                Metrics {
-                    tasks_run: m.tasks_run,
-                    retries: m.retries,
-                    failed: m.failed,
-                    reconstructions: m.reconstructions,
-                    busy_secs: m.busy_secs,
-                    overhead_secs: m.overhead_secs,
-                    transfer_secs: m.transfer_secs,
-                    bytes_transferred: m.bytes_transferred,
-                    makespan: m.makespan,
-                    cost_dollars: m.cost_dollars(&s.cfg),
-                }
-            }
+        let mut m = self.exec.metrics();
+        if !self.exec.virtual_time() {
+            // real executors measure wall-clock from context creation
+            m.makespan = self.started.elapsed().as_secs_f64();
         }
+        m
     }
 
     /// Schedule bars (sim only; empty otherwise).
     pub fn gantt(&self) -> Vec<GanttEntry> {
-        match &self.imp {
-            Impl::Sim(s) => s.gantt(),
-            _ => Vec::new(),
-        }
+        self.exec.gantt()
     }
 
     pub fn mode(&self) -> &'static str {
-        match &self.imp {
-            Impl::Inline(_) => "inline",
-            Impl::Threads(_) => "threads",
-            Impl::Sim(_) => "sim",
-        }
+        self.exec.mode()
     }
-}
-
-// ---------------------------------------------------------------------------
-// Inline executor: tasks run immediately on the caller thread.
-// ---------------------------------------------------------------------------
-
-#[derive(Default)]
-struct InlineExec {
-    state: std::sync::Mutex<InlineInner>,
-}
-
-#[derive(Default)]
-struct InlineInner {
-    next_id: u64,
-    store: std::collections::HashMap<u64, Arc<Payload>>,
-    errors: std::collections::HashMap<u64, String>,
-    tasks_run: u64,
-    busy_secs: f64,
-}
-
-impl InlineExec {
-    fn put(&self, value: Payload) -> ObjectRef {
-        let mut st = self.state.lock().unwrap();
-        st.next_id += 1;
-        let id = st.next_id;
-        st.store.insert(id, Arc::new(value));
-        ObjectRef(id)
-    }
-
-    fn submit(&self, label: &str, args: Vec<ObjectRef>, _cost: f64, f: TaskFn) -> ObjectRef {
-        let mut st = self.state.lock().unwrap();
-        st.next_id += 1;
-        let id = st.next_id;
-        let vals: Vec<Arc<Payload>> = args
-            .iter()
-            .filter_map(|a| st.store.get(&a.0).cloned())
-            .collect();
-        if vals.len() != args.len() {
-            st.errors.insert(id, format!("task '{label}': missing argument object"));
-            return ObjectRef(id);
-        }
-        let borrowed: Vec<&Payload> = vals.iter().map(|a| a.as_ref()).collect();
-        let start = std::time::Instant::now();
-        match f(&borrowed) {
-            Ok(v) => {
-                st.store.insert(id, Arc::new(v));
-            }
-            Err(e) => {
-                st.errors.insert(id, format!("task '{label}': {e}"));
-            }
-        }
-        st.busy_secs += start.elapsed().as_secs_f64();
-        st.tasks_run += 1;
-        ObjectRef(id)
-    }
-
-    fn get(&self, r: &ObjectRef) -> Result<Arc<Payload>> {
-        let st = self.state.lock().unwrap();
-        if let Some(v) = st.store.get(&r.0) {
-            return Ok(v.clone());
-        }
-        Err(crate::error::NexusError::Raylet(
-            st.errors
-                .get(&r.0)
-                .cloned()
-                .unwrap_or_else(|| format!("object {} unknown", r.0)),
-        ))
-    }
-
-    fn metrics(&self) -> InlineMetrics {
-        let st = self.state.lock().unwrap();
-        InlineMetrics { tasks_run: st.tasks_run, busy_secs: st.busy_secs }
-    }
-}
-
-struct InlineMetrics {
-    tasks_run: u64,
-    busy_secs: f64,
 }
 
 #[cfg(test)]
@@ -339,5 +369,41 @@ mod tests {
         let m = sim.metrics();
         assert!(m.makespan >= 2.0);
         assert!(m.cost_dollars > 0.0);
+    }
+
+    #[test]
+    fn drop_object_supported_on_every_executor() {
+        let check = |ctx: RayContext| {
+            let a = ctx.submit("a", vec![], 0.01, add_fn());
+            // no args -> sum of nothing = 0
+            assert_eq!(ctx.get(&a).unwrap().as_scalar().unwrap(), 0.0);
+            ctx.drop_object(&a).unwrap();
+            assert_eq!(ctx.get(&a).unwrap().as_scalar().unwrap(), 0.0);
+            assert!(ctx.metrics().reconstructions >= 1);
+        };
+        check(RayContext::inline());
+        check(RayContext::threads(2));
+        check(RayContext::sim(ClusterConfig::default(), true));
+    }
+
+    #[test]
+    fn store_cap_reported_in_metrics_on_every_executor() {
+        let big_task = || -> TaskFn {
+            Arc::new(|_: &[&Payload]| Ok(Payload::Floats(vec![0.0f32; 256])))
+        };
+        let opts = ExecOpts { fault: FaultPlan::none(), store_cap: Some(2048) };
+        let run = |ctx: RayContext| {
+            let refs: Vec<ObjectRef> =
+                (0..6).map(|_| ctx.submit("blk", vec![], 0.01, big_task())).collect();
+            ctx.drain().unwrap();
+            ctx.wait_all(&refs).unwrap();
+            let m = ctx.metrics();
+            assert!(m.spills > 0, "{} spills", ctx.mode());
+            assert!(m.peak_store_bytes >= 1024, "{} peak", ctx.mode());
+            assert_eq!(m.failed, 0);
+        };
+        run(RayContext::inline_with(opts.clone()));
+        run(RayContext::threads_with(2, opts.clone()));
+        run(RayContext::sim_with(ClusterConfig::default(), true, opts));
     }
 }

@@ -1,0 +1,798 @@
+//! The shared scheduler core: ONE implementation of the task table,
+//! object store, dependency tracking, ready set, lineage graph, and
+//! fault/reconstruction policy.
+//!
+//! Before this module existed, `pool.rs` (real threads) and `sim.rs`
+//! (virtual-time cluster) each carried a private copy of all of the
+//! above, and every scheduling feature had to be written twice.  Now
+//! both executors — plus the inline baseline — are thin *drivers* over
+//! [`SchedCore`]: they decide **when** work happens (worker threads vs.
+//! a discrete-event clock) and **where** (which worker/node), while the
+//! core owns **what** is runnable and every state transition.
+//!
+//! The core is executor-agnostic on purpose:
+//!
+//! * **Placement** is expressed through per-object *residency* (the set
+//!   of nodes holding a copy).  The thread pool treats each worker as a
+//!   "node" (cache affinity); the simulator treats residency as real
+//!   object placement and charges network transfers for remote reads.
+//! * **Time** never appears here.  Drivers report execution seconds
+//!   (wall or virtual) when committing a completion.
+//! * **Faults** are decided here: per-attempt crash injection
+//!   ([`FaultPlan::should_fail`]) and the retry budget are applied in
+//!   [`SchedCore::begin`] / [`SchedCore::complete`], so every executor
+//!   gets identical fault semantics for free.
+//!
+//! The store is optionally **memory-capped**: inserts beyond
+//! `store_cap` evict least-recently-used *reconstructable* objects
+//! (spill-and-reconstruct).  A spilled object is rebuilt on demand by
+//! re-running its producing task through the lineage graph — the same
+//! path that recovers objects lost to node failures.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::Arc;
+
+use crate::error::{NexusError, Result};
+use crate::raylet::fault::FaultPlan;
+use crate::raylet::payload::Payload;
+use crate::raylet::task::{ObjectRef, TaskFn, TaskSpec, TaskState, TaskStatus};
+
+/// Executor-independent counters, mirrored into
+/// [`crate::raylet::api::Metrics`] by each driver.
+#[derive(Clone, Debug, Default)]
+pub struct CoreMetrics {
+    pub tasks_run: u64,
+    pub retries: u64,
+    pub failed: u64,
+    pub reconstructions: u64,
+    /// Objects evicted by the memory cap (LRU spill).
+    pub spills: u64,
+    /// High-water mark of total store bytes.
+    pub peak_store_bytes: u64,
+    /// Sum of task execution seconds (wall for threads, virtual for sim).
+    pub busy_secs: f64,
+    /// Dispatch overhead seconds (queue pop -> fn start, or the
+    /// simulator's per-task overhead).
+    pub overhead_secs: f64,
+}
+
+/// One stored object: the value, its byte size, and which nodes hold a
+/// copy (workers for the thread pool, cluster nodes for the simulator).
+pub struct StoreEntry {
+    pub value: Arc<Payload>,
+    pub bytes: usize,
+    pub nodes: BTreeSet<usize>,
+    /// LRU clock stamp of the last touch (put / arg read / get).
+    pub last_use: u64,
+}
+
+/// Outcome of [`SchedCore::begin`] — the dequeue-time gate every
+/// executor runs before executing a task body.
+pub enum Dequeue {
+    /// All arguments present, no injected crash: run the function.  The
+    /// argument values are cloned out so a later spill cannot starve the
+    /// in-flight attempt.
+    Run {
+        spec: TaskSpec,
+        args: Vec<Arc<Payload>>,
+    },
+    /// Arguments were missing (lost/spilled after readiness); producers
+    /// were re-queued through lineage and this task went back to Pending.
+    Repend,
+    /// Injected crash; the task was re-queued for another attempt.
+    Retry,
+    /// Injected crash with retries exhausted; the task is now Failed.
+    Fail,
+}
+
+/// Outcome of [`SchedCore::complete`].
+pub enum Completion {
+    /// Output committed; `newly_ready` dependents entered the ready set.
+    Done { newly_ready: usize },
+    /// The attempt errored; the task was re-queued.
+    Retry,
+    /// The attempt errored with retries exhausted; the task is Failed.
+    Fail,
+}
+
+/// The shared scheduler state machine.  Drivers wrap it in their own
+/// lock (`Mutex<SchedCore>` for the pool, inside `SimInner` for the
+/// simulator) and call into it for every transition.
+pub struct SchedCore {
+    next_id: u64,
+    lru_tick: u64,
+    store: HashMap<u64, StoreEntry>,
+    store_bytes: usize,
+    /// Object-store byte cap; `None` = unbounded.
+    pub store_cap: Option<usize>,
+    /// Task table (the lineage graph: specs are retained after Done).
+    pub tasks: BTreeMap<u64, TaskState>,
+    /// Ready set, ordered by id for deterministic tie-breaking.
+    pub ready: BTreeSet<u64>,
+    pub fault: FaultPlan,
+    pub metrics: CoreMetrics,
+}
+
+impl SchedCore {
+    pub fn new(fault: FaultPlan, store_cap: Option<usize>) -> SchedCore {
+        SchedCore {
+            next_id: 1,
+            lru_tick: 0,
+            store: HashMap::new(),
+            store_bytes: 0,
+            store_cap,
+            tasks: BTreeMap::new(),
+            ready: BTreeSet::new(),
+            fault,
+            metrics: CoreMetrics::default(),
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // object store
+    // ---------------------------------------------------------------
+
+    /// Place a value directly in the store (no lineage — `ray.put`).
+    pub fn put(&mut self, value: Payload, bytes: usize, node: usize) -> ObjectRef {
+        let id = self.alloc_id();
+        self.insert_object(id, Arc::new(value), bytes, node);
+        ObjectRef(id)
+    }
+
+    fn alloc_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn insert_object(&mut self, id: u64, value: Arc<Payload>, bytes: usize, node: usize) {
+        self.lru_tick += 1;
+        let entry = StoreEntry {
+            value,
+            bytes,
+            nodes: BTreeSet::from([node]),
+            last_use: self.lru_tick,
+        };
+        if let Some(prev) = self.store.insert(id, entry) {
+            self.store_bytes -= prev.bytes;
+        }
+        self.store_bytes += bytes;
+        self.metrics.peak_store_bytes =
+            self.metrics.peak_store_bytes.max(self.store_bytes as u64);
+        self.evict_over_cap(id);
+    }
+
+    /// LRU spill: evict reconstructable objects until under the cap.
+    /// Arguments of any non-terminal task (and `protect`) are pinned —
+    /// evicting an object a queued/pending task still needs would
+    /// livelock the repend/reconstruct cycle.  Objects without lineage
+    /// (puts) cannot be rebuilt and are never evicted, so the cap is a
+    /// soft target: it reclaims outputs whose consumers have all
+    /// finished (the pipeline's trailing wake), never the live
+    /// working set.
+    fn evict_over_cap(&mut self, protect: u64) {
+        let Some(cap) = self.store_cap else { return };
+        if self.store_bytes <= cap {
+            return;
+        }
+        let mut protected: BTreeSet<u64> = BTreeSet::new();
+        protected.insert(protect);
+        for t in self.tasks.values() {
+            if !t.status.is_terminal() {
+                for a in &t.spec.args {
+                    protected.insert(a.0);
+                }
+            }
+        }
+        while self.store_bytes > cap {
+            let victim = self
+                .store
+                .iter()
+                .filter(|entry| !protected.contains(entry.0) && self.tasks.contains_key(entry.0))
+                .min_by_key(|entry| (entry.1.last_use, *entry.0))
+                .map(|entry| *entry.0);
+            let Some(v) = victim else { return };
+            let gone = self.store.remove(&v).unwrap();
+            self.store_bytes -= gone.bytes;
+            self.metrics.spills += 1;
+        }
+    }
+
+    /// Fetch a value (LRU touch).  `None` if absent (never produced,
+    /// dropped, or spilled).
+    pub fn value(&mut self, id: u64) -> Option<Arc<Payload>> {
+        self.lru_tick += 1;
+        let tick = self.lru_tick;
+        let e = self.store.get_mut(&id)?;
+        e.last_use = tick;
+        Some(e.value.clone())
+    }
+
+    pub fn has_object(&self, id: u64) -> bool {
+        self.store.contains_key(&id)
+    }
+
+    pub fn object_bytes(&self, id: u64) -> Option<usize> {
+        self.store.get(&id).map(|e| e.bytes)
+    }
+
+    /// Current total store bytes.
+    pub fn store_bytes(&self) -> usize {
+        self.store_bytes
+    }
+
+    /// Bytes resident per node (index < `n_nodes`).
+    pub fn node_residency(&self, n_nodes: usize) -> Vec<u64> {
+        let mut v = vec![0u64; n_nodes];
+        for e in self.store.values() {
+            for &n in &e.nodes {
+                if n < n_nodes {
+                    v[n] += e.bytes as u64;
+                }
+            }
+        }
+        v
+    }
+
+    /// Bytes of `id`'s arguments resident on `node` (placement signal).
+    pub fn local_arg_bytes(&self, id: u64, node: usize) -> usize {
+        let Some(t) = self.tasks.get(&id) else { return 0 };
+        t.spec
+            .args
+            .iter()
+            .filter_map(|a| {
+                self.store
+                    .get(&a.0)
+                    .filter(|e| e.nodes.contains(&node))
+                    .map(|e| e.bytes)
+            })
+            .sum()
+    }
+
+    /// Arguments of `id` that are present in the store but NOT resident
+    /// on `node`, as `(object id, bytes)` — the transfer set.
+    pub fn remote_args(&self, id: u64, node: usize) -> Vec<(u64, usize)> {
+        let Some(t) = self.tasks.get(&id) else {
+            return Vec::new();
+        };
+        t.spec
+            .args
+            .iter()
+            .filter_map(|a| {
+                self.store
+                    .get(&a.0)
+                    .filter(|e| !e.nodes.contains(&node))
+                    .map(|e| (a.0, e.bytes))
+            })
+            .collect()
+    }
+
+    // ---------------------------------------------------------------
+    // submission + readiness
+    // ---------------------------------------------------------------
+
+    /// Register a task; it enters the ready set iff all arguments are
+    /// already present.  A task whose argument chain is already known
+    /// to be unproducible (upstream permanently failed, or a dropped
+    /// put) is born Failed — leaving it Pending would hang getters.
+    pub fn submit(
+        &mut self,
+        label: &str,
+        args: Vec<ObjectRef>,
+        cost_hint: f64,
+        func: TaskFn,
+    ) -> ObjectRef {
+        let id = self.alloc_id();
+        let out = ObjectRef(id);
+        let mut missing = 0;
+        let mut doomed: Option<String> = None;
+        for a in &args {
+            if !self.store.contains_key(&a.0) {
+                missing += 1;
+                match self.tasks.get_mut(&a.0) {
+                    Some(prod) => {
+                        if matches!(prod.status, TaskStatus::Failed(_)) {
+                            doomed = Some(format!(
+                                "upstream task '{}' failed permanently",
+                                prod.spec.label
+                            ));
+                        }
+                        prod.dependents.push(out);
+                    }
+                    None => {
+                        doomed = Some(format!(
+                            "argument object {} unknown and absent (dropped put object?)",
+                            a.0
+                        ));
+                    }
+                }
+            }
+        }
+        let spec = TaskSpec { out, label: label.to_string(), args, func, cost_hint };
+        let mut state = TaskState::new(spec, missing);
+        if let Some(reason) = doomed {
+            state.status = TaskStatus::Failed(reason);
+            self.metrics.failed += 1;
+        }
+        if state.status == TaskStatus::Ready {
+            self.ready.insert(id);
+        }
+        self.tasks.insert(id, state);
+        out
+    }
+
+    /// How many ready tasks a locality pick examines.  Bounding the scan
+    /// keeps dispatch O(1)-ish under huge fan-outs (20k queued no-arg
+    /// tasks must not make every pop an O(n) walk); within a window this
+    /// size, crossfit-shaped DAGs fit entirely.
+    const PICK_WINDOW: usize = 64;
+
+    /// Remove and return the ready task with the most argument bytes
+    /// resident on `node` (ties: lowest id), scanning the first
+    /// [`Self::PICK_WINDOW`] ready ids.  This is the "most argument
+    /// bytes resident" locality policy, shared by the thread pool
+    /// (worker affinity) and usable by any future placement driver.
+    pub fn pick_ready_for(&mut self, node: usize) -> Option<u64> {
+        let mut best: Option<(usize, u64)> = None;
+        for &id in self.ready.iter().take(Self::PICK_WINDOW) {
+            let local = self.local_arg_bytes(id, node);
+            match best {
+                None => best = Some((local, id)),
+                Some((bl, _)) if local > bl => best = Some((local, id)),
+                _ => {}
+            }
+        }
+        let (_, id) = best?;
+        self.ready.remove(&id);
+        Some(id)
+    }
+
+    /// Remove and return the lowest-id ready task (FIFO-ish order; the
+    /// simulator picks the node per task instead of the task per node).
+    pub fn pop_ready(&mut self) -> Option<u64> {
+        let id = *self.ready.iter().next()?;
+        self.ready.remove(&id);
+        Some(id)
+    }
+
+    // ---------------------------------------------------------------
+    // the dequeue-time gate
+    // ---------------------------------------------------------------
+
+    /// Dequeue-time argument check + fault injection, shared by every
+    /// executor.  Call after removing `id` from the ready set, with the
+    /// node chosen to run it.  On [`Dequeue::Run`] the arguments are
+    /// marked resident on `node` and their values cloned out.
+    ///
+    /// Errors propagate only when lineage reconstruction is impossible
+    /// (an argument chain bottoms out in a dropped put).
+    pub fn begin(&mut self, id: u64, node: usize) -> Result<Dequeue> {
+        let Some(t) = self.tasks.get(&id) else {
+            return Ok(Dequeue::Repend); // unknown id: nothing to run
+        };
+        let spec = t.spec.clone();
+
+        // arguments lost after this task became ready: re-pend it and
+        // re-queue the producers (reconstruction safety).  Deduplicated:
+        // a task may take the same ObjectRef twice, but each producer's
+        // dependents list holds this task once per reconstruction, so
+        // missing_deps must count distinct objects or it never reaches 0.
+        let missing: Vec<u64> = spec
+            .args
+            .iter()
+            .filter(|a| !self.store.contains_key(&a.0))
+            .map(|a| a.0)
+            .collect::<BTreeSet<u64>>()
+            .into_iter()
+            .collect();
+        if !missing.is_empty() {
+            self.repend(id, &missing)?;
+            return Ok(Dequeue::Repend);
+        }
+
+        // injected crash for this attempt?
+        let attempt = self.tasks[&id].attempts;
+        if self.fault.should_fail(id, attempt) {
+            let max_retries = self.fault.max_retries;
+            let t = self.tasks.get_mut(&id).unwrap();
+            t.attempts += 1;
+            if t.attempts > max_retries {
+                t.status =
+                    TaskStatus::Failed(format!("injected crash (attempt {})", t.attempts));
+                self.metrics.failed += 1;
+                self.cascade_failure(id);
+                return Ok(Dequeue::Fail);
+            }
+            t.status = TaskStatus::Ready;
+            self.metrics.retries += 1;
+            self.ready.insert(id);
+            return Ok(Dequeue::Retry);
+        }
+
+        // pin argument values + mark them resident on the running node
+        let mut args = Vec::with_capacity(spec.args.len());
+        for a in &spec.args {
+            self.lru_tick += 1;
+            let tick = self.lru_tick;
+            let e = self.store.get_mut(&a.0).unwrap();
+            e.last_use = tick;
+            e.nodes.insert(node);
+            args.push(e.value.clone());
+        }
+        Ok(Dequeue::Run { spec, args })
+    }
+
+    /// Re-pend `id` on `missing` arguments, re-queueing their producers
+    /// through lineage.
+    fn repend(&mut self, id: u64, missing: &[u64]) -> Result<()> {
+        for &m in missing {
+            self.ensure_queued(m)?;
+            if let Some(prod) = self.tasks.get_mut(&m) {
+                if !prod.dependents.contains(&ObjectRef(id)) {
+                    prod.dependents.push(ObjectRef(id));
+                }
+            }
+        }
+        let t = self.tasks.get_mut(&id).unwrap();
+        t.missing_deps = missing.len();
+        t.status = TaskStatus::Pending;
+        Ok(())
+    }
+
+    /// Mark `id` permanently failed (driver-side error handling for a
+    /// reconstruction that bottomed out).  No-op if already failed — the
+    /// cascade may reach a task before its own driver-side marking does.
+    pub fn fail_task(&mut self, id: u64, err: String) {
+        if let Some(t) = self.tasks.get_mut(&id) {
+            if matches!(t.status, TaskStatus::Failed(_)) {
+                return;
+            }
+            t.status = TaskStatus::Failed(err);
+        }
+        self.metrics.failed += 1;
+        self.cascade_failure(id);
+    }
+
+    /// A permanently-failed task can never produce its output, so every
+    /// pending dependent (transitively) is unrunnable: fail them too.
+    /// Without this, a getter blocked on a downstream object would wait
+    /// forever instead of surfacing the upstream error.
+    fn cascade_failure(&mut self, id: u64) {
+        let mut stack = vec![id];
+        while let Some(f) = stack.pop() {
+            let (label, dependents) = match self.tasks.get(&f) {
+                Some(t) => (t.spec.label.clone(), t.dependents.clone()),
+                None => continue,
+            };
+            for dep in dependents {
+                if let Some(dt) = self.tasks.get_mut(&dep.0) {
+                    if dt.status == TaskStatus::Pending {
+                        dt.status = TaskStatus::Failed(format!(
+                            "upstream task '{label}' failed permanently"
+                        ));
+                        self.metrics.failed += 1;
+                        stack.push(dep.0);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // completion
+    // ---------------------------------------------------------------
+
+    /// Commit a finished attempt.  `bytes` overrides the payload's own
+    /// size (the simulator's dry-run hints); `busy` is the attempt's
+    /// execution seconds (wall or virtual).
+    ///
+    /// On success, dependents are marked ready BEFORE the object is
+    /// inserted so the memory cap never evicts arguments of tasks that
+    /// just became runnable.
+    pub fn complete(
+        &mut self,
+        id: u64,
+        node: usize,
+        result: Result<Payload>,
+        bytes: Option<usize>,
+        busy: f64,
+    ) -> Completion {
+        self.metrics.busy_secs += busy;
+        match result {
+            Ok(value) => {
+                let b = bytes.unwrap_or_else(|| value.size_bytes());
+                let dependents = {
+                    let t = self.tasks.get_mut(&id).unwrap();
+                    t.status = TaskStatus::Done;
+                    std::mem::take(&mut t.dependents)
+                };
+                let mut newly_ready = 0;
+                for dep in dependents {
+                    if let Some(dt) = self.tasks.get_mut(&dep.0) {
+                        if dt.status == TaskStatus::Pending {
+                            dt.missing_deps = dt.missing_deps.saturating_sub(1);
+                            if dt.missing_deps == 0 {
+                                dt.status = TaskStatus::Ready;
+                                self.ready.insert(dep.0);
+                                newly_ready += 1;
+                            }
+                        }
+                    }
+                }
+                self.insert_object(id, Arc::new(value), b, node);
+                self.metrics.tasks_run += 1;
+                Completion::Done { newly_ready }
+            }
+            Err(e) => self.record_failure(id, e.to_string()),
+        }
+    }
+
+    /// Retry-or-fail bookkeeping for a crashed/errored attempt.
+    pub fn record_failure(&mut self, id: u64, err: String) -> Completion {
+        let max_retries = self.fault.max_retries;
+        let t = self.tasks.get_mut(&id).unwrap();
+        t.attempts += 1;
+        if t.attempts > max_retries {
+            t.status = TaskStatus::Failed(err);
+            self.metrics.failed += 1;
+            self.cascade_failure(id);
+            Completion::Fail
+        } else {
+            t.status = TaskStatus::Ready;
+            self.metrics.retries += 1;
+            self.ready.insert(id);
+            Completion::Retry
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // lineage / reconstruction
+    // ---------------------------------------------------------------
+
+    /// Re-queue the producer of object `id` (recursively re-queueing
+    /// producers of missing arguments).  No-op if the object is present
+    /// or its task is already queued/running.
+    pub fn ensure_queued(&mut self, id: u64) -> Result<()> {
+        if self.store.contains_key(&id) {
+            return Ok(());
+        }
+        let (args, status) = match self.tasks.get(&id) {
+            None => {
+                return Err(NexusError::Raylet(format!(
+                    "cannot reconstruct object {id}: no lineage"
+                )))
+            }
+            Some(t) => (t.spec.args.clone(), t.status.clone()),
+        };
+        if status == TaskStatus::Ready {
+            return Ok(()); // queued or currently running
+        }
+        // distinct missing objects only: dependents are deduped below,
+        // so counting a twice-passed arg twice would strand the task.
+        let missing_ids: BTreeSet<u64> = args
+            .iter()
+            .filter(|a| !self.store.contains_key(&a.0))
+            .map(|a| a.0)
+            .collect();
+        let missing = missing_ids.len();
+        for m in missing_ids {
+            self.ensure_queued(m)?;
+            if let Some(prod) = self.tasks.get_mut(&m) {
+                if !prod.dependents.contains(&ObjectRef(id)) {
+                    prod.dependents.push(ObjectRef(id));
+                }
+            }
+        }
+        let t = self.tasks.get_mut(&id).unwrap();
+        t.missing_deps = missing;
+        if missing == 0 {
+            t.status = TaskStatus::Ready;
+            self.ready.insert(id);
+        } else {
+            t.status = TaskStatus::Pending;
+        }
+        Ok(())
+    }
+
+    /// Explicitly drop an object (all replicas), counting a
+    /// reconstruction and re-queueing its producer.  Errors for objects
+    /// without lineage (puts cannot be rebuilt).
+    pub fn drop_object(&mut self, id: u64) -> Result<()> {
+        if let Some(e) = self.store.remove(&id) {
+            self.store_bytes -= e.bytes;
+        }
+        if self.tasks.contains_key(&id) {
+            self.metrics.reconstructions += 1;
+            self.ensure_queued(id)
+        } else {
+            Err(NexusError::Raylet(format!(
+                "object {id} has no lineage (was a put); cannot reconstruct"
+            )))
+        }
+    }
+
+    /// A node died: remove its replicas; objects whose only copy lived
+    /// there are lost and re-queued through lineage.
+    pub fn drop_node_replicas(&mut self, node: usize) -> Result<()> {
+        let affected: Vec<u64> = self
+            .store
+            .iter()
+            .filter(|(_, e)| e.nodes.contains(&node))
+            .map(|(&id, _)| id)
+            .collect();
+        for id in affected {
+            let entry = self.store.get_mut(&id).unwrap();
+            entry.nodes.remove(&node);
+            if entry.nodes.is_empty() {
+                let gone = self.store.remove(&id).unwrap();
+                self.store_bytes -= gone.bytes;
+                if self.tasks.contains_key(&id) {
+                    self.metrics.reconstructions += 1;
+                    self.ensure_queued(id)?;
+                } else {
+                    return Err(NexusError::Raylet(format!(
+                        "object {id} lost with node {node} and has no lineage"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A node died under a running attempt: count a retry and re-queue.
+    pub fn requeue_running(&mut self, id: u64) {
+        if let Some(t) = self.tasks.get_mut(&id) {
+            t.attempts += 1;
+            t.status = TaskStatus::Ready;
+            self.metrics.retries += 1;
+            self.ready.insert(id);
+        }
+    }
+
+    /// If `id` was produced once but its object is gone (spilled or
+    /// explicitly lost), count a reconstruction and re-queue the
+    /// producer through lineage.  Returns true if a rebuild was queued.
+    /// The shared "get found status Done but no value" path.
+    pub fn reclaim_if_spilled(&mut self, id: u64) -> Result<bool> {
+        let done = matches!(
+            self.tasks.get(&id).map(|t| &t.status),
+            Some(TaskStatus::Done)
+        );
+        if done && !self.store.contains_key(&id) {
+            self.metrics.reconstructions += 1;
+            self.ensure_queued(id)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// The executor-independent slice of [`crate::raylet::api::Metrics`];
+    /// drivers overlay their own fields (makespan, transfers, ...).
+    pub fn base_metrics(&self, n_nodes: usize) -> crate::raylet::api::Metrics {
+        let m = &self.metrics;
+        crate::raylet::api::Metrics {
+            tasks_run: m.tasks_run,
+            retries: m.retries,
+            failed: m.failed,
+            reconstructions: m.reconstructions,
+            spills: m.spills,
+            peak_store_bytes: m.peak_store_bytes,
+            busy_secs: m.busy_secs,
+            overhead_secs: m.overhead_secs,
+            node_residency: self.node_residency(n_nodes),
+            ..Default::default()
+        }
+    }
+
+    /// Standard "producer failed" error for `get` paths.
+    pub fn failure_error(&self, id: u64) -> Option<NexusError> {
+        let t = self.tasks.get(&id)?;
+        if let TaskStatus::Failed(e) = &t.status {
+            Some(NexusError::Raylet(format!(
+                "task '{}' failed permanently: {e}",
+                t.spec.label
+            )))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn val(v: f64) -> TaskFn {
+        Arc::new(move |_: &[&Payload]| Ok(Payload::Scalar(v)))
+    }
+
+    fn run_to_quiescence(core: &mut SchedCore) {
+        while let Some(id) = core.pick_ready_for(0) {
+            match core.begin(id, 0).unwrap() {
+                Dequeue::Run { spec, args } => {
+                    let borrowed: Vec<&Payload> = args.iter().map(|a| a.as_ref()).collect();
+                    let result = (spec.func)(&borrowed);
+                    core.complete(id, 0, result, None, 0.0);
+                }
+                Dequeue::Repend | Dequeue::Retry | Dequeue::Fail => {}
+            }
+        }
+    }
+
+    #[test]
+    fn submit_tracks_dependencies() {
+        let mut core = SchedCore::new(FaultPlan::none(), None);
+        let a = core.submit("a", vec![], 0.0, val(1.0));
+        let b = core.submit("b", vec![a], 0.0, val(2.0));
+        assert_eq!(core.ready.len(), 1); // only a
+        run_to_quiescence(&mut core);
+        assert!(core.has_object(b.0));
+        assert_eq!(core.metrics.tasks_run, 2);
+    }
+
+    #[test]
+    fn lru_cap_spills_and_lineage_rebuilds() {
+        // cap of 100 bytes; three 48-byte task outputs force spills
+        let mut core = SchedCore::new(FaultPlan::none(), Some(100));
+        let make = |_i: usize| -> TaskFn {
+            Arc::new(move |_: &[&Payload]| Ok(Payload::Floats(vec![0.0f32; 12])))
+        };
+        let refs: Vec<ObjectRef> =
+            (0..3).map(|i| core.submit("blk", vec![], 0.0, make(i))).collect();
+        run_to_quiescence(&mut core);
+        assert!(core.metrics.spills >= 1, "spills={}", core.metrics.spills);
+        assert!(core.store_bytes() <= 100);
+        // the spilled first output reconstructs through lineage
+        let first = refs[0];
+        if !core.has_object(first.0) {
+            core.ensure_queued(first.0).unwrap();
+            run_to_quiescence(&mut core);
+            assert!(core.has_object(first.0));
+        }
+        assert!(core.metrics.peak_store_bytes >= 96);
+    }
+
+    #[test]
+    fn puts_are_never_evicted() {
+        let mut core = SchedCore::new(FaultPlan::none(), Some(10));
+        let p = core.put(Payload::Floats(vec![0.0f32; 8]), 32, 0); // over cap already
+        let _t = core.submit("t", vec![], 0.0, val(1.0));
+        run_to_quiescence(&mut core);
+        assert!(core.has_object(p.0), "put must survive the cap");
+    }
+
+    #[test]
+    fn locality_pick_prefers_resident_args() {
+        let mut core = SchedCore::new(FaultPlan::none(), None);
+        let a = core.put(Payload::Floats(vec![0.0f32; 100]), 400, 1); // resident on node 1
+        let b = core.put(Payload::Scalar(1.0), 8, 0); // resident on node 0
+        let ta = core.submit("uses-a", vec![a], 0.0, val(0.0));
+        let tb = core.submit("uses-b", vec![b], 0.0, val(0.0));
+        // node 1 should pick the task whose bytes live there
+        assert_eq!(core.pick_ready_for(1), Some(ta.0));
+        assert_eq!(core.pick_ready_for(0), Some(tb.0));
+    }
+
+    #[test]
+    fn injected_crashes_retry_then_fail() {
+        let mut core = SchedCore::new(FaultPlan::with_prob(1.0, 2, 7), None);
+        let r = core.submit("doomed", vec![], 0.0, val(1.0));
+        run_to_quiescence(&mut core);
+        assert!(core.failure_error(r.0).is_some());
+        assert_eq!(core.metrics.retries, 2);
+        assert_eq!(core.metrics.failed, 1);
+    }
+
+    #[test]
+    fn node_replica_loss_requeues_producers() {
+        let mut core = SchedCore::new(FaultPlan::none(), None);
+        let a = core.submit("a", vec![], 0.0, val(5.0));
+        run_to_quiescence(&mut core);
+        assert!(core.has_object(a.0));
+        core.drop_node_replicas(0).unwrap();
+        assert!(!core.has_object(a.0));
+        assert_eq!(core.metrics.reconstructions, 1);
+        run_to_quiescence(&mut core);
+        assert!(core.has_object(a.0));
+    }
+}

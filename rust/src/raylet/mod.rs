@@ -19,25 +19,35 @@
 //! assert_eq!(ctx.get(&b).unwrap().as_scalar().unwrap(), 4.0);
 //! ```
 //!
-//! Two executors implement the same submission API:
+//! Architecture: ONE scheduler state machine, several drivers.
 //!
-//! * [`pool::ThreadPool`] — real OS threads; used for correctness and for
-//!   wall-clock speedup measurements at small scale.
+//! * [`core::SchedCore`] — the shared core: task table, object store
+//!   (with per-node residency and an optional LRU memory cap), ready
+//!   set, lineage graph, and the fault/retry/reconstruction policy.
+//! * [`pool::ThreadPool`] — real OS threads driving the core; used for
+//!   correctness and wall-clock speedups.  Locality-aware: each worker
+//!   prefers the ready task with the most argument bytes it produced.
 //! * [`sim::SimCluster`] — virtual-time discrete-event simulation of an
-//!   N-node cluster (slots, network transfers, per-task overhead).  This
-//!   is how the paper's 5-node EC2 runtime figure is reproduced on a
-//!   single-core box: task *costs* are measured from real PJRT
-//!   executions, the *schedule* is simulated.  See DESIGN.md §3.
+//!   N-node cluster (slots, network transfers, per-task overhead) over
+//!   the same core.  This is how the paper's 5-node EC2 runtime figure
+//!   is reproduced on a single-core box: task *costs* are measured from
+//!   real PJRT executions, the *schedule* is simulated.  See DESIGN.md §3.
+//! * [`inline::InlineExec`] — the sequential baseline, also a driver.
+//!
+//! All three sit behind the [`api::Executor`] trait; [`api::RayContext`]
+//! is the user-facing facade.
 
 pub mod payload;
 pub mod task;
+pub mod core;
+pub mod inline;
 pub mod pool;
 pub mod sim;
 pub mod fault;
 pub mod actor;
 pub mod api;
 
-pub use api::{Metrics, RayContext};
+pub use api::{ExecOpts, Executor, Metrics, RayContext};
 pub use fault::FaultPlan;
 pub use payload::Payload;
 pub use task::{ObjectRef, TaskFn};

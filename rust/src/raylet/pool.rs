@@ -1,59 +1,49 @@
-//! Real-thread executor: a worker pool over a shared DAG scheduler.
+//! Real-thread executor: a worker pool driving the shared
+//! [`SchedCore`] scheduler state machine.
 //!
-//! One global lock guards the scheduler state; task granularity (block
-//! kernels, ~ms+) dwarfs lock hold times (queue ops), so contention is
+//! One global lock guards the core; task granularity (block kernels,
+//! ~ms+) dwarfs lock hold times (queue ops), so contention is
 //! negligible — measured in `benches/ablation_overhead.rs`, dispatch
 //! overhead stays in the microseconds, which is the paper's "Ray beats
 //! Spark/joblib on task overhead" argument at our scale.
 //!
-//! Fault tolerance: tasks carry their lineage (see `task.rs`); a crash
-//! (injected by [`FaultPlan`]) re-queues the attempt, and an object
-//! dropped via [`ThreadPool::drop_object`] is reconstructed on demand by
-//! re-running its producer — recursively if the producer's inputs were
-//! also lost.  A dequeue-time argument check makes reconstruction safe
-//! against counter drift: a task only runs when all its inputs are
-//! actually present.
+//! **Locality-aware dispatch**: each worker is a "node" in the core's
+//! residency model.  A worker that produced (or last read) an object is
+//! considered to hold it, and [`SchedCore::pick_ready_for`] hands each
+//! idle worker the ready task with the most argument bytes resident on
+//! it — the same "most argument bytes resident" policy the simulated
+//! cluster uses for node placement, now shared through the core.  On a
+//! shared-memory pool this is cache affinity: reduce trees and
+//! residual passes chain onto the worker that just materialized their
+//! inputs.
+//!
+//! Fault tolerance lives in the core: injected crashes re-queue the
+//! attempt, and an object dropped via [`ThreadPool::drop_object`] (or
+//! spilled by the memory cap) is reconstructed on demand by re-running
+//! its producer — recursively if the producer's inputs were also lost.
+//! The dequeue-time argument check in [`SchedCore::begin`] makes
+//! reconstruction safe against counter drift: a task only runs when all
+//! its inputs are actually present.
 
-use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::error::{NexusError, Result};
+use crate::raylet::api::Metrics;
+use crate::raylet::core::{Completion, Dequeue, SchedCore};
 use crate::raylet::fault::FaultPlan;
 use crate::raylet::payload::Payload;
-use crate::raylet::task::{ObjectRef, TaskFn, TaskSpec, TaskState, TaskStatus};
-
-/// Wall-clock metrics mirrored into [`crate::raylet::api::Metrics`].
-#[derive(Clone, Debug, Default)]
-pub struct PoolMetrics {
-    pub tasks_run: u64,
-    pub retries: u64,
-    pub failed: u64,
-    pub reconstructions: u64,
-    /// Sum of task execution seconds (across workers).
-    pub busy_secs: f64,
-    /// Sum of dispatch overhead seconds (queue pop -> fn start).
-    pub dispatch_secs: f64,
-}
-
-struct Inner {
-    next_id: u64,
-    store: HashMap<u64, Arc<Payload>>,
-    tasks: HashMap<u64, TaskState>,
-    ready: VecDeque<u64>,
-    metrics: PoolMetrics,
-}
+use crate::raylet::task::{ObjectRef, TaskFn, TaskStatus};
 
 struct Shared {
-    state: Mutex<Inner>,
+    core: Mutex<SchedCore>,
     /// Wakes workers when ready tasks appear / shutdown flips.
     work_cv: Condvar,
     /// Wakes getters when objects complete or fail.
     done_cv: Condvar,
     shutdown: AtomicBool,
-    fault: FaultPlan,
 }
 
 /// The thread-pool executor.
@@ -65,29 +55,28 @@ pub struct ThreadPool {
 
 impl ThreadPool {
     pub fn new(workers: usize) -> ThreadPool {
-        ThreadPool::with_faults(workers, FaultPlan::none())
+        ThreadPool::with_opts(workers, FaultPlan::none(), None)
     }
 
     pub fn with_faults(workers: usize, fault: FaultPlan) -> ThreadPool {
+        ThreadPool::with_opts(workers, fault, None)
+    }
+
+    /// Full-control constructor: fault plan + object-store byte cap
+    /// (LRU spill-and-reconstruct; `None` = unbounded).
+    pub fn with_opts(workers: usize, fault: FaultPlan, store_cap: Option<usize>) -> ThreadPool {
         let shared = Arc::new(Shared {
-            state: Mutex::new(Inner {
-                next_id: 1,
-                store: HashMap::new(),
-                tasks: HashMap::new(),
-                ready: VecDeque::new(),
-                metrics: PoolMetrics::default(),
-            }),
+            core: Mutex::new(SchedCore::new(fault, store_cap)),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            fault,
         });
         let handles = (0..workers.max(1))
             .map(|i| {
                 let sh = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("raylet-worker-{i}"))
-                    .spawn(move || worker_loop(sh))
+                    .spawn(move || worker_loop(sh, i))
                     .expect("spawn worker")
             })
             .collect();
@@ -95,12 +84,15 @@ impl ThreadPool {
     }
 
     /// Place a value directly in the store (no lineage — like `ray.put`).
+    /// Puts land on "node" 0 (the driver's worker affinity).
     pub fn put(&self, value: Payload) -> ObjectRef {
-        let mut st = self.shared.state.lock().unwrap();
-        let id = st.next_id;
-        st.next_id += 1;
-        st.store.insert(id, Arc::new(value));
-        ObjectRef(id)
+        let bytes = value.size_bytes();
+        self.put_sized(value, bytes)
+    }
+
+    pub fn put_sized(&self, value: Payload, bytes: usize) -> ObjectRef {
+        let mut core = self.shared.core.lock().unwrap();
+        core.put(value, bytes, 0)
     }
 
     /// Submit a task; returns the ref of its (future) output.
@@ -111,55 +103,44 @@ impl ThreadPool {
         cost_hint: f64,
         func: TaskFn,
     ) -> ObjectRef {
-        let mut st = self.shared.state.lock().unwrap();
-        let id = st.next_id;
-        st.next_id += 1;
-        let out = ObjectRef(id);
-        let mut missing = 0;
-        for a in &args {
-            if !st.store.contains_key(&a.0) {
-                missing += 1;
-                if let Some(prod) = st.tasks.get_mut(&a.0) {
-                    prod.dependents.push(out);
-                }
-            }
-        }
-        let spec = TaskSpec { out, label: label.to_string(), args, func, cost_hint };
-        let state = TaskState::new(spec, missing);
-        let ready = state.status == TaskStatus::Ready;
-        st.tasks.insert(id, state);
+        let mut core = self.shared.core.lock().unwrap();
+        let out = core.submit(label, args, cost_hint, func);
+        let ready = core.ready.contains(&out.0);
+        drop(core);
         if ready {
-            st.ready.push_back(id);
-            drop(st);
             self.shared.work_cv.notify_one();
         }
         out
     }
 
-    /// Block until the object exists (or its producer permanently failed).
+    /// Block until the object exists (or its producer permanently
+    /// failed).  An object that was produced once but lost (dropped or
+    /// spilled) is reconstructed through lineage transparently.
     pub fn get(&self, r: &ObjectRef) -> Result<Arc<Payload>> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut core = self.shared.core.lock().unwrap();
         loop {
-            if let Some(v) = st.store.get(&r.0) {
-                return Ok(v.clone());
+            if let Some(v) = core.value(r.0) {
+                return Ok(v);
             }
-            match st.tasks.get(&r.0) {
+            let status = core.tasks.get(&r.0).map(|t| t.status.clone());
+            match status {
                 None => {
                     return Err(NexusError::Raylet(format!(
                         "object {} unknown and absent (dropped put object?)",
                         r.0
                     )))
                 }
-                Some(t) => {
-                    if let TaskStatus::Failed(e) = &t.status {
-                        return Err(NexusError::Raylet(format!(
-                            "task '{}' failed permanently: {e}",
-                            t.spec.label
-                        )));
-                    }
+                Some(TaskStatus::Failed(_)) => {
+                    return Err(core.failure_error(r.0).unwrap());
                 }
+                Some(TaskStatus::Done) => {
+                    // produced once but spilled/lost: rebuild via lineage
+                    core.reclaim_if_spilled(r.0)?;
+                    self.shared.work_cv.notify_all();
+                }
+                _ => {}
             }
-            st = self.shared.done_cv.wait(st).unwrap();
+            core = self.shared.done_cv.wait(core).unwrap();
         }
     }
 
@@ -171,28 +152,20 @@ impl ThreadPool {
         Ok(())
     }
 
-    /// Simulate object loss (a worker/node dying after producing output).
-    /// The object is removed; a future `get` triggers lineage
-    /// reconstruction.
+    /// Simulate object loss (a worker/node dying after producing
+    /// output).  The object is removed; its producer re-queues
+    /// immediately and a future `get` sees the reconstructed value.
     pub fn drop_object(&self, r: &ObjectRef) -> Result<()> {
-        let mut st = self.shared.state.lock().unwrap();
-        st.store.remove(&r.0);
-        if st.tasks.contains_key(&r.0) {
-            st.metrics.reconstructions += 1;
-            ensure_queued(&mut st, r.0)?;
-            drop(st);
-            self.shared.work_cv.notify_all();
-            Ok(())
-        } else {
-            Err(NexusError::Raylet(format!(
-                "object {} has no lineage (was a put); cannot reconstruct",
-                r.0
-            )))
-        }
+        let mut core = self.shared.core.lock().unwrap();
+        let res = core.drop_object(r.0);
+        drop(core);
+        self.shared.work_cv.notify_all();
+        res
     }
 
-    pub fn metrics(&self) -> PoolMetrics {
-        self.shared.state.lock().unwrap().metrics.clone()
+    pub fn metrics(&self) -> Metrics {
+        let core = self.shared.core.lock().unwrap();
+        core.base_metrics(self.workers.len())
     }
 
     pub fn workers(&self) -> usize {
@@ -210,180 +183,70 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Re-queue `id` for execution, recursively re-queueing producers of any
-/// missing arguments (lineage reconstruction).  Caller holds the lock.
-fn ensure_queued(st: &mut Inner, id: u64) -> Result<()> {
-    if st.store.contains_key(&id) {
-        return Ok(());
-    }
-    let (args, already_queued) = match st.tasks.get(&id) {
-        None => {
-            return Err(NexusError::Raylet(format!(
-                "cannot reconstruct object {id}: no lineage"
-            )))
-        }
-        Some(t) => (t.spec.args.clone(), t.status == TaskStatus::Ready),
-    };
-    if already_queued {
-        return Ok(());
-    }
-    let mut missing = 0;
-    for a in &args {
-        if !st.store.contains_key(&a.0) {
-            missing += 1;
-            ensure_queued(st, a.0)?;
-            if let Some(prod) = st.tasks.get_mut(&a.0) {
-                if !prod.dependents.contains(&ObjectRef(id)) {
-                    prod.dependents.push(ObjectRef(id));
-                }
-            }
-        }
-    }
-    let t = st.tasks.get_mut(&id).unwrap();
-    t.missing_deps = missing;
-    if missing == 0 {
-        t.status = TaskStatus::Ready;
-        st.ready.push_back(id);
-    } else {
-        t.status = TaskStatus::Pending;
-    }
-    Ok(())
-}
-
-fn worker_loop(shared: Arc<Shared>) {
+fn worker_loop(shared: Arc<Shared>, worker: usize) {
     loop {
-        // -------- dequeue --------
-        let mut st = shared.state.lock().unwrap();
+        // -------- dequeue (locality-aware) --------
+        let mut core = shared.core.lock().unwrap();
         let id = loop {
-            if let Some(id) = st.ready.pop_front() {
+            if let Some(id) = core.pick_ready_for(worker) {
                 break id;
             }
             if shared.shutdown.load(Ordering::SeqCst) {
                 return;
             }
-            st = shared.work_cv.wait(st).unwrap();
+            core = shared.work_cv.wait(core).unwrap();
         };
         let dispatch_start = Instant::now();
 
-        // -------- dequeue-time argument check (reconstruction safety) ----
-        let spec = st.tasks.get(&id).map(|t| t.spec.clone());
-        let Some(spec) = spec else { continue };
-        let mut missing_args = Vec::new();
-        let mut arg_values: Vec<Arc<Payload>> = Vec::with_capacity(spec.args.len());
-        for a in &spec.args {
-            match st.store.get(&a.0) {
-                Some(v) => arg_values.push(v.clone()),
-                None => missing_args.push(a.0),
-            }
-        }
-        if !missing_args.is_empty() {
-            // args were lost after this task became ready: re-pend it
-            let ok: Result<()> = (|| {
-                for m in &missing_args {
-                    ensure_queued(&mut st, *m)?;
-                    if let Some(prod) = st.tasks.get_mut(m) {
-                        if !prod.dependents.contains(&ObjectRef(id)) {
-                            prod.dependents.push(ObjectRef(id));
-                        }
-                    }
-                }
-                Ok(())
-            })();
-            let t = st.tasks.get_mut(&id).unwrap();
-            match ok {
-                Ok(()) => {
-                    t.missing_deps = missing_args.len();
-                    t.status = TaskStatus::Pending;
-                }
-                Err(e) => {
-                    t.status = TaskStatus::Failed(e.to_string());
-                    st.metrics.failed += 1;
-                    drop(st);
-                    shared.done_cv.notify_all();
-                    continue;
-                }
-            }
-            drop(st);
-            shared.work_cv.notify_all();
-            continue;
-        }
-
-        // -------- fault injection --------
-        let attempt = st.tasks.get(&id).map(|t| t.attempts).unwrap_or(0);
-        if shared.fault.should_fail(id, attempt) {
-            let t = st.tasks.get_mut(&id).unwrap();
-            t.attempts += 1;
-            if t.attempts > shared.fault.max_retries {
-                t.status = TaskStatus::Failed(format!(
-                    "injected crash (attempt {})",
-                    t.attempts
-                ));
-                st.metrics.failed += 1;
-                drop(st);
+        // -------- the shared dequeue-time gate --------
+        match core.begin(id, worker) {
+            Err(e) => {
+                // reconstruction bottomed out (dropped put in the chain)
+                core.fail_task(id, e.to_string());
+                drop(core);
                 shared.done_cv.notify_all();
-            } else {
-                t.status = TaskStatus::Ready;
-                st.metrics.retries += 1;
-                st.ready.push_back(id);
-                drop(st);
+            }
+            Ok(Dequeue::Repend) => {
+                // producers of lost args were re-queued
+                drop(core);
+                shared.work_cv.notify_all();
+            }
+            Ok(Dequeue::Retry) => {
+                drop(core);
                 shared.work_cv.notify_one();
             }
-            continue;
-        }
-        st.metrics.dispatch_secs += dispatch_start.elapsed().as_secs_f64();
-        drop(st);
-
-        // -------- execute (lock released) --------
-        let borrowed: Vec<&Payload> = arg_values.iter().map(|a| a.as_ref()).collect();
-        let run_start = Instant::now();
-        let result = (spec.func)(&borrowed);
-        let elapsed = run_start.elapsed().as_secs_f64();
-
-        // -------- commit --------
-        let mut st = shared.state.lock().unwrap();
-        st.metrics.busy_secs += elapsed;
-        match result {
-            Ok(value) => {
-                st.store.insert(id, Arc::new(value));
-                st.metrics.tasks_run += 1;
-                let dependents = {
-                    let t = st.tasks.get_mut(&id).unwrap();
-                    t.status = TaskStatus::Done;
-                    std::mem::take(&mut t.dependents)
-                };
-                let mut woke = false;
-                for dep in dependents {
-                    if let Some(dt) = st.tasks.get_mut(&dep.0) {
-                        if dt.status == TaskStatus::Pending {
-                            dt.missing_deps = dt.missing_deps.saturating_sub(1);
-                            if dt.missing_deps == 0 {
-                                dt.status = TaskStatus::Ready;
-                                st.ready.push_back(dep.0);
-                                woke = true;
-                            }
-                        }
-                    }
-                }
-                drop(st);
-                if woke {
-                    shared.work_cv.notify_all();
-                }
+            Ok(Dequeue::Fail) => {
+                drop(core);
                 shared.done_cv.notify_all();
             }
-            Err(e) => {
-                let t = st.tasks.get_mut(&id).unwrap();
-                t.attempts += 1;
-                if t.attempts > shared.fault.max_retries {
-                    t.status = TaskStatus::Failed(e.to_string());
-                    st.metrics.failed += 1;
-                    drop(st);
-                    shared.done_cv.notify_all();
-                } else {
-                    t.status = TaskStatus::Ready;
-                    st.metrics.retries += 1;
-                    st.ready.push_back(id);
-                    drop(st);
-                    shared.work_cv.notify_one();
+            Ok(Dequeue::Run { spec, args }) => {
+                core.metrics.overhead_secs += dispatch_start.elapsed().as_secs_f64();
+                drop(core);
+
+                // -------- execute (lock released) --------
+                let borrowed: Vec<&Payload> = args.iter().map(|a| a.as_ref()).collect();
+                let run_start = Instant::now();
+                let result = (spec.func)(&borrowed);
+                let elapsed = run_start.elapsed().as_secs_f64();
+
+                // -------- commit --------
+                let mut core = shared.core.lock().unwrap();
+                match core.complete(id, worker, result, None, elapsed) {
+                    Completion::Done { newly_ready } => {
+                        drop(core);
+                        if newly_ready > 0 {
+                            shared.work_cv.notify_all();
+                        }
+                        shared.done_cv.notify_all();
+                    }
+                    Completion::Retry => {
+                        drop(core);
+                        shared.work_cv.notify_one();
+                    }
+                    Completion::Fail => {
+                        drop(core);
+                        shared.done_cv.notify_all();
+                    }
                 }
             }
         }
@@ -543,6 +406,26 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_args_reconstruct_cleanly() {
+        // f(x, x): reconstruction counts DISTINCT missing objects, so
+        // x's single completion must release the consumer.
+        let pool = ThreadPool::new(2);
+        let x = pool.submit("x", vec![], 0.0, f(3.0));
+        let dbl = pool.submit(
+            "dbl",
+            vec![x, x],
+            0.0,
+            Arc::new(|a: &[&Payload]| {
+                Ok(Payload::Scalar(a[0].as_scalar()? + a[1].as_scalar()?))
+            }),
+        );
+        assert_eq!(pool.get(&dbl).unwrap().as_scalar().unwrap(), 6.0);
+        pool.drop_object(&x).unwrap();
+        pool.drop_object(&dbl).unwrap();
+        assert_eq!(pool.get(&dbl).unwrap().as_scalar().unwrap(), 6.0);
+    }
+
+    #[test]
     fn dropped_put_object_is_an_error() {
         let pool = ThreadPool::new(1);
         let a = pool.put(Payload::Scalar(1.0));
@@ -553,5 +436,88 @@ mod tests {
     fn get_unknown_ref_errors() {
         let pool = ThreadPool::new(1);
         assert!(pool.get(&ObjectRef(999)).is_err());
+    }
+
+    #[test]
+    fn downstream_of_permanently_failed_task_errors_not_hangs() {
+        // the upstream exhausts its retries; the dependent must surface
+        // the failure instead of waiting forever on done_cv.
+        let pool = ThreadPool::with_faults(2, FaultPlan::with_prob(1.0, 1, 5));
+        let a = pool.submit("doomed", vec![], 0.0, f(1.0));
+        let b = pool.submit(
+            "dependent",
+            vec![a],
+            0.0,
+            Arc::new(|args: &[&Payload]| Ok(Payload::Scalar(args[0].as_scalar()? + 1.0))),
+        );
+        let err = pool.get(&b).unwrap_err();
+        assert!(err.to_string().contains("upstream") || err.to_string().contains("crash"), "{err}");
+    }
+
+    #[test]
+    fn submit_against_dropped_put_fails_fast() {
+        let pool = ThreadPool::new(1);
+        let p = pool.put(Payload::Scalar(1.0));
+        let _ = pool.drop_object(&p); // errors (no lineage) but removes it
+        let t = pool.submit(
+            "orphan",
+            vec![p],
+            0.0,
+            Arc::new(|args: &[&Payload]| Ok(Payload::Scalar(args[0].as_scalar()?))),
+        );
+        let err = pool.get(&t).unwrap_err();
+        assert!(err.to_string().contains("dropped put"), "{err}");
+    }
+
+    #[test]
+    fn memory_cap_spills_and_reconstructs_transparently() {
+        // outputs are 400-byte float vectors; a 1 KB cap forces spills
+        // but every get still succeeds via lineage reconstruction.
+        let pool = ThreadPool::with_opts(2, FaultPlan::none(), Some(1024));
+        let refs: Vec<ObjectRef> = (0..8)
+            .map(|i| {
+                pool.submit(
+                    "blk",
+                    vec![],
+                    0.0,
+                    Arc::new(move |_: &[&Payload]| {
+                        Ok(Payload::Floats(vec![i as f32; 100]))
+                    }),
+                )
+            })
+            .collect();
+        pool.wait_all(&refs).unwrap();
+        for (i, r) in refs.iter().enumerate() {
+            let v = pool.get(r).unwrap();
+            assert_eq!(v.as_floats().unwrap()[0], i as f32);
+        }
+        let m = pool.metrics();
+        assert!(m.spills > 0, "cap never triggered");
+        assert!(m.peak_store_bytes >= 400);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn locality_routes_consumer_to_producer_worker() {
+        // single consumer of a large object: whichever worker produced
+        // it should also run the consumer (its bytes are resident there).
+        let pool = ThreadPool::new(4);
+        let big = pool.submit(
+            "make",
+            vec![],
+            0.0,
+            Arc::new(|_: &[&Payload]| Ok(Payload::Floats(vec![0.0f32; 10_000]))),
+        );
+        pool.get(&big).unwrap();
+        let use1 = pool.submit(
+            "use",
+            vec![big],
+            0.0,
+            Arc::new(|a: &[&Payload]| Ok(Payload::Scalar(a[0].as_floats()?.len() as f64))),
+        );
+        assert_eq!(pool.get(&use1).unwrap().as_scalar().unwrap(), 10_000.0);
+        // residency proves placement happened (some worker holds 40 KB)
+        let res = pool.metrics().node_residency;
+        assert!(res.iter().any(|&b| b >= 40_000), "residency={res:?}");
     }
 }

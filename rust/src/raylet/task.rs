@@ -45,6 +45,14 @@ pub enum TaskStatus {
     Failed(String),
 }
 
+impl TaskStatus {
+    /// Done or Failed: no further scheduling transitions possible
+    /// (until lineage reconstruction re-queues a Done task).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TaskStatus::Done | TaskStatus::Failed(_))
+    }
+}
+
 pub struct TaskState {
     pub spec: TaskSpec,
     pub status: TaskStatus,

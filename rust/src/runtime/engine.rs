@@ -16,6 +16,9 @@ use std::sync::Arc;
 use crate::error::{NexusError, Result};
 use crate::runtime::artifacts::{ArtifactEntry, Manifest};
 use crate::runtime::tensor::Tensor;
+// Offline builds run against the shim; swap for the real bindings by
+// replacing this alias with `use xla;` and adding the dependency.
+use crate::runtime::xla_shim as xla;
 
 /// Global counters for the perf report (compiles are the cold path;
 /// executions are the hot path).

@@ -8,6 +8,7 @@ pub mod tensor;
 pub mod artifacts;
 pub mod engine;
 pub mod backend;
+pub mod xla_shim;
 
 pub use artifacts::{ArtifactEntry, Manifest};
 pub use backend::{HostBackend, KernelExec, PjrtBackend};

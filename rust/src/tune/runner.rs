@@ -43,6 +43,9 @@ pub struct TuneOutcome {
     pub makespan: f64,
     pub busy_secs: f64,
     pub tasks_run: u64,
+    /// Memory-capped-store activity during the run (0 when uncapped).
+    pub spills: u64,
+    pub peak_store_bytes: u64,
 }
 
 /// Tuning problem definition: data + how a config maps to a model.
@@ -195,6 +198,8 @@ impl TuneRunner {
             makespan: m.makespan,
             busy_secs: m.busy_secs,
             tasks_run: m.tasks_run,
+            spills: m.spills,
+            peak_store_bytes: m.peak_store_bytes,
         })
     }
 }

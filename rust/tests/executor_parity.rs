@@ -1,0 +1,166 @@
+//! Cross-executor parity: the SAME task DAG must produce identical
+//! values on inline, threads, and sim-with-execute — including under an
+//! injected [`FaultPlan`] (per-attempt kills) and explicit object drops
+//! that force lineage reconstruction through the shared scheduler core.
+//!
+//! This is the contract the whole reproduction rests on: the paper's
+//! DML vs DML_Ray comparison is only meaningful because swapping the
+//! executor cannot change the numbers.
+
+use std::sync::Arc;
+
+use nexus::config::ClusterConfig;
+use nexus::data::synth::{generate, SynthConfig};
+use nexus::models::cost::CostModel;
+use nexus::models::crossfit::{self, CrossfitConfig};
+use nexus::raylet::api::{ExecOpts, RayContext};
+use nexus::raylet::fault::FaultPlan;
+use nexus::raylet::payload::Payload;
+use nexus::raylet::task::{ObjectRef, TaskFn};
+use nexus::runtime::backend::{HostBackend, KernelExec};
+use nexus::util::prop::forall;
+
+fn ccfg() -> CrossfitConfig {
+    CrossfitConfig {
+        cv: 3,
+        lam_y: 1e-3,
+        lam_t: 1e-3,
+        irls_iters: 3,
+        block: 128,
+        d_pad: 8,
+        d_real: 5,
+        seed: 17,
+        stratified: true,
+        reuse_suffstats: false,
+    }
+}
+
+fn contexts(opts: &ExecOpts) -> Vec<RayContext> {
+    vec![
+        RayContext::inline_with(opts.clone()),
+        RayContext::threads_with(3, opts.clone()),
+        RayContext::sim_with(ClusterConfig::default(), true, opts.clone()),
+    ]
+}
+
+/// The same crossfit DAG on all three executors, with per-attempt crash
+/// injection active, then explicit object drops on the fitted betas and
+/// residuals: every executor must reconstruct identical values.
+#[test]
+fn crossfit_parity_under_kills_and_drops() {
+    let ds = generate(&SynthConfig { n: 900, d: 5, ..Default::default() });
+    let cfg = ccfg();
+    let cost = CostModel::default();
+    let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+
+    let clean =
+        crossfit::run(&RayContext::inline(), kx.clone(), &cost, &ds, &cfg).unwrap();
+
+    let opts = ExecOpts {
+        fault: FaultPlan::with_prob(0.25, 60, 2024),
+        store_cap: None,
+    };
+    for ctx in contexts(&opts) {
+        let mode = ctx.mode();
+        let out = crossfit::run(&ctx, kx.clone(), &cost, &ds, &cfg).unwrap();
+        assert_eq!(clean.y_res, out.y_res, "{mode}: y_res diverged under kills");
+        assert_eq!(clean.t_res, out.t_res, "{mode}: t_res diverged under kills");
+        assert_eq!(clean.beta_y, out.beta_y, "{mode}: beta_y diverged under kills");
+
+        // now lose completed objects: the fitted betas and one residual
+        // block per fold — every executor rebuilds them through lineage.
+        for k in 0..cfg.cv {
+            ctx.drop_object(&out.beta_y_refs[k]).unwrap();
+            ctx.drop_object(&out.resid_refs[k][0]).unwrap();
+        }
+        for k in 0..cfg.cv {
+            let beta = ctx.get(&out.beta_y_refs[k]).unwrap();
+            assert_eq!(
+                beta.as_floats().unwrap(),
+                &clean.beta_y[k][..],
+                "{mode}: beta_y[{k}] diverged after drop+reconstruct"
+            );
+            // residual block values must round-trip too
+            let r = ctx.get(&out.resid_refs[k][0]).unwrap();
+            let ts = r.as_tensors().unwrap();
+            let meta = &out.block_meta[k][0];
+            for (slot, &row) in meta.rows.iter().enumerate() {
+                assert_eq!(
+                    ts[0].data[slot], clean.y_res[row],
+                    "{mode}: y residual diverged after drop+reconstruct"
+                );
+            }
+        }
+        let m = ctx.metrics();
+        assert!(m.retries > 0, "{mode}: crash injection never fired");
+        assert!(m.reconstructions >= cfg.cv as u64, "{mode}: no reconstructions");
+        assert_eq!(m.failed, 0, "{mode}: permanent failures");
+    }
+}
+
+/// Property: random layered DAGs with injected kills AND random drops of
+/// intermediate objects agree across all three executors.
+#[test]
+fn prop_random_dags_agree_under_faults() {
+    forall("faulty executors agree", 12, |g| {
+        let n_leaves = g.usize_in(2..6);
+        let leaves: Vec<f64> = (0..n_leaves).map(|_| g.f64_in(-3.0, 3.0)).collect();
+        let n_layers = g.usize_in(1..4);
+        let widths: Vec<usize> = (0..n_layers).map(|_| g.usize_in(1..5)).collect();
+        let mut parents: Vec<Vec<Vec<usize>>> = Vec::new(); // [layer][task][parent]
+        let mut prev = n_leaves;
+        for &w in &widths {
+            let layer: Vec<Vec<usize>> = (0..w)
+                .map(|_| {
+                    let k = g.usize_in(1..3.min(prev + 1));
+                    (0..k).map(|_| g.usize_in(0..prev)).collect()
+                })
+                .collect();
+            parents.push(layer);
+            prev = w;
+        }
+        let seed = g.usize_in(0..100_000) as u64;
+        let drop_layer = g.usize_in(0..n_layers);
+        let drop_idx = g.usize_in(0..widths[drop_layer]);
+
+        let sum_fn: TaskFn = Arc::new(|args: &[&Payload]| {
+            Ok(Payload::Scalar(
+                args.iter().map(|a| a.as_scalar().unwrap()).sum::<f64>() + 1.0,
+            ))
+        });
+
+        let run = |ctx: &RayContext| -> Vec<f64> {
+            let mut level: Vec<ObjectRef> =
+                leaves.iter().map(|&v| ctx.put(Payload::Scalar(v))).collect();
+            let mut dropped: Option<ObjectRef> = None;
+            for (li, layer) in parents.iter().enumerate() {
+                let mut next = Vec::with_capacity(layer.len());
+                for (ti, ps) in layer.iter().enumerate() {
+                    let args: Vec<ObjectRef> = ps.iter().map(|&p| level[p]).collect();
+                    let r = ctx.submit("op", args, 0.001, sum_fn.clone());
+                    if li == drop_layer && ti == drop_idx {
+                        dropped = Some(r);
+                    }
+                    next.push(r);
+                }
+                level = next;
+            }
+            ctx.drain().unwrap();
+            // force the drop AFTER completion, then read everything back
+            let d = dropped.unwrap();
+            ctx.get(&d).unwrap();
+            ctx.drop_object(&d).unwrap();
+            level.iter().map(|r| ctx.get(r).unwrap().as_scalar().unwrap()).collect()
+        };
+
+        let opts = ExecOpts {
+            fault: FaultPlan::with_prob(0.2, 60, seed),
+            store_cap: None,
+        };
+        let ctxs = contexts(&opts);
+        let baseline = run(&RayContext::inline());
+        for ctx in &ctxs {
+            assert_eq!(baseline, run(ctx), "{} diverged", ctx.mode());
+        }
+    });
+}
