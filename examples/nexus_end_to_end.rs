@@ -27,7 +27,7 @@ use nexus::models::cost::CostModel;
 use nexus::models::crossfit::CrossfitConfig;
 use nexus::raylet::api::RayContext;
 use nexus::runtime::backend::{backend_by_name, KernelExec};
-use nexus::serve::{BatchPolicy, CateModel, Router};
+use nexus::serve::{BatchPolicy, CateModel, Router, RoutingPolicy};
 use nexus::util::rng::Pcg32;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -183,22 +183,30 @@ fn main() -> nexus::Result<()> {
 
     // ---- 6. serving ------------------------------------------------------
     let model = CateModel::from_dml(&fit, 256, 16);
-    let mut router = Router::new(model, host.as_ref(), BatchPolicy::default());
+    let mut router = Router::new(
+        model,
+        host.clone(),
+        BatchPolicy::default(),
+        RoutingPolicy::PowerOfTwo,
+        2,
+    )?;
     let mut rng = Pcg32::new(2024);
     let t6 = Instant::now();
     let n_req = 5000;
     for _ in 0..n_req {
         router.enqueue(vec![rng.normal_f32()])?;
     }
-    router.flush()?;
+    router.drain()?;
     let serve_wall = t6.elapsed().as_secs_f64();
     let st = router.stats();
     println!(
-        "[6] serving: {n_req} CATE requests in {} ({:.0} req/s, {} batches, mean size {:.1})",
+        "[6] serving: {n_req} CATE requests across {} replicas in {} ({:.0} req/s, {} batches, mean size {:.1}, p99 {:.2}ms)",
+        router.alive_replicas(),
         fmt_secs(serve_wall),
         n_req as f64 / serve_wall,
         st.batches,
-        st.mean_batch_size()
+        st.mean_batch_size(),
+        st.latency.p99() * 1e3
     );
 
     // ---- 7. cluster economics --------------------------------------------

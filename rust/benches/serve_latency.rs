@@ -1,0 +1,145 @@
+//! Serving-plane latency sweep: arrival rate x replica count x routing
+//! policy through the multi-replica router (DESIGN.md "Serving plane").
+//!
+//! An open-loop load generator fires requests with deterministic
+//! exponential inter-arrivals (seeded PCG32, so the arrival process is
+//! identical across configurations) and never blocks on the plane —
+//! exactly the regime where queueing delay, batching, and routing
+//! policy separate.  Per configuration we report throughput, batch
+//! shape, and end-to-end latency p50/p95/p99.
+//!
+//! Every run is appended to `BENCH_serve_latency.json` (machine-readable;
+//! schema in EXPERIMENTS.md) so the serving-latency trajectory is
+//! tracked across PRs alongside `BENCH_dml_runtime.json`.
+//!
+//!     cargo bench --offline --bench serve_latency
+//!     NEXUS_BENCH_QUICK=1 ... (smaller sweep for CI)
+
+use std::time::Duration;
+
+use nexus::bench_support::Table;
+use nexus::runtime::backend::HostBackend;
+use nexus::serve::{BatchPolicy, CateModel, Router, RoutingPolicy};
+use nexus::util::json::Json;
+use nexus::util::rng::Pcg32;
+
+struct RunResult {
+    wall: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    mean_batch: f64,
+    batches: u64,
+    rerouted: u64,
+}
+
+/// One open-loop run: `requests` arrivals at `rate`/sec (0 = closed
+/// loop) against `replicas` replicas under `routing`.
+fn run_once(
+    routing: RoutingPolicy,
+    replicas: usize,
+    rate: f64,
+    requests: usize,
+) -> nexus::Result<RunResult> {
+    let model = CateModel { theta: vec![1.0, 0.5], het: 1, block: 256, d_pad: 16 };
+    let policy = BatchPolicy { max_batch: 64, max_delay: Duration::from_millis(1) };
+    let mut router =
+        Router::new(model, std::sync::Arc::new(HostBackend), policy, routing, replicas)?;
+    let mut rng = Pcg32::new(42);
+    let wall = router.run_open_loop(requests, rate, &mut rng, |rng| vec![rng.normal_f32()])?;
+    assert_eq!(router.completed.len(), requests, "serving plane lost requests");
+    let s = router.stats();
+    Ok(RunResult {
+        wall,
+        p50_ms: s.latency.p50() * 1e3,
+        p95_ms: s.latency.p95() * 1e3,
+        p99_ms: s.latency.p99() * 1e3,
+        mean_batch: s.mean_batch_size(),
+        batches: s.batches,
+        rerouted: s.rerouted,
+    })
+}
+
+fn record(
+    routing: RoutingPolicy,
+    replicas: usize,
+    rate: f64,
+    requests: usize,
+    r: &RunResult,
+) -> Json {
+    Json::obj()
+        .set("policy", routing.name())
+        .set("replicas", replicas)
+        .set("rate", rate)
+        .set("requests", requests)
+        .set("wall_secs", r.wall)
+        .set("throughput_rps", requests as f64 / r.wall)
+        .set("latency_p50_ms", r.p50_ms)
+        .set("latency_p95_ms", r.p95_ms)
+        .set("latency_p99_ms", r.p99_ms)
+        .set("mean_batch_size", r.mean_batch)
+        .set("batches", r.batches as i64)
+        .set("rerouted", r.rerouted as i64)
+}
+
+fn main() -> nexus::Result<()> {
+    let quick = std::env::var("NEXUS_BENCH_QUICK").is_ok();
+    let policies =
+        [RoutingPolicy::RoundRobin, RoutingPolicy::LeastOutstanding, RoutingPolicy::PowerOfTwo];
+    let replica_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4] };
+    let rates: &[f64] = if quick { &[2000.0] } else { &[1000.0, 4000.0] };
+    let requests: usize = if quick { 1_000 } else { 4_000 };
+
+    let mut records: Vec<Json> = Vec::new();
+    let mut tbl = Table::new(
+        "Serving-plane latency sweep (open loop, host backend)",
+        &["policy", "replicas", "rate/s", "p50 ms", "p95 ms", "p99 ms", "mean batch", "req/s"],
+    );
+    for &rate in rates {
+        for &replicas in replica_counts {
+            for routing in policies {
+                let r = run_once(routing, replicas, rate, requests)?;
+                tbl.row(vec![
+                    routing.name().to_string(),
+                    format!("{replicas}"),
+                    format!("{rate:.0}"),
+                    format!("{:.3}", r.p50_ms),
+                    format!("{:.3}", r.p95_ms),
+                    format!("{:.3}", r.p99_ms),
+                    format!("{:.1}", r.mean_batch),
+                    format!("{:.0}", requests as f64 / r.wall),
+                ]);
+                records.push(record(routing, replicas, rate, requests, &r));
+            }
+        }
+    }
+    tbl.print();
+
+    // append this invocation as one session so the trajectory across
+    // PRs/invocations accumulates instead of being overwritten
+    let path = std::path::Path::new("BENCH_serve_latency.json");
+    let mut sessions: Vec<Json> = nexus::util::json::parse_file(path)
+        .ok()
+        .and_then(|old| old.get("sessions").and_then(|s| s.as_arr().ok().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    let n_runs = records.len();
+    sessions.push(
+        Json::obj()
+            .set("backend", "host")
+            .set("quick", quick)
+            .set("runs", Json::Arr(records)),
+    );
+    let n_sessions = sessions.len();
+    let out = Json::obj()
+        .set("bench", "serve_latency")
+        .set("sessions", Json::Arr(sessions));
+    std::fs::write(path, out.to_string())?;
+    println!(
+        "\nwrote BENCH_serve_latency.json ({n_runs} runs this session, {n_sessions} sessions total)"
+    );
+    println!(
+        "\nshape check: p99 falls as replicas rise at fixed rate; lor/p2c beat rr\n\
+         on tail latency under load (absolute ms are machine-dependent)"
+    );
+    Ok(())
+}

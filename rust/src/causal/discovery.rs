@@ -42,10 +42,10 @@ pub enum EdgeKind {
 #[derive(Clone, Debug)]
 pub struct Cpdag {
     pub d: usize,
-    /// adjacency: adj[i][j] true if an edge touches (i, j) in any
+    /// adjacency: `adj[i][j]` true if an edge touches (i, j) in any
     /// orientation.
     adj: Vec<Vec<bool>>,
-    /// directed[i][j] true iff i -> j is oriented.
+    /// `directed[i][j]` true iff i -> j is oriented.
     directed: Vec<Vec<bool>>,
     /// separating set found for each removed pair.
     pub sepsets: Vec<Vec<Option<Vec<usize>>>>,

@@ -1,10 +1,18 @@
-//! Target-utilization autoscaler over a recorded schedule.
+//! Target-utilization autoscaling, in two forms sharing one policy.
 //!
-//! Replays a gantt (from the simulated executor) and asks: if the
-//! cluster had scaled node count to demand — scale-up when pending work
-//! exceeds capacity, scale-down after an idle timeout — what would the
-//! run have cost?  This reproduces the paper's §1/§4 "cost optimization
-//! via autoscaling" claim as a measurable table (benches/cost_table.rs).
+//! [`replay`] is the *offline* form: it replays a gantt (from the
+//! simulated executor) and asks what an autoscaled cluster — scale-up
+//! when pending work exceeds capacity, scale-down after an idle
+//! timeout — would have cost.  This reproduces the paper's §1/§4 "cost
+//! optimization via autoscaling" claim as a measurable table
+//! (benches/cost_table.rs).
+//!
+//! [`ReplicaAutoscaler`] is the *online* form: the serving plane's
+//! queue-depth controller.  It reuses the same [`AutoscalePolicy`] knobs
+//! (`min_nodes`/`max_nodes` bound the replica set, `slots_per_node` is
+//! the target backlog per replica, `idle_timeout` delays scale-down) and
+//! adds a sustain window so a momentary burst does not thrash the
+//! replica count.
 
 use crate::raylet::sim::GanttEntry;
 
@@ -141,6 +149,77 @@ pub fn replay(
     report
 }
 
+/// Online queue-depth autoscaler for the serving plane.
+///
+/// Feed it `(time, backlog, live replica count)` observations through
+/// [`observe`]; it returns `Some(desired)` when the replica set should
+/// change size.  Decision rule, reusing the [`AutoscalePolicy`] knobs:
+///
+/// * desired = `ceil(backlog / slots_per_node)` clamped to
+///   `[min_nodes, max_nodes]`;
+/// * scale **up** only after desired has exceeded the live count for at
+///   least `sustain` seconds (sustained backlog, not a burst);
+/// * scale **down** only after desired has been below the live count
+///   for at least `policy.idle_timeout` seconds.
+///
+/// [`observe`]: ReplicaAutoscaler::observe
+#[derive(Clone, Debug)]
+pub struct ReplicaAutoscaler {
+    /// Shared knobs: replica bounds, per-replica backlog target,
+    /// scale-down idle timeout.
+    pub policy: AutoscalePolicy,
+    /// Seconds the backlog must stay over capacity before scaling up.
+    pub sustain: f64,
+    /// `(time, desired)` scale decisions actually emitted.
+    pub events: Vec<(f64, usize)>,
+    over_since: Option<f64>,
+    idle_since: Option<f64>,
+}
+
+impl ReplicaAutoscaler {
+    pub fn new(policy: AutoscalePolicy, sustain: f64) -> ReplicaAutoscaler {
+        ReplicaAutoscaler {
+            policy,
+            sustain,
+            events: Vec::new(),
+            over_since: None,
+            idle_since: None,
+        }
+    }
+
+    /// Observe the serving plane at time `t` (seconds since start) with
+    /// `backlog` requests outstanding (queued + in flight) across
+    /// `replicas` live replicas.  Returns the new desired replica count
+    /// when a scale event fires, `None` otherwise.
+    pub fn observe(&mut self, t: f64, backlog: usize, replicas: usize) -> Option<usize> {
+        let desired = backlog
+            .div_ceil(self.policy.slots_per_node.max(1))
+            .clamp(self.policy.min_nodes, self.policy.max_nodes);
+        if desired > replicas {
+            self.idle_since = None;
+            let since = *self.over_since.get_or_insert(t);
+            if t - since >= self.sustain {
+                self.over_since = None;
+                self.events.push((t, desired));
+                return Some(desired);
+            }
+            return None;
+        }
+        self.over_since = None;
+        if desired < replicas {
+            let since = *self.idle_since.get_or_insert(t);
+            if t - since >= self.policy.idle_timeout {
+                self.idle_since = None;
+                self.events.push((t, desired));
+                return Some(desired);
+            }
+            return None;
+        }
+        self.idle_since = None;
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,6 +271,54 @@ mod tests {
         let auto = replay(&g, &p, 1.0);
         let fixed = 5.0 * 3660.0 / 3600.0; // 5 nodes whole run
         assert!(auto.dollars_at < fixed * 0.5, "auto={} fixed={fixed}", auto.dollars_at);
+    }
+
+    fn serve_policy(min: usize, max: usize, idle: f64) -> AutoscalePolicy {
+        AutoscalePolicy {
+            min_nodes: min,
+            max_nodes: max,
+            slots_per_node: 8,
+            idle_timeout: idle,
+            boot_time: 0.0,
+        }
+    }
+
+    #[test]
+    fn replica_scaler_scales_up_on_sustained_backlog_only() {
+        let mut sc = ReplicaAutoscaler::new(serve_policy(1, 4, 10.0), 1.0);
+        // burst at t=0: over capacity but not sustained yet
+        assert_eq!(sc.observe(0.0, 40, 1), None);
+        // still over at t=1.5 => sustained => scale to ceil(40/8)=5 -> 4
+        assert_eq!(sc.observe(1.5, 40, 1), Some(4));
+        // burst that clears before the sustain window never fires
+        let mut sc2 = ReplicaAutoscaler::new(serve_policy(1, 4, 10.0), 1.0);
+        assert_eq!(sc2.observe(0.0, 40, 1), None);
+        assert_eq!(sc2.observe(0.5, 4, 1), None); // backlog cleared
+        assert_eq!(sc2.observe(5.0, 40, 1), None); // window restarts
+        assert!(sc2.events.is_empty());
+    }
+
+    #[test]
+    fn replica_scaler_scales_down_after_idle_timeout() {
+        let mut sc = ReplicaAutoscaler::new(serve_policy(1, 4, 2.0), 0.0);
+        assert_eq!(sc.observe(0.0, 0, 4), None); // idle starts
+        assert_eq!(sc.observe(1.0, 0, 4), None); // not idle long enough
+        assert_eq!(sc.observe(2.5, 0, 4), Some(1));
+        // zero timeouts fire immediately (the test configuration)
+        let mut fast = ReplicaAutoscaler::new(serve_policy(1, 4, 0.0), 0.0);
+        assert_eq!(fast.observe(0.0, 100, 1), Some(4));
+        assert_eq!(fast.observe(0.0, 0, 4), Some(1));
+        assert_eq!(fast.events.len(), 2);
+    }
+
+    #[test]
+    fn replica_scaler_holds_steady_in_band() {
+        let mut sc = ReplicaAutoscaler::new(serve_policy(1, 4, 0.0), 0.0);
+        // backlog of 9..16 on 2 replicas => desired 2 => no event, ever
+        for t in 0..10 {
+            assert_eq!(sc.observe(t as f64, 9 + t % 8, 2), None);
+        }
+        assert!(sc.events.is_empty());
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub const CATALOG: &[InstanceType] = &[
     InstanceType { name: "r5.8xlarge", vcpus: 32, mem_gb: 256, dollars_per_hour: 2.016 },
 ];
 
+/// Look up an instance type by name in [`CATALOG`].
 pub fn instance(name: &str) -> Option<&'static InstanceType> {
     CATALOG.iter().find(|i| i.name == name)
 }

@@ -1,10 +1,16 @@
-//! Cluster economics: EC2-style instance catalog, cost accounting for
-//! fixed clusters, and a target-utilization autoscaler — the "cost
-//! optimizations" objective from the paper's introduction (and the
-//! Darwin/Ray-Serve autoscaling claim in §4).
+//! Cluster economics and elasticity: EC2-style instance catalog, cost
+//! accounting for fixed clusters, and target-utilization autoscaling —
+//! the "cost optimizations" objective from the paper's introduction
+//! (and the Darwin/Ray-Serve autoscaling claim in §4).
+//!
+//! * [`cost`] — instance catalog + fixed-cluster cost/utilization math.
+//! * [`autoscaler`] — one [`AutoscalePolicy`], two consumers: the
+//!   offline gantt [`autoscaler::replay`] used by the cost benches, and
+//!   the online [`ReplicaAutoscaler`] that drives the serving plane's
+//!   replica count from live queue depth.
 
 pub mod cost;
 pub mod autoscaler;
 
-pub use autoscaler::{AutoscalePolicy, AutoscaleReport};
+pub use autoscaler::{AutoscalePolicy, AutoscaleReport, ReplicaAutoscaler};
 pub use cost::{CostReport, InstanceType, CATALOG};

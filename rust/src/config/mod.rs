@@ -89,6 +89,101 @@ impl Default for ClusterConfig {
     }
 }
 
+/// Serving-plane configuration (`nexus serve` and the latency bench):
+/// replica count, routing, batching, and load shape.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Replica actors to start (with `--autoscale`, the upper bound of
+    /// the autoscaled replica set).
+    pub replicas: usize,
+    /// Routing policy name: `rr`, `lor`, or `p2c` (parsed by
+    /// `serve::RoutingPolicy::parse` at the call site — config stays
+    /// below the serve layer).
+    pub policy: String,
+    /// Open-loop arrival rate in requests/sec; 0 = closed loop (enqueue
+    /// as fast as the router accepts).
+    pub rate: f64,
+    /// Requests per `nexus serve` run.
+    pub requests: usize,
+    /// Drive replica count from queue depth instead of keeping it fixed.
+    pub autoscale: bool,
+    /// Dynamic-batching size cap (must not exceed the model block).
+    pub max_batch: usize,
+    /// Dynamic-batching delay bound, milliseconds.
+    pub max_delay_ms: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            replicas: 2,
+            policy: "p2c".into(),
+            rate: 0.0,
+            requests: 10_000,
+            autoscale: false,
+            max_batch: 64,
+            max_delay_ms: 2.0,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.replicas == 0 {
+            return Err(NexusError::Config("serve.replicas must be positive".into()));
+        }
+        if self.max_batch == 0 {
+            return Err(NexusError::Config("serve.max_batch must be positive".into()));
+        }
+        if self.requests == 0 {
+            return Err(NexusError::Config("serve.requests must be positive".into()));
+        }
+        if self.rate < 0.0 || self.max_delay_ms < 0.0 {
+            return Err(NexusError::Config(
+                "serve.rate and serve.max_delay_ms must be non-negative".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn from_json(v: &Json) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        if let Some(x) = v.get("replicas") {
+            cfg.replicas = x.as_usize()?;
+        }
+        if let Some(x) = v.get("policy") {
+            cfg.policy = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.get("rate") {
+            cfg.rate = x.as_f64()?;
+        }
+        if let Some(x) = v.get("requests") {
+            cfg.requests = x.as_usize()?;
+        }
+        if let Some(x) = v.get("autoscale") {
+            cfg.autoscale = x.as_bool()?;
+        }
+        if let Some(x) = v.get("max_batch") {
+            cfg.max_batch = x.as_usize()?;
+        }
+        if let Some(x) = v.get("max_delay_ms") {
+            cfg.max_delay_ms = x.as_f64()?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("replicas", self.replicas)
+            .set("policy", self.policy.as_str())
+            .set("rate", self.rate)
+            .set("requests", self.requests)
+            .set("autoscale", self.autoscale)
+            .set("max_batch", self.max_batch)
+            .set("max_delay_ms", self.max_delay_ms)
+    }
+}
+
 /// Full estimation-run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -112,6 +207,8 @@ pub struct RunConfig {
     /// Backend: "host", "pjrt", "pjrt-pallas".
     pub backend: String,
     pub cluster: ClusterConfig,
+    /// Serving-plane knobs for `nexus serve`.
+    pub serve: ServeConfig,
     pub seed: u64,
 }
 
@@ -129,6 +226,7 @@ impl Default for RunConfig {
             workers: 4,
             backend: "pjrt".into(),
             cluster: ClusterConfig::default(),
+            serve: ServeConfig::default(),
             seed: 123,
         }
     }
@@ -154,6 +252,7 @@ impl RunConfig {
         if self.lam_y < 0.0 || self.lam_t < 0.0 {
             return Err(NexusError::Config("penalties must be non-negative".into()));
         }
+        self.serve.validate()?;
         Ok(())
     }
 
@@ -221,6 +320,9 @@ impl RunConfig {
                 cfg.cluster.store_cap_bytes = x.as_usize()?;
             }
         }
+        if let Some(s) = v.get("serve") {
+            cfg.serve = ServeConfig::from_json(s)?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -249,6 +351,7 @@ impl RunConfig {
                     .set("task_overhead", self.cluster.task_overhead)
                     .set("store_cap_bytes", self.cluster.store_cap_bytes),
             )
+            .set("serve", self.serve.to_json())
     }
 }
 
@@ -267,11 +370,17 @@ mod tests {
         cfg.n = 77_000;
         cfg.exec = ExecMode::Simulated;
         cfg.cluster.nodes = 3;
+        cfg.serve.replicas = 6;
+        cfg.serve.policy = "lor".into();
+        cfg.serve.autoscale = true;
         let v = cfg.to_json();
         let back = RunConfig::from_json(&v).unwrap();
         assert_eq!(back.n, 77_000);
         assert_eq!(back.exec, ExecMode::Simulated);
         assert_eq!(back.cluster.nodes, 3);
+        assert_eq!(back.serve.replicas, 6);
+        assert_eq!(back.serve.policy, "lor");
+        assert!(back.serve.autoscale);
     }
 
     #[test]
@@ -289,6 +398,13 @@ mod tests {
         assert!(RunConfig { n: 8, ..Default::default() }.validate().is_err());
         assert!(RunConfig { workers: 0, ..Default::default() }.validate().is_err());
         assert!(RunConfig { lam_y: -1.0, ..Default::default() }.validate().is_err());
+        let bad_serve = RunConfig {
+            serve: ServeConfig { replicas: 0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(bad_serve.validate().is_err());
+        assert!(ServeConfig { max_batch: 0, ..Default::default() }.validate().is_err());
+        assert!(ServeConfig { rate: -1.0, ..Default::default() }.validate().is_err());
     }
 
     #[test]

@@ -18,8 +18,11 @@
 //! * [`causal`] — the NEXUS estimators: LinearDML (the paper's `DML_Ray`),
 //!   metalearners, doubly-robust AIPW, refutation tests, diagnostics.
 //! * [`tune`] — Ray-Tune analog: search spaces, grid/random search, ASHA.
-//! * [`serve`] — Ray-Serve analog: CATE-serving router + dynamic batcher.
-//! * [`cluster`] — node/network/cost models + autoscaler for the simulator.
+//! * [`serve`] — Ray-Serve analog: multi-replica CATE serving (replica
+//!   actors, per-replica dynamic batchers, rr/lor/p2c routing, failover,
+//!   p50/p95/p99 latency, queue-depth autoscaling).
+//! * [`cluster`] — node/network/cost models + autoscalers (offline gantt
+//!   replay for the simulator, online replica scaling for serving).
 //!
 //! See DESIGN.md for the paper → module map and EXPERIMENTS.md for the
 //! reproduced tables/figures.

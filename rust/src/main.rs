@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   fit       estimate ATE/CATE with LinearDML on synthetic data
 //!   tune      distributed hyper-parameter search for the nuisances
-//!   serve     batched CATE-serving demo
+//!   serve     multi-replica CATE serving under an open-loop load
 //!   simulate  dry-run the paper-scale DML DAG on the simulated cluster
 //!   info      artifact manifest summary
 //!
@@ -12,6 +12,7 @@
 //! §5.1 listing at reduced scale.
 
 use nexus::causal::dml;
+use nexus::cluster::autoscaler::{AutoscalePolicy, ReplicaAutoscaler};
 use nexus::config::{ClusterConfig, ExecMode, RunConfig};
 use nexus::data::synth::{generate, SynthConfig};
 use nexus::models::cost::CostModel;
@@ -20,7 +21,7 @@ use nexus::models::registry::ModelSpec;
 use nexus::raylet::api::RayContext;
 use nexus::runtime::artifacts::Manifest;
 use nexus::runtime::backend::backend_by_name;
-use nexus::serve::{BatchPolicy, CateModel, Router};
+use nexus::serve::{BatchPolicy, CateModel, Router, RoutingPolicy};
 use nexus::tune::sched::ShaSchedule;
 use nexus::tune::space::{ParamSpec, SearchSpace};
 use nexus::tune::runner::TuneRunner;
@@ -51,7 +52,8 @@ fn run() -> Result<()> {
                  \x20 nexus fit --n 20000 --d 50 --cv 5 --exec ray --workers 4\n\
                  \x20 nexus tune --trials 16 --strategy sha\n\
                  \x20 nexus simulate --n 1000000 --d 500 --nodes 5\n\
-                 \x20 nexus serve --requests 1000"
+                 \x20 nexus serve --replicas 4 --policy p2c --rate 2000\n\
+                 \x20 nexus serve --requests 20000 --autoscale --replicas 8"
             );
             Ok(())
         }
@@ -185,8 +187,24 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let requests = args.usize_or("requests", 1000)?;
     let cfg = run_config(args)?;
+    // CLI overrides on top of the config file's serve section
+    let mut sc = cfg.serve.clone();
+    sc.replicas = args.usize_or("replicas", sc.replicas)?;
+    sc.policy = args.opt_or("policy", &sc.policy);
+    sc.rate = args.f64_or("rate", sc.rate)?;
+    sc.requests = args.usize_or("requests", sc.requests)?;
+    sc.max_batch = args.usize_or("max-batch", sc.max_batch)?;
+    sc.max_delay_ms = args.f64_or("max-delay-ms", sc.max_delay_ms)?;
+    if let Some(v) = args.opt("autoscale") {
+        // explicit value: `--autoscale false` can override a config file
+        sc.autoscale = !matches!(v, "0" | "false" | "off" | "no");
+    } else if args.flag("autoscale") {
+        sc.autoscale = true;
+    }
+    sc.validate()?;
+    let routing = RoutingPolicy::parse(&sc.policy)?;
+
     // quick fit to get a model
     let ds = generate(&SynthConfig { n: 5000, d: 8, seed: cfg.seed, ..Default::default() });
     let kx = backend_by_name(&cfg.backend)?;
@@ -203,29 +221,71 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     let serve_block = 256;
     let model = CateModel::from_dml(&fit, serve_block, d_pad.min(16));
-    let mut router = Router::new(model, kx.as_ref(), BatchPolicy::default());
+    let policy = BatchPolicy {
+        max_batch: sc.max_batch,
+        max_delay: std::time::Duration::from_micros((sc.max_delay_ms * 1e3) as u64),
+    };
+    let mut router = if sc.autoscale {
+        // start at 1 replica; queue depth grows the set up to --replicas
+        let scaler = ReplicaAutoscaler::new(
+            AutoscalePolicy {
+                min_nodes: 1,
+                max_nodes: sc.replicas,
+                slots_per_node: 2 * sc.max_batch,
+                idle_timeout: 0.25,
+                boot_time: 0.0,
+            },
+            0.05,
+        );
+        Router::new(model, kx.clone(), policy, routing, 1)?.with_autoscaler(scaler)
+    } else {
+        Router::new(model, kx.clone(), policy, routing, sc.replicas)?
+    };
+    println!(
+        "serve: {} requests, {} starting replicas ({} max), policy={}, rate={}",
+        sc.requests,
+        router.alive_replicas(),
+        sc.replicas,
+        routing.name(),
+        if sc.rate > 0.0 { format!("{:.0}/s", sc.rate) } else { "closed-loop".into() }
+    );
+
+    // open-loop load generator: deterministic exponential inter-arrivals
     let mut rng = Pcg32::new(7);
-    let start = std::time::Instant::now();
-    for _ in 0..requests {
-        router.enqueue(vec![rng.normal_f32()])?;
-    }
-    router.flush()?;
-    let wall = start.elapsed().as_secs_f64();
+    let het = router.model.het;
+    let wall = router.run_open_loop(sc.requests, sc.rate, &mut rng, |rng| {
+        (0..het).map(|_| rng.normal_f32()).collect()
+    })?;
+
     let s = router.stats();
     println!(
-        "serve: {} requests in {:.3}s ({:.0} req/s), {} batches (mean size {:.1})",
+        "done: {} requests in {:.3}s ({:.0} req/s), {} batches (mean size {:.1}), {} re-routed",
         s.requests,
         wall,
         s.requests as f64 / wall,
         s.batches,
-        s.mean_batch_size()
+        s.mean_batch_size(),
+        s.rerouted
     );
     println!(
-        "latency: queue p50={:.3}ms p95={:.3}ms | exec p50={:.3}ms",
+        "latency: p50={:.3}ms p95={:.3}ms p99={:.3}ms | queue p50={:.3}ms | exec p50={:.3}ms",
+        s.latency.p50() * 1e3,
+        s.latency.p95() * 1e3,
+        s.latency.p99() * 1e3,
         s.queue_wait.p50() * 1e3,
-        s.queue_wait.p95() * 1e3,
         s.exec_time.p50() * 1e3
     );
+    for (name, dispatched, alive) in router.replica_loads() {
+        println!(
+            "  {name}: {dispatched} requests dispatched{}",
+            if alive { "" } else { " (retired)" }
+        );
+    }
+    if let Some(scaler) = router.autoscaler() {
+        for (t, n) in &scaler.events {
+            println!("  autoscale @ {t:.3}s -> {n} replicas");
+        }
+    }
     Ok(())
 }
 

@@ -115,7 +115,7 @@ impl CostModel {
         self.task_fixed + (2.0 * b as f64 * p as f64 * (p as f64 + 1.0)) / self.rate()
     }
 
-    /// Bytes of a gram partial (G[d,d] + b[d] + scalar).
+    /// Bytes of a gram partial (`G[d,d]` + `b[d]` + scalar).
     pub fn gram_bytes(d: usize) -> usize {
         4 * (d * d + d + 1)
     }

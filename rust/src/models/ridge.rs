@@ -37,7 +37,7 @@ pub fn lam_diag(d_pad: usize, d_real: usize, lam: f32) -> Vec<f32> {
 }
 
 /// Submit the distributed ridge fit over `train_blocks`; returns the ref
-/// of the fitted beta (Floats[d_pad]).
+/// of the fitted beta (`Floats[d_pad]`).
 ///
 /// * `b`, `d` — block shape (must match the shipped artifacts when the
 ///   backend is PJRT).

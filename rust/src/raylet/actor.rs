@@ -5,8 +5,18 @@
 //! stateless half; this module adds the stateful half — an actor owns
 //! mutable state, processes its mailbox in submission order, and method
 //! calls return ObjectRef-like handles.  NEXUS uses actors for serving
-//! replicas (each replica owns a compiled model) and for streaming
-//! statistics accumulators.
+//! replicas (`serve::replica` — each replica owns a deployed model and
+//! executes padded predict batches) and for streaming statistics
+//! accumulators.
+//!
+//! Lifecycle: [`spawn`] starts the actor on its own OS thread;
+//! [`ActorHandle::call`] enqueues a method invocation and returns a
+//! [`CallRef`]; [`ActorHandle::get`] blocks for (and [`try_get`] polls
+//! for) the result.  [`ActorHandle::stop`] drains the mailbox then
+//! joins; [`ActorHandle::kill`] abandons queued calls — the crash path
+//! the serving router's failover test exercises.
+//!
+//! [`try_get`]: ActorHandle::try_get
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -146,6 +156,24 @@ impl ActorHandle {
         }
     }
 
+    /// Non-blocking result poll: `Some` if the call has finished (the
+    /// result is removed, so a given `CallRef` yields at most once),
+    /// `None` while it is still queued or executing.  The serving
+    /// router's collect loop uses this so an open-loop load generator
+    /// never blocks on a slow replica.
+    pub fn try_get(&self, r: &CallRef) -> Option<Result<Payload>> {
+        self.results.results.lock().unwrap().remove(&r.0)
+    }
+
+    /// Has this actor been stopped or killed?  Once true, [`get`]
+    /// returns errors for calls that never produced a result instead of
+    /// blocking forever.
+    ///
+    /// [`get`]: ActorHandle::get
+    pub fn is_stopped(&self) -> bool {
+        self.stopped.load(Ordering::SeqCst)
+    }
+
     /// Synchronous call (fire + get).
     pub fn ask(&self, method: &str, arg: Payload) -> Result<Payload> {
         let r = self.call(method, arg);
@@ -160,6 +188,26 @@ impl ActorHandle {
         {
             let mut q = self.mailbox.queue.lock().unwrap();
             q.push(Envelope::Stop);
+        }
+        self.mailbox.cv.notify_one();
+        if let Some(h) = self.thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.results.cv.notify_all();
+    }
+
+    /// Kill the actor WITHOUT draining: queued calls are abandoned (their
+    /// `get` returns a "stopped before producing" error) and only the
+    /// call executing right now, if any, still completes.  This models a
+    /// replica crash mid-stream; the serving router reacts by re-routing
+    /// the abandoned requests to surviving replicas.
+    pub fn kill(&self) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        {
+            let mut q = self.mailbox.queue.lock().unwrap();
+            q.insert(0, Envelope::Stop);
         }
         self.mailbox.cv.notify_one();
         if let Some(h) = self.thread.lock().unwrap().take() {
@@ -255,6 +303,48 @@ mod tests {
         }
         let mean = a.ask("mean", Payload::Empty).unwrap().as_scalar().unwrap();
         assert_eq!(mean, 5.5);
+    }
+
+    #[test]
+    fn try_get_polls_without_blocking_and_yields_once() {
+        let a = spawn("mean", MeanActor { sum: 0.0, n: 0 });
+        let r = a.call("add", Payload::Scalar(2.0));
+        let v = loop {
+            if let Some(v) = a.try_get(&r) {
+                break v;
+            }
+            std::thread::yield_now();
+        };
+        assert_eq!(v.unwrap().as_scalar().unwrap(), 2.0);
+        // result was consumed: a second poll sees nothing
+        assert!(a.try_get(&r).is_none());
+    }
+
+    /// Actor that holds each message long enough for a kill to land
+    /// between messages.
+    struct SlowActor;
+
+    impl Actor for SlowActor {
+        fn handle(&mut self, _method: &str, arg: Payload) -> Result<Payload> {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            Ok(arg)
+        }
+    }
+
+    #[test]
+    fn kill_abandons_queued_calls() {
+        let a = spawn("slow", SlowActor);
+        let refs: Vec<CallRef> =
+            (0..5).map(|i| a.call("echo", Payload::Scalar(i as f64))).collect();
+        a.kill();
+        assert!(a.is_stopped());
+        // the tail of the mailbox was abandoned: its gets error rather
+        // than hang, and the handle reports the abandonment
+        let last = a.get(&refs[4]);
+        assert!(last.is_err(), "queued call should have been abandoned");
+        // calls fired after the kill also error out cleanly
+        let post = a.call("echo", Payload::Scalar(9.0));
+        assert!(a.get(&post).is_err());
     }
 
     #[test]

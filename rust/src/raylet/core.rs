@@ -329,7 +329,7 @@ impl SchedCore {
 
     /// Remove and return the ready task with the most argument bytes
     /// resident on `node` (ties: lowest id), scanning the first
-    /// [`Self::PICK_WINDOW`] ready ids.  This is the "most argument
+    /// `PICK_WINDOW` ready ids.  This is the "most argument
     /// bytes resident" locality policy, shared by the thread pool
     /// (worker affinity) and usable by any future placement driver.
     pub fn pick_ready_for(&mut self, node: usize) -> Option<u64> {

@@ -1,13 +1,23 @@
 //! Dynamic batching: coalesce requests up to `max_batch` or `max_delay`,
 //! whichever comes first — the standard serving trade-off (throughput
 //! from batching vs tail latency from waiting).
+//!
+//! The queue is strictly FIFO: [`Batcher::take_batch`] always removes
+//! the oldest requests, so request order is preserved end to end
+//! (`tests/serve_props.rs` holds this as a property).  Each serving
+//! replica owns one `Batcher`; the router decides when to flush by
+//! polling [`Batcher::should_flush`].
 
 use std::time::{Duration, Instant};
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
+    /// Flush as soon as this many requests are queued.  Must not exceed
+    /// the served model's block size — `Router::new` validates this at
+    /// construction.
     pub max_batch: usize,
+    /// Flush once the oldest queued request has waited this long.
     pub max_delay: Duration,
 }
 
@@ -20,31 +30,40 @@ impl Default for BatchPolicy {
 /// A pending request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Router-assigned id, unique per stream; completions carry it back.
     pub id: u64,
+    /// Het features (at least the model's `het` values; extras ignored).
     pub features: Vec<f32>,
+    /// When the request entered the plane — end-to-end latency is
+    /// measured from here, surviving re-routes after replica failures.
     pub enqueued: Instant,
 }
 
-/// An accumulating batch.
+/// An accumulating FIFO batch queue for one replica.
 #[derive(Debug, Default)]
 pub struct Batcher {
+    /// The flush policy (size + delay bounds).
     pub policy: BatchPolicy,
     queue: Vec<Request>,
 }
 
 impl Batcher {
+    /// An empty batcher under `policy`.
     pub fn new(policy: BatchPolicy) -> Batcher {
         Batcher { policy, queue: Vec::new() }
     }
 
+    /// Append a request to the tail of the queue.
     pub fn push(&mut self, req: Request) {
         self.queue.push(req);
     }
 
+    /// Requests currently queued.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

@@ -1,12 +1,28 @@
 //! CATE serving — the Ray Serve slice of the NEXUS platform (§4:
 //! "efficient deployment and autoscaling capabilities using Ray Serve").
 //!
-//! [`batcher`] coalesces single-row requests into padded blocks for the
-//! compiled predict artifact; [`router`] owns replica dispatch and
-//! latency accounting.
+//! The serving plane has three layers:
+//!
+//! * [`batcher`] — dynamic batching: coalesce single-row requests up to
+//!   `max_batch` or `max_delay`, whichever comes first.  One batcher
+//!   per replica.
+//! * [`replica`] — a deployed model as a raylet actor; each replica
+//!   executes padded predict blocks on its own OS thread and inherits
+//!   the actor layer's fault injection and crash semantics.
+//! * [`router`] — the front-end: routes requests over the replica set
+//!   (round-robin / least-outstanding / power-of-two-choices), collects
+//!   results without blocking, re-routes around dead replicas, tracks
+//!   p50/p95/p99 latency, and optionally autoscales the replica count
+//!   from queue depth.
+//!
+//! `benches/serve_latency.rs` sweeps arrival rate x replica count x
+//! routing policy through this stack and writes
+//! `BENCH_serve_latency.json`.
 
 pub mod batcher;
+pub mod replica;
 pub mod router;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use router::{CateModel, Router, ServeStats};
+pub use replica::ReplicaActor;
+pub use router::{CateModel, Router, RoutingPolicy, ServeStats};

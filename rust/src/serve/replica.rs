@@ -1,0 +1,111 @@
+//! Serving replicas: one deployed model per raylet actor.
+//!
+//! The paper's NEXUS platform deploys CATE models through Ray Serve
+//! (§4); here each replica is a [`crate::raylet::actor`] actor — it
+//! inherits the actor layer's serialized mailbox, fault injection
+//! ([`crate::raylet::fault::FaultPlan`] via `spawn_with_faults`), and
+//! crash semantics ([`crate::raylet::actor::ActorHandle::kill`]) for
+//! free.  A replica owns a clone of the [`CateModel`] and answers one
+//! mailbox message per batch; the [`crate::serve::router::Router`]
+//! front-end owns batching, routing, and failover *around* the replica
+//! set.
+
+use std::sync::Arc;
+
+use crate::error::{NexusError, Result};
+use crate::raylet::actor::Actor;
+use crate::raylet::payload::Payload;
+use crate::runtime::backend::KernelExec;
+use crate::serve::router::CateModel;
+
+/// One serving replica: a deployed model + backend, driven by actor
+/// messages.
+///
+/// Methods:
+/// * `"predict"` — arg is a `[k, het]` tensor of packed het features;
+///   returns `k` CATE predictions as floats.
+/// * `"batches"` — returns the number of batches served (scalar).
+pub struct ReplicaActor {
+    model: CateModel,
+    kx: Arc<dyn KernelExec>,
+    batches: u64,
+}
+
+impl ReplicaActor {
+    /// Deploy `model` on `kx` as a replica (spawn it with
+    /// [`crate::raylet::actor::spawn`]).
+    pub fn new(model: CateModel, kx: Arc<dyn KernelExec>) -> ReplicaActor {
+        ReplicaActor { model, kx, batches: 0 }
+    }
+}
+
+impl Actor for ReplicaActor {
+    fn handle(&mut self, method: &str, arg: Payload) -> Result<Payload> {
+        match method {
+            "predict" => {
+                let t = arg.as_tensor()?;
+                if t.shape.len() != 2 || t.shape[1] != self.model.het {
+                    return Err(NexusError::Serve(format!(
+                        "replica expects a [k, {}] feature tensor, got shape {:?}",
+                        self.model.het, t.shape
+                    )));
+                }
+                let k = t.shape[0];
+                let preds = self.model.predict_block(self.kx.as_ref(), &t.data, k)?;
+                self.batches += 1;
+                Ok(Payload::Floats(preds))
+            }
+            "batches" => Ok(Payload::Scalar(self.batches as f64)),
+            other => Err(NexusError::Serve(format!("replica has no method '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::raylet::actor::spawn;
+    use crate::runtime::backend::HostBackend;
+    use crate::runtime::tensor::Tensor;
+
+    fn model() -> CateModel {
+        CateModel { theta: vec![1.0, 0.5], het: 1, block: 8, d_pad: 4 }
+    }
+
+    #[test]
+    fn replica_serves_batches_through_its_mailbox() {
+        let a = spawn("replica-test", ReplicaActor::new(model(), Arc::new(HostBackend)));
+        let out = a
+            .ask(
+                "predict",
+                Payload::Tensor(Tensor { shape: vec![3, 1], data: vec![0.0, 1.0, 2.0] }),
+            )
+            .unwrap();
+        let preds = out.as_floats().unwrap().to_vec();
+        assert_eq!(preds.len(), 3);
+        for (i, p) in preds.iter().enumerate() {
+            assert!((p - (1.0 + 0.5 * i as f32)).abs() < 1e-6, "{preds:?}");
+        }
+        let served = a.ask("batches", Payload::Empty).unwrap().as_scalar().unwrap();
+        assert_eq!(served, 1.0);
+    }
+
+    #[test]
+    fn replica_rejects_bad_shapes_and_methods_without_dying() {
+        let a = spawn("replica-test", ReplicaActor::new(model(), Arc::new(HostBackend)));
+        // wrong feature width
+        assert!(a
+            .ask("predict", Payload::Tensor(Tensor { shape: vec![2, 3], data: vec![0.0; 6] }))
+            .is_err());
+        // batch bigger than the model block
+        assert!(a
+            .ask("predict", Payload::Tensor(Tensor { shape: vec![9, 1], data: vec![0.0; 9] }))
+            .is_err());
+        // unknown method
+        assert!(a.ask("nope", Payload::Empty).is_err());
+        // still alive and serving
+        assert!(a
+            .ask("predict", Payload::Tensor(Tensor { shape: vec![1, 1], data: vec![4.0] }))
+            .is_ok());
+    }
+}

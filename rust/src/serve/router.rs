@@ -1,21 +1,46 @@
-//! Request router: replica selection + batched CATE prediction.
+//! Multi-replica request router: replica placement, pluggable routing
+//! policies, failover, and latency accounting.
 //!
 //! A [`CateModel`] is the deployable artifact of a DML fit (theta + the
-//! het-feature layout).  The [`Router`] drives the batcher, executes
-//! padded predict blocks through the backend, and keeps latency stats.
+//! het-feature layout).  The [`Router`] is the serving front-end: it
+//! owns N replica actors (see [`crate::serve::replica`]), keeps one
+//! dynamic [`Batcher`] per replica, routes each incoming request to a
+//! replica under a [`RoutingPolicy`], dispatches flushed batches as
+//! asynchronous actor calls, and collects results without blocking the
+//! request path.  Per-request end-to-end latency (p50/p95/p99), queue
+//! wait, and batch execution time accumulate in [`ServeStats`].
+//!
+//! Failover: if a replica dies mid-stream ([`Router::kill_replica`], or
+//! an actor call erroring out), its queued and in-flight requests are
+//! re-routed to surviving replicas — no request is lost as long as one
+//! replica remains (`tests/serve_failover.rs`).
+//!
+//! Elasticity: attach a [`ReplicaAutoscaler`] with
+//! [`Router::with_autoscaler`] and the router grows the replica set on
+//! sustained backlog and retires replicas after an idle timeout.
 
+use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::cluster::autoscaler::ReplicaAutoscaler;
 use crate::data::matrix::Matrix;
 use crate::error::{NexusError, Result};
+use crate::raylet::actor::{self, ActorHandle, CallRef};
+use crate::raylet::payload::Payload;
 use crate::runtime::backend::KernelExec;
+use crate::runtime::tensor::Tensor;
 use crate::serve::batcher::{BatchPolicy, Batcher, Request};
+use crate::serve::replica::ReplicaActor;
+use crate::util::rng::Pcg32;
 use crate::util::timer::Stats;
 
 /// Deployable CATE head: tau(x) = theta[0] + sum_j theta[j+1] x_j.
 #[derive(Clone, Debug)]
 pub struct CateModel {
+    /// Final-stage coefficients: intercept followed by `het` slopes.
     pub theta: Vec<f32>,
+    /// Heterogeneous-effect features each request must carry.
     pub het: usize,
     /// Block size for padded batch prediction (a shipped artifact size
     /// under PJRT; any size under host).
@@ -25,6 +50,7 @@ pub struct CateModel {
 }
 
 impl CateModel {
+    /// Package a DML fit as a servable model.
     pub fn from_dml(fit: &crate::causal::dml::DmlFit, block: usize, d_pad: usize) -> CateModel {
         CateModel { theta: fit.theta.clone(), het: fit.het, block, d_pad }
     }
@@ -35,18 +61,108 @@ impl CateModel {
         beta.resize(self.d_pad, 0.0);
         beta
     }
+
+    /// Is this model's shape servable at all?
+    pub fn validate(&self) -> Result<()> {
+        if self.block == 0 {
+            return Err(NexusError::Serve("model block size must be positive".into()));
+        }
+        if self.het + 1 > self.d_pad {
+            return Err(NexusError::Serve(format!(
+                "model needs {} design columns but d_pad is only {}",
+                self.het + 1,
+                self.d_pad
+            )));
+        }
+        Ok(())
+    }
+
+    /// Predict one batch of `k` requests whose het features are packed
+    /// row-major in `flat` (`k * het` values).  Pads the batch into a
+    /// `[block, d_pad]` design (col 0 = intercept) and truncates the
+    /// kernel output back to `k`.  This is the compute every replica
+    /// actor runs per mailbox message.
+    pub fn predict_block(&self, kx: &dyn KernelExec, flat: &[f32], k: usize) -> Result<Vec<f32>> {
+        self.validate()?;
+        if k > self.block {
+            return Err(NexusError::Serve(format!(
+                "batch of {k} exceeds model block {}",
+                self.block
+            )));
+        }
+        if flat.len() != k * self.het {
+            return Err(NexusError::Serve(format!(
+                "expected {} packed features for {k} requests, got {}",
+                k * self.het,
+                flat.len()
+            )));
+        }
+        let mut x = Matrix::zeros(self.block, self.d_pad);
+        for r in 0..k {
+            x.set(r, 0, 1.0);
+            for j in 0..self.het {
+                x.set(r, j + 1, flat[r * self.het + j]);
+            }
+        }
+        let pred = kx.predict(&x, &self.beta_padded())?;
+        Ok(pred[..k].to_vec())
+    }
 }
 
-/// Serving statistics.
+/// How the router spreads requests over live replicas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through live replicas in order — fair under uniform cost.
+    RoundRobin,
+    /// Send to the replica with the fewest outstanding requests
+    /// (queued + in flight) — best tail latency, O(replicas) per pick.
+    LeastOutstanding,
+    /// Power-of-two-choices: sample two distinct replicas, pick the
+    /// less-loaded — near-LOR balance at O(1) cost (Mitzenmacher).
+    PowerOfTwo,
+}
+
+impl RoutingPolicy {
+    /// Parse a CLI name: `rr`, `lor`, `p2c` (plus long spellings).
+    pub fn parse(s: &str) -> Result<RoutingPolicy> {
+        match s {
+            "rr" | "round-robin" => Ok(RoutingPolicy::RoundRobin),
+            "lor" | "least" | "least-outstanding" => Ok(RoutingPolicy::LeastOutstanding),
+            "p2c" | "power-of-two" => Ok(RoutingPolicy::PowerOfTwo),
+            other => Err(NexusError::Config(format!("unknown routing policy '{other}'"))),
+        }
+    }
+
+    /// Canonical short name (for reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "rr",
+            RoutingPolicy::LeastOutstanding => "lor",
+            RoutingPolicy::PowerOfTwo => "p2c",
+        }
+    }
+}
+
+/// Serving statistics, accumulated by the router.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
+    /// Requests completed.
     pub requests: u64,
+    /// Batches executed.
     pub batches: u64,
+    /// Requests re-routed after a replica died or a call failed.
+    pub rerouted: u64,
+    /// Enqueue -> dispatch wait per request.
     pub queue_wait: Stats,
+    /// Dispatch -> completion time per batch (mailbox wait + kernel).
     pub exec_time: Stats,
+    /// Enqueue -> completion end-to-end latency per request; report
+    /// `latency.p50() / .p95() / .p99()`.
+    pub latency: Stats,
 }
 
 impl ServeStats {
+    /// Mean requests per executed batch.
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -56,24 +172,220 @@ impl ServeStats {
     }
 }
 
-/// Single-replica router (replica = one backend executor; the simulated
-/// cluster layer handles multi-node placement for batch scoring jobs).
-pub struct Router<'a> {
-    pub model: CateModel,
-    pub kx: &'a dyn KernelExec,
+/// One batch in flight to a replica actor.
+struct PendingBatch {
+    call: CallRef,
+    reqs: Vec<Request>,
+    dispatched: Instant,
+}
+
+/// One replica: the actor handle, its private batcher, and its in-flight
+/// window.
+struct Replica {
+    handle: ActorHandle,
     batcher: Batcher,
+    pending: VecDeque<PendingBatch>,
+    alive: bool,
+    /// Requests ever dispatched to this replica (for load reports).
+    dispatched_reqs: u64,
+}
+
+impl Replica {
+    /// Outstanding load: queued + in flight, in requests.
+    fn depth(&self) -> usize {
+        self.batcher.len() + self.pending.iter().map(|b| b.reqs.len()).sum::<usize>()
+    }
+}
+
+/// Multi-replica serving front-end.  See the module docs for the data
+/// flow; the public surface is [`enqueue`] / [`tick`] / [`drain`] plus
+/// [`kill_replica`] for failover testing.
+///
+/// [`enqueue`]: Router::enqueue
+/// [`tick`]: Router::tick
+/// [`drain`]: Router::drain
+/// [`kill_replica`]: Router::kill_replica
+pub struct Router {
+    /// The deployed model (every replica serves a clone of it).
+    pub model: CateModel,
+    kx: Arc<dyn KernelExec>,
+    batch_policy: BatchPolicy,
+    routing: RoutingPolicy,
+    replicas: Vec<Replica>,
+    rr_next: usize,
+    rng: Pcg32,
     stats: ServeStats,
     next_id: u64,
-    /// Completed responses (id, cate).
+    next_replica_id: usize,
+    autoscaler: Option<ReplicaAutoscaler>,
+    started: Instant,
+    /// Completed responses (request id, cate).
     pub completed: Vec<(u64, f32)>,
 }
 
-impl<'a> Router<'a> {
-    pub fn new(model: CateModel, kx: &'a dyn KernelExec, policy: BatchPolicy) -> Router<'a> {
-        Router { model, kx, batcher: Batcher::new(policy), stats: ServeStats::default(), next_id: 0, completed: Vec::new() }
+impl Router {
+    /// Deploy `model` as `replicas` actor-backed replicas.
+    ///
+    /// Configuration is validated HERE, not at first flush: a
+    /// `BatchPolicy::max_batch` larger than the model's block would
+    /// otherwise surface as a runtime "batch exceeds block" error
+    /// mid-stream.
+    pub fn new(
+        model: CateModel,
+        kx: Arc<dyn KernelExec>,
+        policy: BatchPolicy,
+        routing: RoutingPolicy,
+        replicas: usize,
+    ) -> Result<Router> {
+        model.validate()?;
+        if policy.max_batch == 0 {
+            return Err(NexusError::Config("batch policy: max_batch must be positive".into()));
+        }
+        if policy.max_batch > model.block {
+            return Err(NexusError::Config(format!(
+                "batch policy max_batch={} exceeds model block={}; batches could never execute",
+                policy.max_batch, model.block
+            )));
+        }
+        if replicas == 0 {
+            return Err(NexusError::Config("router needs at least one replica".into()));
+        }
+        let mut router = Router {
+            model,
+            kx,
+            batch_policy: policy,
+            routing,
+            replicas: Vec::new(),
+            rr_next: 0,
+            rng: Pcg32::new(0x5e7e),
+            stats: ServeStats::default(),
+            next_id: 0,
+            next_replica_id: 0,
+            autoscaler: None,
+            started: Instant::now(),
+            completed: Vec::new(),
+        };
+        for _ in 0..replicas {
+            router.spawn_replica();
+        }
+        Ok(router)
     }
 
-    /// Enqueue one request; returns its id.
+    /// Attach a queue-depth autoscaler; [`Router::tick`] will then grow
+    /// the replica set on sustained backlog and retire replicas after
+    /// the policy's idle timeout.
+    pub fn with_autoscaler(mut self, scaler: ReplicaAutoscaler) -> Router {
+        self.autoscaler = Some(scaler);
+        self
+    }
+
+    /// The attached autoscaler, if any (its `events` record scale
+    /// decisions).
+    pub fn autoscaler(&self) -> Option<&ReplicaAutoscaler> {
+        self.autoscaler.as_ref()
+    }
+
+    /// Live replica count.
+    pub fn alive_replicas(&self) -> usize {
+        self.replicas.iter().filter(|r| r.alive).count()
+    }
+
+    /// Per-replica load report: (actor name, requests dispatched, alive).
+    pub fn replica_loads(&self) -> Vec<(String, u64, bool)> {
+        self.replicas
+            .iter()
+            .map(|r| (r.handle.name.clone(), r.dispatched_reqs, r.alive))
+            .collect()
+    }
+
+    /// Requests outstanding across all replicas (queued + in flight).
+    pub fn backlog(&self) -> usize {
+        self.replicas.iter().filter(|r| r.alive).map(|r| r.depth()).sum()
+    }
+
+    fn spawn_replica(&mut self) {
+        let id = self.next_replica_id;
+        self.next_replica_id += 1;
+        let handle = actor::spawn(
+            &format!("replica-{id}"),
+            ReplicaActor::new(self.model.clone(), self.kx.clone()),
+        );
+        let fresh = Replica {
+            handle,
+            batcher: Batcher::new(self.batch_policy),
+            pending: VecDeque::new(),
+            alive: true,
+            dispatched_reqs: 0,
+        };
+        // reuse a fully drained dead slot so autoscale oscillation does
+        // not grow the replica vec (and every scan over it) without bound
+        let slot = self
+            .replicas
+            .iter()
+            .position(|r| !r.alive && r.pending.is_empty() && r.batcher.is_empty());
+        match slot {
+            Some(i) => self.replicas[i] = fresh,
+            None => self.replicas.push(fresh),
+        }
+    }
+
+    /// Index of the `k`-th live replica (`k` < live count).
+    fn nth_alive(&self, k: usize) -> usize {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.alive)
+            .nth(k)
+            .map(|(i, _)| i)
+            .expect("k < live count")
+    }
+
+    /// Pick a live replica index under the routing policy.
+    fn pick_replica(&mut self) -> Result<usize> {
+        let alive = self.alive_replicas();
+        if alive == 0 {
+            return Err(NexusError::Serve("no live replicas".into()));
+        }
+        let idx = match self.routing {
+            RoutingPolicy::RoundRobin => {
+                let k = self.rr_next % alive;
+                self.rr_next = self.rr_next.wrapping_add(1);
+                self.nth_alive(k)
+            }
+            RoutingPolicy::LeastOutstanding => self
+                .replicas
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.alive)
+                .min_by_key(|(_, r)| r.depth())
+                .map(|(i, _)| i)
+                .expect("alive > 0"),
+            RoutingPolicy::PowerOfTwo => {
+                if alive == 1 {
+                    self.nth_alive(0)
+                } else {
+                    let ka = self.rng.below(alive as u64) as usize;
+                    let kb = loop {
+                        let kb = self.rng.below(alive as u64) as usize;
+                        if kb != ka {
+                            break kb;
+                        }
+                    };
+                    let a = self.nth_alive(ka);
+                    let b = self.nth_alive(kb);
+                    if self.replicas[a].depth() <= self.replicas[b].depth() {
+                        a
+                    } else {
+                        b
+                    }
+                }
+            }
+        };
+        Ok(idx)
+    }
+
+    /// Enqueue one request; returns its id.  Routes to a replica's
+    /// batcher and drives a non-blocking [`Router::tick`].
     pub fn enqueue(&mut self, het_features: Vec<f32>) -> Result<u64> {
         if het_features.len() < self.model.het {
             return Err(NexusError::Serve(format!(
@@ -84,53 +396,307 @@ impl<'a> Router<'a> {
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.batcher.push(Request { id, features: het_features, enqueued: Instant::now() });
-        self.tick(false)?;
+        let i = self.pick_replica()?;
+        self.replicas[i].batcher.push(Request {
+            id,
+            features: het_features,
+            enqueued: Instant::now(),
+        });
+        self.tick()?;
         Ok(id)
     }
 
-    /// Drive the batcher: flush when policy says so (or `force`).
-    pub fn tick(&mut self, force: bool) -> Result<()> {
+    /// Drive the plane without blocking: flush every batcher whose
+    /// policy says so, collect any finished batches, feed the
+    /// autoscaler.  Call this while idling between arrivals so
+    /// delay-triggered flushes happen on time.
+    pub fn tick(&mut self) -> Result<()> {
         let now = Instant::now();
-        while self.batcher.should_flush(now) || (force && !self.batcher.is_empty()) {
-            let batch = self.batcher.take_batch();
-            self.execute(batch)?;
-        }
-        Ok(())
-    }
-
-    /// Flush everything (end of stream).
-    pub fn flush(&mut self) -> Result<()> {
-        self.tick(true)
-    }
-
-    fn execute(&mut self, batch: Vec<Request>) -> Result<()> {
-        let now = Instant::now();
-        let b = self.model.block;
-        let d = self.model.d_pad;
-        // pad the batch into a [block, d_pad] design: col 0 = 1 (intercept)
-        let mut x = Matrix::zeros(b, d);
-        for (r, req) in batch.iter().enumerate() {
-            if r >= b {
-                return Err(NexusError::Serve("batch exceeds block".into()));
-            }
-            x.set(r, 0, 1.0);
-            for j in 0..self.model.het {
-                x.set(r, j + 1, req.features[j]);
+        for i in 0..self.replicas.len() {
+            while self.replicas[i].alive && self.replicas[i].batcher.should_flush(now) {
+                self.dispatch(i);
             }
         }
-        let exec_start = Instant::now();
-        let pred = self.kx.predict(&x, &self.model.beta_padded())?;
-        self.stats.exec_time.record(exec_start.elapsed());
-        for (r, req) in batch.iter().enumerate() {
-            self.stats.queue_wait.record(now.duration_since(req.enqueued));
-            self.completed.push((req.id, pred[r]));
+        self.collect()?;
+        self.maybe_scale()
+    }
+
+    /// Send one batch from replica `i`'s batcher to its actor.
+    fn dispatch(&mut self, i: usize) {
+        let batch = self.replicas[i].batcher.take_batch();
+        if batch.is_empty() {
+            return;
         }
-        self.stats.requests += batch.len() as u64;
+        let k = batch.len();
+        let het = self.model.het;
+        let mut flat = Vec::with_capacity(k * het);
+        for req in &batch {
+            flat.extend_from_slice(&req.features[..het]);
+        }
+        let call = self.replicas[i]
+            .handle
+            .call("predict", Payload::Tensor(Tensor { shape: vec![k, het], data: flat }));
+        self.replicas[i].dispatched_reqs += k as u64;
+        self.replicas[i].pending.push_back(PendingBatch {
+            call,
+            reqs: batch,
+            dispatched: Instant::now(),
+        });
+    }
+
+    /// Record one finished batch into stats + completed.  Validates the
+    /// payload BEFORE recording anything: on error nothing is counted
+    /// and the caller re-routes the batch's requests (zero loss even
+    /// against a misbehaving replica).
+    fn complete_batch(&mut self, batch: &PendingBatch, preds: &Payload) -> Result<()> {
+        let now = Instant::now();
+        let vals = preds.as_floats()?;
+        if vals.len() < batch.reqs.len() {
+            return Err(NexusError::Serve(format!(
+                "replica returned {} predictions for {} requests",
+                vals.len(),
+                batch.reqs.len()
+            )));
+        }
+        self.stats.exec_time.record(now.duration_since(batch.dispatched));
+        for (r, req) in batch.reqs.iter().enumerate() {
+            self.stats.queue_wait.record(batch.dispatched.duration_since(req.enqueued));
+            self.stats.latency.record(now.duration_since(req.enqueued));
+            self.completed.push((req.id, vals[r]));
+        }
+        self.stats.requests += batch.reqs.len() as u64;
         self.stats.batches += 1;
         Ok(())
     }
 
+    /// Settle one popped batch given its call outcome — the ONE home of
+    /// the failover bookkeeping, shared by [`collect`] and [`drain`].
+    /// On success the batch is recorded; on a malformed reply the
+    /// requests are reclaimed into `reroute` and the protocol error is
+    /// captured in `first_err`; on a call error the replica is taken
+    /// out of rotation (its retries are exhausted or its actor died —
+    /// leaving it live would let re-routes loop back to a persistently
+    /// failing replica forever) and the requests are reclaimed.
+    ///
+    /// [`collect`]: Router::collect
+    /// [`drain`]: Router::drain
+    fn settle_batch(
+        &mut self,
+        i: usize,
+        batch: PendingBatch,
+        got: Result<Payload>,
+        reroute: &mut Vec<Request>,
+        first_err: &mut Option<NexusError>,
+    ) {
+        match got {
+            Ok(p) => {
+                if let Err(e) = self.complete_batch(&batch, &p) {
+                    self.stats.rerouted += batch.reqs.len() as u64;
+                    reroute.extend(batch.reqs);
+                    if first_err.is_none() {
+                        *first_err = Some(e);
+                    }
+                }
+            }
+            Err(_) => {
+                self.replicas[i].alive = false;
+                self.stats.rerouted += batch.reqs.len() as u64;
+                reroute.extend(batch.reqs);
+            }
+        }
+    }
+
+    /// Non-blocking collection: pop every batch whose result is ready;
+    /// re-route the requests of failed batches to surviving replicas.
+    /// All reclaimed requests are re-queued BEFORE any error propagates,
+    /// so a malformed reply never strands other batches' requests.
+    fn collect(&mut self) -> Result<()> {
+        let mut reroute: Vec<Request> = Vec::new();
+        let mut first_err: Option<NexusError> = None;
+        for i in 0..self.replicas.len() {
+            loop {
+                let call = match self.replicas[i].pending.front() {
+                    Some(b) => b.call,
+                    None => break,
+                };
+                let got = match self.replicas[i].handle.try_get(&call) {
+                    Some(got) => got,
+                    None => {
+                        // a killed replica never produces its queued
+                        // results; reclaim them instead of waiting
+                        if self.replicas[i].handle.is_stopped() {
+                            let batch = self.replicas[i].pending.pop_front().expect("front");
+                            self.replicas[i].alive = false;
+                            self.stats.rerouted += batch.reqs.len() as u64;
+                            reroute.extend(batch.reqs);
+                            continue;
+                        }
+                        break;
+                    }
+                };
+                let batch = self.replicas[i].pending.pop_front().expect("front exists");
+                self.settle_batch(i, batch, got, &mut reroute, &mut first_err);
+            }
+            // a retiring replica whose in-flight window has drained can
+            // stop now (its mailbox is empty, so the join is immediate)
+            if !self.replicas[i].alive
+                && self.replicas[i].pending.is_empty()
+                && !self.replicas[i].handle.is_stopped()
+            {
+                self.replicas[i].handle.stop();
+            }
+        }
+        for r in reroute {
+            let j = self.pick_replica()?;
+            self.replicas[j].batcher.push(r);
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Grow/shrink the replica set per the attached autoscaler.
+    fn maybe_scale(&mut self) -> Result<()> {
+        if self.autoscaler.is_none() {
+            return Ok(());
+        }
+        let backlog = self.backlog();
+        let alive = self.alive_replicas();
+        let t = self.started.elapsed().as_secs_f64();
+        let desired = match self.autoscaler.as_mut() {
+            Some(sc) => sc.observe(t, backlog, alive),
+            None => None,
+        };
+        let Some(desired) = desired else { return Ok(()) };
+        while self.alive_replicas() < desired {
+            self.spawn_replica();
+        }
+        while self.alive_replicas() > desired.max(1) {
+            self.retire_replica();
+        }
+        Ok(())
+    }
+
+    /// Begin retiring one replica WITHOUT blocking: stop routing to it
+    /// and flush its queue as async dispatches; [`Router::tick`]'s
+    /// collect pass gathers the in-flight results and stops the actor
+    /// once its window drains.  The request path never stalls on a
+    /// scale-down decision.
+    fn retire_replica(&mut self) {
+        let Some(i) = self.replicas.iter().rposition(|r| r.alive) else {
+            return;
+        };
+        while !self.replicas[i].batcher.is_empty() {
+            self.dispatch(i);
+        }
+        self.replicas[i].alive = false;
+    }
+
+    /// Simulate a replica crash: kill replica `i`'s actor without
+    /// draining, then re-route everything it had queued or in flight.
+    /// Results the actor finished before dying are still collected —
+    /// nothing is lost and nothing is served twice.
+    pub fn kill_replica(&mut self, i: usize) -> Result<()> {
+        if i >= self.replicas.len() || !self.replicas[i].alive {
+            return Err(NexusError::Serve(format!("no live replica {i}")));
+        }
+        self.replicas[i].alive = false;
+        self.replicas[i].handle.kill();
+        let mut reroute: Vec<Request> = Vec::new();
+        while let Some(batch) = self.replicas[i].pending.pop_front() {
+            let done = match self.replicas[i].handle.try_get(&batch.call) {
+                Some(Ok(p)) => self.complete_batch(&batch, &p).is_ok(),
+                _ => false,
+            };
+            if !done {
+                self.stats.rerouted += batch.reqs.len() as u64;
+                reroute.extend(batch.reqs);
+            }
+        }
+        while !self.replicas[i].batcher.is_empty() {
+            let mut left = self.replicas[i].batcher.take_batch();
+            self.stats.rerouted += left.len() as u64;
+            reroute.append(&mut left);
+        }
+        for r in reroute {
+            let j = self.pick_replica()?;
+            self.replicas[j].batcher.push(r);
+        }
+        self.tick()
+    }
+
+    /// Flush everything and block until every request has completed
+    /// (end of stream).  Crashed batches re-route until they land on a
+    /// live replica; "no live replicas" or a malformed reply surface as
+    /// errors — but only after every reclaimed request has been
+    /// re-queued, so nothing is stranded.
+    pub fn drain(&mut self) -> Result<()> {
+        loop {
+            let mut progressed = false;
+            for i in 0..self.replicas.len() {
+                while self.replicas[i].alive && !self.replicas[i].batcher.is_empty() {
+                    self.dispatch(i);
+                    progressed = true;
+                }
+            }
+            let mut reroute: Vec<Request> = Vec::new();
+            let mut first_err: Option<NexusError> = None;
+            for i in 0..self.replicas.len() {
+                while let Some(batch) = self.replicas[i].pending.pop_front() {
+                    progressed = true;
+                    let got = self.replicas[i].handle.get(&batch.call);
+                    self.settle_batch(i, batch, got, &mut reroute, &mut first_err);
+                }
+            }
+            for r in reroute {
+                let j = self.pick_replica()?;
+                self.replicas[j].batcher.push(r);
+                progressed = true;
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+            if !progressed {
+                return Ok(());
+            }
+        }
+    }
+
+    /// Drive an open-loop load through the plane: `requests` arrivals
+    /// at `rate`/sec with deterministic exponential inter-arrivals
+    /// drawn from `rng` (rate 0 = closed loop, i.e. enqueue as fast as
+    /// the router accepts), generating each request's het features with
+    /// `make_features`.  Ticks the plane while waiting so delay-based
+    /// flushes and autoscaling stay live, then drains the tail.
+    /// Returns the wall-clock seconds of the whole run including the
+    /// drain.  Shared by `cmd_serve` and `benches/serve_latency.rs` so
+    /// the CLI and the bench measure the identical arrival process.
+    pub fn run_open_loop(
+        &mut self,
+        requests: usize,
+        rate: f64,
+        rng: &mut Pcg32,
+        mut make_features: impl FnMut(&mut Pcg32) -> Vec<f32>,
+    ) -> Result<f64> {
+        let start = Instant::now();
+        let mut next_arrival = 0.0f64;
+        for _ in 0..requests {
+            if rate > 0.0 {
+                next_arrival += -(rng.f64().max(1e-12)).ln() / rate;
+                while start.elapsed().as_secs_f64() < next_arrival {
+                    self.tick()?;
+                    std::thread::yield_now();
+                }
+            }
+            let features = make_features(rng);
+            self.enqueue(features)?;
+        }
+        self.drain()?;
+        Ok(start.elapsed().as_secs_f64())
+    }
+
+    /// Serving statistics so far.
     pub fn stats(&self) -> &ServeStats {
         &self.stats
     }
@@ -146,16 +712,22 @@ mod tests {
         CateModel { theta: vec![1.0, 0.5], het: 1, block: 8, d_pad: 4 }
     }
 
+    fn kx() -> Arc<dyn KernelExec> {
+        Arc::new(HostBackend)
+    }
+
     #[test]
     fn single_request_roundtrip() {
-        let kx = HostBackend;
         let mut r = Router::new(
             model(),
-            &kx,
+            kx(),
             BatchPolicy { max_batch: 1, max_delay: Duration::ZERO },
-        );
+            RoutingPolicy::RoundRobin,
+            1,
+        )
+        .unwrap();
         let id = r.enqueue(vec![2.0]).unwrap();
-        r.flush().unwrap();
+        r.drain().unwrap();
         let (rid, cate) = r.completed[0];
         assert_eq!(rid, id);
         assert!((cate - 2.0).abs() < 1e-6); // 1 + 0.5*2
@@ -163,20 +735,23 @@ mod tests {
 
     #[test]
     fn batching_coalesces() {
-        let kx = HostBackend;
         let mut r = Router::new(
             model(),
-            &kx,
+            kx(),
             BatchPolicy { max_batch: 4, max_delay: Duration::from_secs(100) },
-        );
+            RoutingPolicy::RoundRobin,
+            1,
+        )
+        .unwrap();
         for i in 0..8 {
             r.enqueue(vec![i as f32]).unwrap();
         }
-        r.flush().unwrap();
+        r.drain().unwrap();
         let s = r.stats();
         assert_eq!(s.requests, 8);
         assert_eq!(s.batches, 2, "4+4");
         assert_eq!(s.mean_batch_size(), 4.0);
+        assert_eq!(s.latency.len(), 8);
         // answers are correct per request
         for (id, cate) in &r.completed {
             assert!((cate - (1.0 + 0.5 * *id as f32)).abs() < 1e-5);
@@ -185,8 +760,99 @@ mod tests {
 
     #[test]
     fn rejects_short_features() {
-        let kx = HostBackend;
-        let mut r = Router::new(model(), &kx, BatchPolicy::default());
+        let mut r = Router::new(
+            model(),
+            kx(),
+            BatchPolicy { max_batch: 4, max_delay: Duration::ZERO },
+            RoutingPolicy::RoundRobin,
+            1,
+        )
+        .unwrap();
         assert!(r.enqueue(vec![]).is_err());
+    }
+
+    #[test]
+    fn oversized_batch_policy_rejected_at_construction() {
+        // model block is 8; a max_batch of 9 would only fail at flush
+        // time without the constructor check
+        let err = Router::new(
+            model(),
+            kx(),
+            BatchPolicy { max_batch: 9, max_delay: Duration::ZERO },
+            RoutingPolicy::RoundRobin,
+            1,
+        );
+        assert!(err.is_err());
+        let msg = err.err().unwrap().to_string();
+        assert!(msg.contains("max_batch"), "{msg}");
+        // zero batches and zero replicas are config errors too
+        assert!(Router::new(
+            model(),
+            kx(),
+            BatchPolicy { max_batch: 0, max_delay: Duration::ZERO },
+            RoutingPolicy::RoundRobin,
+            1,
+        )
+        .is_err());
+        assert!(Router::new(
+            model(),
+            kx(),
+            BatchPolicy { max_batch: 4, max_delay: Duration::ZERO },
+            RoutingPolicy::RoundRobin,
+            0,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let mut r = Router::new(
+            model(),
+            kx(),
+            BatchPolicy { max_batch: 8, max_delay: Duration::from_secs(100) },
+            RoutingPolicy::RoundRobin,
+            4,
+        )
+        .unwrap();
+        for i in 0..64 {
+            r.enqueue(vec![i as f32]).unwrap();
+        }
+        r.drain().unwrap();
+        assert_eq!(r.completed.len(), 64);
+        for (_, dispatched, alive) in r.replica_loads() {
+            assert!(alive);
+            assert_eq!(dispatched, 16);
+        }
+    }
+
+    #[test]
+    fn least_outstanding_balances_and_p2c_uses_all() {
+        for routing in [RoutingPolicy::LeastOutstanding, RoutingPolicy::PowerOfTwo] {
+            let mut r = Router::new(
+                model(),
+                kx(),
+                BatchPolicy { max_batch: 8, max_delay: Duration::from_secs(100) },
+                routing,
+                4,
+            )
+            .unwrap();
+            for i in 0..400 {
+                r.enqueue(vec![i as f32]).unwrap();
+            }
+            r.drain().unwrap();
+            assert_eq!(r.completed.len(), 400);
+            for (name, dispatched, _) in r.replica_loads() {
+                assert!(dispatched > 0, "{} starved under {:?}", name, routing);
+            }
+        }
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        use RoutingPolicy::{LeastOutstanding, PowerOfTwo, RoundRobin};
+        for p in [RoundRobin, LeastOutstanding, PowerOfTwo] {
+            assert_eq!(RoutingPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(RoutingPolicy::parse("bogus").is_err());
     }
 }

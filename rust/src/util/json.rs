@@ -99,7 +99,7 @@ impl Json {
         }
     }
 
-    /// `[1,2,3]` -> Vec<usize>; the manifest shape lists.
+    /// `[1,2,3]` -> `Vec<usize>`; the manifest shape lists.
     pub fn as_shape(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }

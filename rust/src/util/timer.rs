@@ -80,13 +80,19 @@ impl Stats {
         self.percentile(0.95)
     }
 
+    /// Tail latency percentile — the serving plane's headline number.
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
     pub fn summary(&self, label: &str) -> String {
         format!(
-            "{label}: n={} mean={:.6}s p50={:.6}s p95={:.6}s min={:.6}s max={:.6}s",
+            "{label}: n={} mean={:.6}s p50={:.6}s p95={:.6}s p99={:.6}s min={:.6}s max={:.6}s",
             self.len(),
             self.mean(),
             self.p50(),
             self.p95(),
+            self.p99(),
             self.min(),
             self.max()
         )
@@ -129,6 +135,7 @@ mod tests {
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 5.0);
         assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.p99(), 5.0);
         assert!((s.std() - (2.5f64).sqrt()).abs() < 1e-12);
     }
 

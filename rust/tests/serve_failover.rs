@@ -1,0 +1,170 @@
+//! Serving-plane fault tolerance: killing a replica mid-stream must
+//! lose ZERO requests — everything the dead replica had queued or in
+//! flight re-routes to survivors, every request completes exactly once
+//! with the correct CATE, and latency accounting keeps running.  The
+//! replica-level sibling of `fault_recovery.rs` (which covers tasks).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use nexus::cluster::{AutoscalePolicy, ReplicaAutoscaler};
+use nexus::runtime::backend::HostBackend;
+use nexus::serve::{BatchPolicy, CateModel, Router, RoutingPolicy};
+
+fn model(block: usize) -> CateModel {
+    CateModel { theta: vec![1.0, 0.5], het: 1, block, d_pad: 8 }
+}
+
+/// tau(x) = 1 + 0.5 x for this model; requests send x = id mod 5.
+fn expected(id: u64) -> f32 {
+    1.0 + 0.5 * (id % 5) as f32
+}
+
+fn check_all_complete(router: &Router, total: usize) {
+    assert_eq!(router.completed.len(), total, "lost or duplicated requests");
+    let mut ids: Vec<u64> = router.completed.iter().map(|(id, _)| *id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), total, "duplicate completions");
+    for (id, cate) in &router.completed {
+        assert!(
+            (cate - expected(*id)).abs() < 1e-5,
+            "request {id}: got {cate}, want {}",
+            expected(*id)
+        );
+    }
+}
+
+#[test]
+fn killing_a_replica_mid_stream_loses_no_requests() {
+    let mut router = Router::new(
+        model(64),
+        Arc::new(HostBackend),
+        BatchPolicy { max_batch: 16, max_delay: Duration::from_millis(1) },
+        RoutingPolicy::RoundRobin,
+        4,
+    )
+    .unwrap();
+    let total = 3000;
+    for i in 0..total {
+        router.enqueue(vec![(i % 5) as f32]).unwrap();
+        if i == total / 2 {
+            router.kill_replica(1).unwrap();
+        }
+    }
+    router.drain().unwrap();
+    assert_eq!(router.alive_replicas(), 3);
+    check_all_complete(&router, total);
+    // the dead replica must not accept new work
+    let loads = router.replica_loads();
+    assert!(!loads[1].2, "killed replica still marked alive");
+}
+
+#[test]
+fn killing_a_loaded_replica_reroutes_its_backlog() {
+    // huge delay + large batches: requests pile up in the batchers, so
+    // the killed replica is guaranteed to hold a backlog to reclaim
+    let mut router = Router::new(
+        model(64),
+        Arc::new(HostBackend),
+        BatchPolicy { max_batch: 64, max_delay: Duration::from_secs(100) },
+        RoutingPolicy::RoundRobin,
+        4,
+    )
+    .unwrap();
+    let total = 48; // 12 queued per replica, nothing flushed yet
+    for i in 0..total {
+        router.enqueue(vec![(i % 5) as f32]).unwrap();
+    }
+    assert_eq!(router.backlog(), total);
+    router.kill_replica(2).unwrap();
+    assert!(router.stats().rerouted >= 12, "rerouted={}", router.stats().rerouted);
+    router.drain().unwrap();
+    check_all_complete(&router, total);
+}
+
+#[test]
+fn sequential_kills_down_to_last_replica_still_serve() {
+    let mut router = Router::new(
+        model(64),
+        Arc::new(HostBackend),
+        BatchPolicy { max_batch: 8, max_delay: Duration::from_millis(1) },
+        RoutingPolicy::LeastOutstanding,
+        3,
+    )
+    .unwrap();
+    let total = 900;
+    for i in 0..total {
+        router.enqueue(vec![(i % 5) as f32]).unwrap();
+        if i == 300 {
+            router.kill_replica(0).unwrap();
+        }
+        if i == 600 {
+            router.kill_replica(1).unwrap();
+        }
+    }
+    router.drain().unwrap();
+    assert_eq!(router.alive_replicas(), 1);
+    check_all_complete(&router, total);
+}
+
+#[test]
+fn killing_the_last_replica_surfaces_an_error() {
+    let mut router = Router::new(
+        model(64),
+        Arc::new(HostBackend),
+        BatchPolicy { max_batch: 8, max_delay: Duration::from_secs(100) },
+        RoutingPolicy::RoundRobin,
+        1,
+    )
+    .unwrap();
+    router.enqueue(vec![1.0]).unwrap();
+    // no survivor to re-route to: the kill itself reports the loss
+    assert!(router.kill_replica(0).is_err());
+    // and new work is refused rather than silently dropped
+    assert!(router.enqueue(vec![1.0]).is_err());
+}
+
+#[test]
+fn autoscaler_grows_on_backlog_and_shrinks_when_idle() {
+    let scaler = ReplicaAutoscaler::new(
+        AutoscalePolicy {
+            min_nodes: 1,
+            max_nodes: 4,
+            slots_per_node: 8,
+            idle_timeout: 0.0,
+            boot_time: 0.0,
+        },
+        0.0, // sustain: scale immediately (test configuration)
+    );
+    let mut router = Router::new(
+        model(64),
+        Arc::new(HostBackend),
+        BatchPolicy { max_batch: 8, max_delay: Duration::from_secs(100) },
+        RoutingPolicy::LeastOutstanding,
+        1,
+    )
+    .unwrap()
+    .with_autoscaler(scaler);
+
+    let total = 100;
+    for i in 0..total {
+        router.enqueue(vec![(i % 5) as f32]).unwrap();
+    }
+    // backlog against target 8/replica => some scale-up event fired
+    // (the instantaneous replica count may already be shrinking again)
+    let peak = router
+        .autoscaler()
+        .unwrap()
+        .events
+        .iter()
+        .map(|(_, n)| *n)
+        .max()
+        .unwrap_or(1);
+    assert!(peak > 1, "never scaled up: events={:?}", router.autoscaler().unwrap().events);
+    router.drain().unwrap();
+    check_all_complete(&router, total);
+    // empty plane + zero idle timeout => back down to min on next tick
+    router.tick().unwrap();
+    assert_eq!(router.alive_replicas(), 1, "never scaled back down");
+}

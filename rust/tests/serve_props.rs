@@ -1,0 +1,119 @@
+//! Property tests for the serving plane's two accounting-critical
+//! pieces: the FIFO batcher and the latency statistics.
+//!
+//! * `take_batch` preserves FIFO order for any policy and any
+//!   interleaving of pushes and takes;
+//! * nearest-rank percentiles are exact on known distributions;
+//! * `mean_batch_size` stays consistent (`mean * batches == requests`)
+//!   under arbitrary interleavings of enqueue and force-flush through a
+//!   live router.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nexus::runtime::backend::HostBackend;
+use nexus::serve::batcher::{BatchPolicy, Batcher, Request};
+use nexus::serve::{CateModel, Router, RoutingPolicy};
+use nexus::util::prop::forall;
+use nexus::util::timer::Stats;
+
+#[test]
+fn prop_batcher_preserves_fifo_order() {
+    forall("batcher FIFO", 40, |g| {
+        let max_batch = g.usize_in(1..17);
+        let n = g.len_up_to(200);
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch,
+            max_delay: Duration::from_secs(1000),
+        });
+        let now = Instant::now();
+        let mut popped: Vec<u64> = Vec::new();
+        let mut pushed = 0u64;
+        // random interleaving of pushes and takes
+        while (popped.len() as u64) < n as u64 {
+            if pushed < n as u64 && (g.bool() || b.is_empty()) {
+                b.push(Request { id: pushed, features: vec![0.0], enqueued: now });
+                pushed += 1;
+            } else {
+                let batch = b.take_batch();
+                assert!(batch.len() <= max_batch, "batch over cap");
+                popped.extend(batch.iter().map(|r| r.id));
+            }
+        }
+        // ids drain in exactly push order
+        let want: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(popped, want, "order broken at max_batch={max_batch}");
+        assert!(b.is_empty());
+    });
+}
+
+#[test]
+fn prop_percentiles_exact_on_known_distribution() {
+    forall("nearest-rank percentiles", 40, |g| {
+        // a shuffled 1..=n sample: percentile(q) must be exactly
+        // ceil(q * n) under nearest-rank, independent of insert order
+        let n = g.len_up_to(400);
+        let mut vals: Vec<f64> = (1..=n).map(|v| v as f64).collect();
+        for i in (1..vals.len()).rev() {
+            let j = g.usize_in(0..i + 1);
+            vals.swap(i, j);
+        }
+        let mut s = Stats::new();
+        for v in &vals {
+            s.record_secs(*v);
+        }
+        for q in [0.5, 0.95, 0.99] {
+            let want = (q * n as f64).ceil().clamp(1.0, n as f64);
+            let got = s.percentile(q);
+            assert_eq!(got, want, "q={q} n={n}");
+        }
+        assert_eq!(s.p50(), s.percentile(0.5));
+        assert_eq!(s.p99(), s.percentile(0.99));
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), n as f64);
+    });
+}
+
+#[test]
+fn prop_mean_batch_size_consistent_under_interleaved_flush_enqueue() {
+    forall("serve stats consistency", 12, |g| {
+        let max_batch = g.usize_in(1..9);
+        let model = CateModel { theta: vec![1.0, 0.5], het: 1, block: 16, d_pad: 4 };
+        let mut router = Router::new(
+            model,
+            Arc::new(HostBackend),
+            BatchPolicy { max_batch, max_delay: Duration::from_secs(1000) },
+            RoutingPolicy::LeastOutstanding,
+            g.usize_in(1..4),
+        )
+        .unwrap();
+        let n = g.len_up_to(120);
+        let mut enqueued = 0usize;
+        // interleave single enqueues with full drains
+        while enqueued < n {
+            if g.bool() {
+                router.enqueue(vec![enqueued as f32]).unwrap();
+                enqueued += 1;
+            } else {
+                router.drain().unwrap();
+            }
+        }
+        router.drain().unwrap();
+        let s = router.stats().clone();
+        assert_eq!(s.requests, n as u64, "every request counted exactly once");
+        assert_eq!(router.completed.len(), n);
+        // mean * batches reproduces the request count exactly
+        assert!(
+            (s.mean_batch_size() * s.batches as f64 - s.requests as f64).abs() < 1e-9,
+            "mean={} batches={} requests={}",
+            s.mean_batch_size(),
+            s.batches,
+            s.requests
+        );
+        // no batch can exceed the policy cap
+        assert!(s.batches as usize * max_batch >= n, "impossible batch count");
+        // latency recorded once per request, exec once per batch
+        assert_eq!(s.latency.len() as u64, s.requests);
+        assert_eq!(s.exec_time.len() as u64, s.batches);
+    });
+}
