@@ -1,0 +1,162 @@
+//! Ingest-pipeline bench: driver peak bytes of streaming sharded ingest
+//! vs the materialized path, swept over rows × chunk size.
+//!
+//! The sharded dataset plane exists to bound the driver's data footprint
+//! by O(chunk) instead of O(n·d) (DESIGN.md §7).  This bench produces
+//! the evidence: for each (n, d) × chunk it streams the synthetic table
+//! into the object store, records the ingest report's driver peak, and
+//! compares against what materialized residence would hold.  A DML
+//! equality check (streaming vs materialized fit on the same seed, bit
+//! compared) guards the numbers' meaning: the memory win is only real if
+//! the estimates are unchanged.
+//!
+//! Every run is appended to `BENCH_ingest_pipeline.json`
+//! (EXPERIMENTS.md documents the schema).
+//!
+//!     cargo bench --offline --bench ingest_pipeline
+//!     NEXUS_BENCH_QUICK=1 ...  (tiny sweep for CI)
+
+use std::time::Instant;
+
+use nexus::bench_support::{fmt_secs, Table};
+use nexus::causal::dml;
+use nexus::data::dataset::{IngestOpts, ShardedDataset};
+use nexus::data::synth::{generate, SynthConfig};
+use nexus::models::cost::CostModel;
+use nexus::models::crossfit::CrossfitConfig;
+use nexus::raylet::api::RayContext;
+use nexus::runtime::backend::{backend_by_name, KernelExec};
+use nexus::util::json::Json;
+use std::sync::Arc;
+
+fn main() -> nexus::Result<()> {
+    let quick = std::env::var("NEXUS_BENCH_QUICK").is_ok();
+    let mut records: Vec<Json> = Vec::new();
+
+    let kx = backend_by_name("pjrt").or_else(|_| backend_by_name("host"))?;
+    println!("backend: {}", kx.name());
+
+    // ---- Part A: driver-peak sweep (rows x chunk) ------------------------
+    let scales: &[(usize, usize)] = if quick {
+        &[(2_000, 16), (8_000, 16)]
+    } else {
+        &[(10_000, 64), (100_000, 64), (1_000_000, 64)]
+    };
+    let chunks: &[usize] = if quick { &[512, 2048] } else { &[4096, 65_536] };
+    let block = if quick { 256 } else { 4096 };
+
+    let mut tbl = Table::new(
+        "Streaming ingest — driver peak bytes vs materialized (O(chunk) vs O(n))",
+        &["n", "d", "chunk", "blocks", "driver peak", "materialized", "ratio", "ingest"],
+    );
+    for &(n, d) in scales {
+        let d_pad = (d + 1).next_power_of_two().max(16);
+        for &chunk in chunks {
+            let cfg = SynthConfig { n, d, seed: 123, ..Default::default() };
+            let ctx = RayContext::inline();
+            let t0 = Instant::now();
+            let (sds, report) =
+                ShardedDataset::ingest_synth(&ctx, &cfg, d_pad, &IngestOpts { chunk, block })?;
+            let wall = t0.elapsed().as_secs_f64();
+            // what the driver holds on the materialized path: raw matrix,
+            // padded copy, and the four per-row columns
+            let materialized = 4 * n * (d + d_pad + 4);
+            let ratio = materialized as f64 / report.driver_peak_bytes.max(1) as f64;
+            tbl.row(vec![
+                format!("{n}"),
+                format!("{d}"),
+                format!("{}", report.chunk_rows),
+                format!("{}", sds.n_blocks()),
+                format!("{}", report.driver_peak_bytes),
+                format!("{materialized}"),
+                format!("{ratio:.1}x"),
+                fmt_secs(wall),
+            ]);
+            records.push(
+                Json::obj()
+                    .set("kind", "ingest")
+                    .set("n", n)
+                    .set("d", d)
+                    .set("d_pad", d_pad)
+                    .set("chunk_rows", report.chunk_rows)
+                    .set("block", block)
+                    .set("blocks", report.blocks)
+                    .set("driver_peak_bytes", report.driver_peak_bytes)
+                    .set("materialized_bytes", materialized)
+                    .set("store_bytes", report.store_bytes)
+                    .set("ratio", ratio)
+                    .set("ingest_secs", wall),
+            );
+        }
+    }
+    tbl.print();
+
+    // ---- Part B: estimates must be unchanged -----------------------------
+    // streaming vs materialized DML on the same seed, bit-compared — the
+    // memory numbers above only count if this holds.
+    let (cn, cd) = if quick { (2_000, 4) } else { (6_000, 6) };
+    let ccfg = CrossfitConfig {
+        cv: 5,
+        lam_y: 1e-3,
+        lam_t: 1e-3,
+        irls_iters: 5,
+        block: 256,
+        d_pad: (cd + 1).next_power_of_two().max(16),
+        d_real: cd,
+        seed: 123,
+        stratified: true,
+        reuse_suffstats: false,
+    };
+    let scfg = SynthConfig { n: cn, d: cd, seed: 123, ..Default::default() };
+    let cost = CostModel::default();
+    // host backend: the equality check uses shapes outside the shipped
+    // artifact catalog, which only the host oracle accepts everywhere
+    let host: Arc<dyn KernelExec> = backend_by_name("host")?;
+    let ds = generate(&scfg);
+    let mat = dml::fit_with(&RayContext::inline(), host.clone(), &cost, &ds, &ccfg, 1, 2)?;
+    let ctx = RayContext::inline();
+    let (sds, report) = ShardedDataset::ingest_synth(
+        &ctx,
+        &scfg,
+        ccfg.d_pad,
+        &IngestOpts { chunk: 1024, block: 256 },
+    )?;
+    let st = dml::fit_sharded(&ctx, host, &cost, &sds, &ccfg, 1, 2)?;
+    let identical = mat.theta == st.theta && mat.ate.value == st.ate.value;
+    println!(
+        "\n[equality] n={cn} d={cd}: streaming theta == materialized theta: {identical} \
+         (ATE {:.4} vs {:.4}; streaming driver peak {} B)",
+        st.ate.value, mat.ate.value, report.driver_peak_bytes
+    );
+    assert!(identical, "streaming ingest changed the estimates — the bench numbers are void");
+    records.push(
+        Json::obj()
+            .set("kind", "dml_equality")
+            .set("n", cn)
+            .set("d", cd)
+            .set("identical", identical)
+            .set("ate", st.ate.value)
+            .set("driver_peak_bytes", report.driver_peak_bytes),
+    );
+
+    // append this invocation as one session (same pattern as fig6)
+    let path = std::path::Path::new("BENCH_ingest_pipeline.json");
+    let mut sessions: Vec<Json> = nexus::util::json::parse_file(path)
+        .ok()
+        .and_then(|old| old.get("sessions").and_then(|s| s.as_arr().ok().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    let n_runs = records.len();
+    sessions.push(
+        Json::obj()
+            .set("backend", kx.name())
+            .set("quick", quick)
+            .set("runs", Json::Arr(records)),
+    );
+    let n_sessions = sessions.len();
+    let out = Json::obj()
+        .set("bench", "ingest_pipeline")
+        .set("sessions", Json::Arr(sessions));
+    std::fs::write(path, out.to_string())?;
+    println!("\nwrote BENCH_ingest_pipeline.json ({n_runs} runs this session, {n_sessions} sessions total)");
+    Ok(())
+}

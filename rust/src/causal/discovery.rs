@@ -162,24 +162,43 @@ pub fn partial_corr(corr: &Matrix, i: usize, j: usize, s: &[usize]) -> Result<f6
     Ok(rho.clamp(-0.999999, 0.999999))
 }
 
-/// Correlation matrix via the distributed Gram kernel: one gram task per
-/// row block, tree-reduced (exactly the DML §5.1 pattern).
+/// Correlation matrix via the distributed Gram kernel — a thin adapter
+/// placing the raw columns into the object store
+/// ([`crate::data::dataset::ShardedDataset::from_matrix`]) and running
+/// the sharded pass below.
 pub fn correlation_matrix(
     ctx: &RayContext,
     kx: Arc<dyn crate::runtime::backend::KernelExec>,
     x: &Matrix,
     block: usize,
 ) -> Result<Matrix> {
-    let (n, d) = (x.rows(), x.cols());
-    let rows: Vec<usize> = (0..n).collect();
+    let n = x.rows();
     let y = vec![0.0f32; n];
     let t = vec![0.0f32; n];
-    let blocks = crate::data::partition::make_blocks(x, &y, &t, &rows, block);
-    let refs: Vec<ObjectRef> = blocks
-        .iter()
-        .map(|b| ctx.put(crate::models::distops::block_payload(b)))
-        .collect();
-    let partials: Vec<ObjectRef> = refs
+    let sds = crate::data::dataset::ShardedDataset::from_matrix(ctx, x, &y, &t, block)?;
+    correlation_matrix_sharded(ctx, kx, &sds)
+}
+
+/// Correlation matrix from object-store-resident blocks: one gram task
+/// per block tree-reduced (exactly the DML §5.1 pattern), and column
+/// means streamed in f64 one resident block at a time — the driver
+/// never holds more than a block of the matrix.
+pub fn correlation_matrix_sharded(
+    ctx: &RayContext,
+    kx: Arc<dyn crate::runtime::backend::KernelExec>,
+    sds: &crate::data::dataset::ShardedDataset,
+) -> Result<Matrix> {
+    if sds.padded {
+        // a padded dataset has the intercept in col 0 and zero-pad
+        // columns: correlating it yields junk rows and off-by-one
+        // variable indices — only raw `from_matrix` residence is valid
+        return Err(NexusError::Data(
+            "correlation over a padded dataset (use ShardedDataset::from_matrix)".into(),
+        ));
+    }
+    let (n, d) = (sds.n_rows, sds.d);
+    let partials: Vec<ObjectRef> = sds
+        .blocks
         .iter()
         .map(|r| {
             ctx.submit(
@@ -194,11 +213,17 @@ pub fn correlation_matrix(
     let payload = ctx.get(&root)?;
     let g = payload.as_tensors()?[0].to_matrix()?;
 
-    // column means from a second cheap pass (host; O(nd))
+    // column means in f64, streamed one resident block at a time — the
+    // f32 partial sums of the stats op are fine for summaries but would
+    // cancel catastrophically in `cov = G/n − mean·mean'` at scale
     let mut mean = vec![0.0f64; d];
-    for i in 0..n {
-        for (m, &v) in mean.iter_mut().zip(x.row(i)) {
-            *m += v as f64;
+    for r in &sds.blocks {
+        let p = ctx.get(r)?;
+        let b = p.as_block()?;
+        for slot in 0..b.valid {
+            for (m, &v) in mean.iter_mut().zip(b.x.row(slot)) {
+                *m += v as f64;
+            }
         }
     }
     for m in &mut mean {
@@ -483,6 +508,22 @@ mod tests {
             g.edges()
         };
         assert_eq!(run(RayContext::inline()), run(RayContext::threads(4)));
+    }
+
+    #[test]
+    fn sharded_correlation_matches_adapter() {
+        // the adapter and an explicitly pre-sharded dataset run the same
+        // task graph, so the correlation matrices are bit-identical.
+        let x = sem(1500, 4, &[(0, 1, 0.8), (2, 3, 0.7)], 11);
+        let ctx = RayContext::inline();
+        let zeros = vec![0.0f32; 1500];
+        let sds = crate::data::dataset::ShardedDataset::from_matrix(
+            &ctx, &x, &zeros, &zeros, 256,
+        )
+        .unwrap();
+        let a = correlation_matrix(&ctx, Arc::new(HostBackend), &x, 256).unwrap();
+        let b = correlation_matrix_sharded(&ctx, Arc::new(HostBackend), &sds).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -209,6 +209,15 @@ pub struct RunConfig {
     pub cluster: ClusterConfig,
     /// Serving-plane knobs for `nexus serve`.
     pub serve: ServeConfig,
+    /// Route `nexus fit` through streaming sharded ingest (`--sharded`):
+    /// the dataset is generated chunk by chunk straight into the object
+    /// store instead of being materialized on the driver.
+    pub sharded: bool,
+    /// Rows materialized per streaming-ingest chunk (`--ingest-chunk`);
+    /// the driver's peak data footprint is O(this), not O(n).
+    pub ingest_chunk: usize,
+    /// Rows per sharded store block (`--shard-blocks`).
+    pub shard_block: usize,
     pub seed: u64,
 }
 
@@ -227,6 +236,9 @@ impl Default for RunConfig {
             backend: "pjrt".into(),
             cluster: ClusterConfig::default(),
             serve: ServeConfig::default(),
+            sharded: false,
+            ingest_chunk: 65_536,
+            shard_block: 4096,
             seed: 123,
         }
     }
@@ -251,6 +263,12 @@ impl RunConfig {
         }
         if self.lam_y < 0.0 || self.lam_t < 0.0 {
             return Err(NexusError::Config("penalties must be non-negative".into()));
+        }
+        if self.ingest_chunk == 0 {
+            return Err(NexusError::Config("ingest_chunk must be positive".into()));
+        }
+        if self.shard_block == 0 {
+            return Err(NexusError::Config("shard_blocks must be positive".into()));
         }
         self.serve.validate()?;
         Ok(())
@@ -297,6 +315,15 @@ impl RunConfig {
         if let Some(x) = v.get("seed") {
             cfg.seed = x.as_i64()? as u64;
         }
+        if let Some(x) = v.get("sharded") {
+            cfg.sharded = x.as_bool()?;
+        }
+        if let Some(x) = v.get("ingest_chunk") {
+            cfg.ingest_chunk = x.as_usize()?;
+        }
+        if let Some(x) = v.get("shard_blocks") {
+            cfg.shard_block = x.as_usize()?;
+        }
         if let Some(c) = v.get("cluster") {
             if let Some(x) = c.get("nodes") {
                 cfg.cluster.nodes = x.as_usize()?;
@@ -339,6 +366,9 @@ impl RunConfig {
             .set("exec", self.exec.name())
             .set("workers", self.workers)
             .set("backend", self.backend.as_str())
+            .set("sharded", self.sharded)
+            .set("ingest_chunk", self.ingest_chunk)
+            .set("shard_blocks", self.shard_block)
             .set("seed", self.seed as i64)
             .set(
                 "cluster",
@@ -373,6 +403,9 @@ mod tests {
         cfg.serve.replicas = 6;
         cfg.serve.policy = "lor".into();
         cfg.serve.autoscale = true;
+        cfg.sharded = true;
+        cfg.ingest_chunk = 8192;
+        cfg.shard_block = 512;
         let v = cfg.to_json();
         let back = RunConfig::from_json(&v).unwrap();
         assert_eq!(back.n, 77_000);
@@ -381,6 +414,9 @@ mod tests {
         assert_eq!(back.serve.replicas, 6);
         assert_eq!(back.serve.policy, "lor");
         assert!(back.serve.autoscale);
+        assert!(back.sharded);
+        assert_eq!(back.ingest_chunk, 8192);
+        assert_eq!(back.shard_block, 512);
     }
 
     #[test]
@@ -398,6 +434,8 @@ mod tests {
         assert!(RunConfig { n: 8, ..Default::default() }.validate().is_err());
         assert!(RunConfig { workers: 0, ..Default::default() }.validate().is_err());
         assert!(RunConfig { lam_y: -1.0, ..Default::default() }.validate().is_err());
+        assert!(RunConfig { ingest_chunk: 0, ..Default::default() }.validate().is_err());
+        assert!(RunConfig { shard_block: 0, ..Default::default() }.validate().is_err());
         let bad_serve = RunConfig {
             serve: ServeConfig { replicas: 0, ..Default::default() },
             ..Default::default()

@@ -1,0 +1,812 @@
+//! The sharded dataset plane: row blocks resident in the raylet object
+//! store from ingest onward.
+//!
+//! Every estimator in `causal/` used to start from a [`CausalDataset`]
+//! fully materialized in driver memory and only shard *after* the driver
+//! had paid for the whole matrix — the exact bottleneck the paper's
+//! industrial-scale workloads (1M × 500) hit first.  A
+//! [`ShardedDataset`] instead holds `ObjectRef`s of padded
+//! [`RowBlock`]s: streaming ingest ([`ShardedDataset::ingest_synth`],
+//! [`ShardedDataset::ingest_csv`]) materializes ONE chunk at a time on
+//! the driver, cuts it into store blocks, and moves on, so driver peak
+//! memory is O(chunk), not O(n·d).
+//!
+//! The driver keeps only scalar-sized state per row (block membership,
+//! and — when an estimator asks for them — single columns like the
+//! treatment vector for stratified folds).  Those are O(n) but a factor
+//! d (hundreds) smaller than the matrix; the matrix itself never lands
+//! on the driver.
+//!
+//! Transforms ([`crate::data::pipeline::Pipeline`]) and the fold split
+//! below lower onto the [`RayContext`] task graph, so the inline /
+//! thread-pool / simulated executors all run them unchanged and the
+//! cross-executor parity invariant extends to ingest.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::data::folds::FoldPlan;
+use crate::data::io;
+use crate::data::matrix::Matrix;
+use crate::data::partition::{make_blocks, RowBlock};
+use crate::data::synth::{self, CausalDataset, SynthConfig};
+use crate::error::{NexusError, Result};
+use crate::models::distops;
+use crate::raylet::api::RayContext;
+use crate::raylet::payload::Payload;
+use crate::raylet::task::{ObjectRef, TaskFn};
+use crate::runtime::tensor::Tensor;
+
+/// Pad raw covariates with an intercept column and zero columns up to
+/// `d_pad` (the shipped-artifact width contract).
+pub fn pad_covariates(x: &Matrix, d_pad: usize) -> Result<Matrix> {
+    let with_icpt = x.with_intercept();
+    if with_icpt.cols() > d_pad {
+        return Err(NexusError::Data(format!(
+            "d+1={} exceeds padded width {d_pad}",
+            with_icpt.cols()
+        )));
+    }
+    Ok(with_icpt.pad_cols(d_pad))
+}
+
+/// Streaming-ingest knobs.
+#[derive(Clone, Debug)]
+pub struct IngestOpts {
+    /// Rows materialized on the driver per chunk (`--ingest-chunk`).
+    /// Rounded up to a multiple of `block` so the produced store blocks
+    /// are identical regardless of chunk size.
+    pub chunk: usize,
+    /// Rows per store block (`--shard-blocks`).
+    pub block: usize,
+}
+
+impl Default for IngestOpts {
+    fn default() -> Self {
+        IngestOpts { chunk: 65_536, block: 4096 }
+    }
+}
+
+/// What an ingest did, and what it cost the driver.
+#[derive(Clone, Debug)]
+pub struct IngestReport {
+    pub n_rows: usize,
+    /// Raw covariate count in the source.
+    pub d_in: usize,
+    /// Stored (padded) width.
+    pub d_pad: usize,
+    pub blocks: usize,
+    /// Effective chunk rows after rounding to a block multiple.
+    pub chunk_rows: usize,
+    /// High-water mark of driver-resident ingest buffers, bytes — the
+    /// O(chunk) bound the sharded plane exists to provide.
+    pub driver_peak_bytes: usize,
+    /// Total bytes placed in the object store.
+    pub store_bytes: usize,
+    /// Oracle ATE accumulated during synthetic ingest (None for CSV).
+    pub true_ate: Option<f64>,
+}
+
+/// Summary statistics computed by one distributed pass over the blocks.
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    pub n: f64,
+    /// Per stored column (f64 from f32 partial sums; not bit-pinned).
+    pub mean: Vec<f64>,
+    pub var: Vec<f64>,
+    pub y_mean: f64,
+    pub treated_share: f64,
+}
+
+/// A dataset whose unit of residence is an object-store [`RowBlock`].
+#[derive(Clone, Debug)]
+pub struct ShardedDataset {
+    /// Store refs of the row blocks (`Payload::Block`).
+    pub blocks: Vec<ObjectRef>,
+    /// Global row ids per block, driver-side (O(n) usize; the matrix
+    /// itself never lands on the driver).
+    pub meta: Vec<Vec<usize>>,
+    pub n_rows: usize,
+    /// Stored covariate width (padded width for estimator datasets).
+    pub d: usize,
+    /// Rows per store block (the final block may be short).
+    pub block: usize,
+    /// True when col 0 is an intercept and the width is artifact-padded
+    /// (required by the crossfit/DML path; discovery stores raw columns).
+    pub padded: bool,
+}
+
+/// Put a batch of driver-built blocks, recording their row membership.
+fn put_all(ctx: &RayContext, blocks: Vec<RowBlock>) -> (Vec<ObjectRef>, Vec<Vec<usize>>, usize) {
+    let mut refs = Vec::with_capacity(blocks.len());
+    let mut meta = Vec::with_capacity(blocks.len());
+    let mut bytes = 0usize;
+    for blk in blocks {
+        meta.push(blk.rows.clone());
+        let p = Payload::Block(blk);
+        bytes += p.size_bytes();
+        refs.push(ctx.put(p));
+    }
+    (refs, meta, bytes)
+}
+
+/// Per-chunk accounting shared by every streaming ingest source.
+struct IngestAccum {
+    blocks: Vec<ObjectRef>,
+    meta: Vec<Vec<usize>>,
+    n_rows: usize,
+    driver_peak_bytes: usize,
+    store_bytes: usize,
+}
+
+impl IngestAccum {
+    fn new() -> IngestAccum {
+        IngestAccum {
+            blocks: Vec::new(),
+            meta: Vec::new(),
+            n_rows: 0,
+            driver_peak_bytes: 0,
+            store_bytes: 0,
+        }
+    }
+
+    /// Pad one chunk, cut it into `block`-row store blocks with global
+    /// row ids starting at the current row count, and put them.
+    /// `aux_cols` is the number of extra per-row driver columns the
+    /// source holds alongside the matrix (for peak accounting).
+    fn push_chunk(
+        &mut self,
+        ctx: &RayContext,
+        x: &Matrix,
+        y: &[f32],
+        t: &[f32],
+        d_pad: usize,
+        block: usize,
+        aux_cols: usize,
+    ) -> Result<()> {
+        let len = x.rows();
+        let x_pad = pad_covariates(x, d_pad)?;
+        let local: Vec<usize> = (0..len).collect();
+        let mut built = make_blocks(&x_pad, y, t, &local, block);
+        for blk in &mut built {
+            for r in &mut blk.rows {
+                *r += self.n_rows;
+            }
+        }
+        // driver high-water mark: raw chunk + padded copy + aux columns
+        // + the built block copies that coexist before the puts release
+        let built_bytes: usize = built.len() * 4 * (block * d_pad + 3 * block);
+        let chunk_bytes = 4 * (len * x.cols() + len * d_pad + aux_cols * len) + built_bytes;
+        self.driver_peak_bytes = self.driver_peak_bytes.max(chunk_bytes);
+        let (refs, ms, bytes) = put_all(ctx, built);
+        self.blocks.extend(refs);
+        self.meta.extend(ms);
+        self.store_bytes += bytes;
+        self.n_rows += len;
+        Ok(())
+    }
+}
+
+impl ShardedDataset {
+    pub fn n(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Adapter from a driver-resident dataset: pads + intercepts, then
+    /// pushes every block into the store.  Existing `CausalDataset`
+    /// callers reach the sharded plane through this.
+    pub fn from_materialized(
+        ctx: &RayContext,
+        ds: &CausalDataset,
+        d_pad: usize,
+        block: usize,
+    ) -> Result<ShardedDataset> {
+        if ds.n() == 0 {
+            return Err(NexusError::Data("from_materialized: empty dataset".into()));
+        }
+        if block == 0 {
+            return Err(NexusError::Data("from_materialized: block must be positive".into()));
+        }
+        let x_pad = pad_covariates(&ds.x, d_pad)?;
+        let rows: Vec<usize> = (0..ds.n()).collect();
+        let built = make_blocks(&x_pad, &ds.y, &ds.t, &rows, block);
+        let (blocks, meta, _bytes) = put_all(ctx, built);
+        Ok(ShardedDataset { blocks, meta, n_rows: ds.n(), d: d_pad, block, padded: true })
+    }
+
+    /// Raw (unpadded, no intercept) residence for discovery-style
+    /// workloads that operate on the original columns.
+    pub fn from_matrix(
+        ctx: &RayContext,
+        x: &Matrix,
+        y: &[f32],
+        t: &[f32],
+        block: usize,
+    ) -> Result<ShardedDataset> {
+        let n = x.rows();
+        if n == 0 {
+            return Err(NexusError::Data("from_matrix: empty dataset".into()));
+        }
+        if y.len() != n || t.len() != n {
+            return Err(NexusError::Data(format!(
+                "from_matrix: column lengths (y={}, t={}) != n={n}",
+                y.len(),
+                t.len()
+            )));
+        }
+        if block == 0 {
+            return Err(NexusError::Data("from_matrix: block must be positive".into()));
+        }
+        let rows: Vec<usize> = (0..n).collect();
+        let built = make_blocks(x, y, t, &rows, block);
+        let (blocks, meta, _bytes) = put_all(ctx, built);
+        Ok(ShardedDataset { blocks, meta, n_rows: n, d: x.cols(), block, padded: false })
+    }
+
+    /// Streaming synthetic ingest: one chunk of rows is generated,
+    /// padded, cut into store blocks, and released before the next chunk
+    /// — the driver never holds more than O(chunk) matrix bytes.  The
+    /// produced blocks are bit-identical to
+    /// [`ShardedDataset::from_materialized`] of `synth::generate(cfg)`
+    /// for any chunk size (per-row PCG streams).
+    pub fn ingest_synth(
+        ctx: &RayContext,
+        cfg: &SynthConfig,
+        d_pad: usize,
+        opts: &IngestOpts,
+    ) -> Result<(ShardedDataset, IngestReport)> {
+        if cfg.n == 0 {
+            return Err(NexusError::Data("ingest_synth: empty dataset".into()));
+        }
+        if opts.block == 0 {
+            return Err(NexusError::Data("ingest_synth: block must be positive".into()));
+        }
+        let block = opts.block;
+        let chunk = opts.chunk.max(1).div_ceil(block) * block;
+
+        let mut acc = IngestAccum::new();
+        let mut cate_sum = 0.0f64;
+        let mut start = 0usize;
+        while start < cfg.n {
+            let end = (start + chunk).min(cfg.n);
+            let part = synth::generate_range(cfg, start, end);
+            cate_sum += part.true_cate.iter().map(|&c| c as f64).sum::<f64>();
+            acc.push_chunk(ctx, &part.x, &part.y, &part.t, d_pad, block, 4)?;
+            start = end;
+        }
+        let report = IngestReport {
+            n_rows: cfg.n,
+            d_in: cfg.d,
+            d_pad,
+            blocks: acc.blocks.len(),
+            chunk_rows: chunk,
+            driver_peak_bytes: acc.driver_peak_bytes,
+            store_bytes: acc.store_bytes,
+            true_ate: Some(cate_sum / cfg.n as f64),
+        };
+        Ok((
+            ShardedDataset {
+                blocks: acc.blocks,
+                meta: acc.meta,
+                n_rows: cfg.n,
+                d: d_pad,
+                block,
+                padded: true,
+            },
+            report,
+        ))
+    }
+
+    /// Streaming CSV ingest (the `export_csv` layout: `x0..x{d-1},t,y`).
+    /// Values written by `export_csv` round-trip bit-exactly (shortest
+    /// f32 representation), so CSV ingest of an exported dataset equals
+    /// materialized residence.
+    pub fn ingest_csv(
+        ctx: &RayContext,
+        path: &Path,
+        d_pad: usize,
+        opts: &IngestOpts,
+    ) -> Result<(ShardedDataset, IngestReport)> {
+        if opts.block == 0 {
+            return Err(NexusError::Data("ingest_csv: block must be positive".into()));
+        }
+        let block = opts.block;
+        let chunk = opts.chunk.max(1).div_ceil(block) * block;
+        let mut reader = io::csv_chunks(path, chunk)?;
+        let d_in = reader.d();
+
+        let mut acc = IngestAccum::new();
+        while let Some((x, y, t)) = reader.next_chunk()? {
+            acc.push_chunk(ctx, &x, &y, &t, d_pad, block, 2)?;
+        }
+        if acc.n_rows == 0 {
+            return Err(NexusError::Data(format!("{}: no data rows", path.display())));
+        }
+        let report = IngestReport {
+            n_rows: acc.n_rows,
+            d_in,
+            d_pad,
+            blocks: acc.blocks.len(),
+            chunk_rows: chunk,
+            driver_peak_bytes: acc.driver_peak_bytes,
+            store_bytes: acc.store_bytes,
+            true_ate: None,
+        };
+        let n_rows = acc.n_rows;
+        Ok((
+            ShardedDataset {
+                blocks: acc.blocks,
+                meta: acc.meta,
+                n_rows,
+                d: d_pad,
+                block,
+                padded: true,
+            },
+            report,
+        ))
+    }
+
+    /// Fetch the treatment column to the driver (O(n) f32 — needed for
+    /// stratified fold plans; a factor d smaller than the matrix).
+    pub fn collect_t(&self, ctx: &RayContext) -> Result<Vec<f32>> {
+        let mut t = vec![0.0f32; self.n_rows];
+        for r in &self.blocks {
+            let p = ctx.get(r)?;
+            let b = p.as_block()?;
+            for (slot, &row) in b.rows.iter().enumerate() {
+                if row >= self.n_rows {
+                    return Err(NexusError::Data(format!(
+                        "collect_t: row id {row} >= n_rows {} (repartition after filtering)",
+                        self.n_rows
+                    )));
+                }
+                t[row] = b.t[slot];
+            }
+        }
+        Ok(t)
+    }
+
+    /// Scatter stored columns back into full-length driver vectors,
+    /// reading one block at a time (O(n · cols.len()) driver bytes —
+    /// used for the tiny heterogeneity columns of the ATE delta method).
+    pub fn scatter_columns(&self, ctx: &RayContext, cols: &[usize]) -> Result<Vec<Vec<f32>>> {
+        for &c in cols {
+            if c >= self.d {
+                return Err(NexusError::Data(format!(
+                    "scatter_columns: column {c} >= width {}",
+                    self.d
+                )));
+            }
+        }
+        let mut out = vec![vec![0.0f32; self.n_rows]; cols.len()];
+        for r in &self.blocks {
+            let p = ctx.get(r)?;
+            let b = p.as_block()?;
+            for (slot, &row) in b.rows.iter().enumerate() {
+                if row >= self.n_rows {
+                    return Err(NexusError::Data(format!(
+                        "scatter_columns: row id {row} >= n_rows {} (repartition after filtering)",
+                        self.n_rows
+                    )));
+                }
+                for (ci, &c) in cols.iter().enumerate() {
+                    out[ci][row] = b.x.get(slot, c);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Driver-side row → (block, slot) locator built from the meta.
+    fn locator(&self) -> Vec<(u32, u32)> {
+        let cap = self
+            .meta
+            .iter()
+            .flat_map(|rows| rows.iter())
+            .copied()
+            .max()
+            .map_or(0, |m| m + 1);
+        let mut loc = vec![(u32::MAX, 0u32); cap];
+        for (bi, rows) in self.meta.iter().enumerate() {
+            for (slot, &row) in rows.iter().enumerate() {
+                loc[row] = (bi as u32, slot as u32);
+            }
+        }
+        loc
+    }
+
+    /// Gather `rows` into fresh `block`-row padded blocks — one task per
+    /// output block whose args are exactly the source blocks holding its
+    /// rows.  The copy happens inside tasks; the driver only plans.
+    /// `new_ids`, when given, renumbers the gathered rows (repartition).
+    pub fn gather(
+        &self,
+        ctx: &RayContext,
+        rows: &[usize],
+        new_ids: Option<&[usize]>,
+        block: usize,
+        label: &str,
+        cost_hint: f64,
+    ) -> Result<(Vec<ObjectRef>, Vec<Vec<usize>>)> {
+        if block == 0 {
+            return Err(NexusError::Data("gather: block must be positive".into()));
+        }
+        if let Some(ids) = new_ids {
+            if ids.len() != rows.len() {
+                return Err(NexusError::Data(format!(
+                    "gather: {} new ids for {} rows",
+                    ids.len(),
+                    rows.len()
+                )));
+            }
+        }
+        let loc = self.locator();
+        self.gather_with_loc(ctx, &loc, rows, new_ids, block, label, cost_hint)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn gather_with_loc(
+        &self,
+        ctx: &RayContext,
+        loc: &[(u32, u32)],
+        rows: &[usize],
+        new_ids: Option<&[usize]>,
+        block: usize,
+        label: &str,
+        cost_hint: f64,
+    ) -> Result<(Vec<ObjectRef>, Vec<Vec<usize>>)> {
+        let d = self.d;
+        let n_out = rows.len().div_ceil(block);
+        let mut refs = Vec::with_capacity(n_out);
+        let mut metas = Vec::with_capacity(n_out);
+        for (ci, chunk) in rows.chunks(block).enumerate() {
+            let ids_chunk: Vec<usize> = match new_ids {
+                Some(ids) => ids[ci * block..ci * block + chunk.len()].to_vec(),
+                None => chunk.to_vec(),
+            };
+            // dedup source blocks in first-appearance order; per output
+            // row remember (arg index, slot) for the in-task copy.
+            // O(1) lookup per row via a block-id -> arg-index table
+            let mut src: Vec<usize> = Vec::new();
+            let mut arg_of: Vec<u32> = vec![u32::MAX; self.blocks.len()];
+            let mut plan: Vec<(usize, usize)> = Vec::with_capacity(chunk.len());
+            for &row in chunk {
+                let (bi, slot) = *loc.get(row).ok_or_else(|| {
+                    NexusError::Data(format!("gather: row {row} not in this dataset"))
+                })?;
+                if bi == u32::MAX {
+                    return Err(NexusError::Data(format!(
+                        "gather: row {row} not in this dataset"
+                    )));
+                }
+                let bi = bi as usize;
+                let ai = if arg_of[bi] == u32::MAX {
+                    src.push(bi);
+                    arg_of[bi] = (src.len() - 1) as u32;
+                    src.len() - 1
+                } else {
+                    arg_of[bi] as usize
+                };
+                plan.push((ai, slot as usize));
+            }
+            let args: Vec<ObjectRef> = src.iter().map(|&bi| self.blocks[bi]).collect();
+            let out_rows = ids_chunk.clone();
+            let f: TaskFn = Arc::new(move |args: &[&Payload]| {
+                let valid = plan.len();
+                let mut bx = Matrix::zeros(block, d);
+                let mut by = vec![0.0f32; block];
+                let mut bt = vec![0.0f32; block];
+                let mut mask = vec![0.0f32; block];
+                for (r, &(ai, slot)) in plan.iter().enumerate() {
+                    let srcb = args[ai].as_block()?;
+                    bx.row_mut(r).copy_from_slice(srcb.x.row(slot));
+                    by[r] = srcb.y[slot];
+                    bt[r] = srcb.t[slot];
+                    mask[r] = 1.0;
+                }
+                Ok(Payload::Block(RowBlock {
+                    x: bx,
+                    y: by,
+                    t: bt,
+                    mask,
+                    valid,
+                    rows: out_rows.clone(),
+                }))
+            });
+            let out_bytes = 4 * (block * d + 3 * block);
+            refs.push(ctx.submit_sized(label, args, cost_hint, out_bytes, f));
+            metas.push(ids_chunk);
+        }
+        Ok((refs, metas))
+    }
+
+    /// Split into per-fold eval block sets — the residence format the
+    /// cross-fitting DAG consumes.  Produces blocks bit-identical to
+    /// driver-side `make_blocks` over each fold's rows, which is what
+    /// keeps sharded estimates equal to the materialized path.
+    pub fn split_by_fold(
+        &self,
+        ctx: &RayContext,
+        plan: &FoldPlan,
+        block: usize,
+        gather_cost: f64,
+    ) -> Result<(Vec<Vec<ObjectRef>>, Vec<Vec<Vec<usize>>>)> {
+        if plan.n() != self.n_rows {
+            return Err(NexusError::Data(format!(
+                "split_by_fold: plan covers {} rows, dataset has {}",
+                plan.n(),
+                self.n_rows
+            )));
+        }
+        let loc = self.locator();
+        let mut all_refs = Vec::with_capacity(plan.k);
+        let mut all_rows = Vec::with_capacity(plan.k);
+        for f in 0..plan.k as u32 {
+            let rows = plan.fold_rows(f);
+            let (refs, metas) = self.gather_with_loc(
+                ctx,
+                &loc,
+                &rows,
+                None,
+                block,
+                &format!("shard:fold{f}"),
+                gather_cost,
+            )?;
+            all_refs.push(refs);
+            all_rows.push(metas);
+        }
+        Ok((all_refs, all_rows))
+    }
+
+    /// One distributed pass of per-block summary partials, tree-reduced.
+    pub fn stats(&self, ctx: &RayContext) -> Result<DatasetStats> {
+        let d = self.d;
+        let partials: Vec<ObjectRef> = self
+            .blocks
+            .iter()
+            .map(|r| ctx.submit("shard:stats", vec![*r], 0.0, stats_task(d)))
+            .collect();
+        let root = distops::tree_reduce(ctx, partials, 8, "shard:stats", 0.0, 4 * (2 * d + 3));
+        let p = ctx.get(&root)?;
+        let ts = p.as_tensors()?;
+        let (sum, sumsq, aux) = (&ts[0].data, &ts[1].data, &ts[2].data);
+        let n = aux[0] as f64;
+        if n <= 0.0 {
+            return Err(NexusError::Data("stats: empty dataset".into()));
+        }
+        let mean: Vec<f64> = sum.iter().map(|&s| s as f64 / n).collect();
+        let var: Vec<f64> = sumsq
+            .iter()
+            .zip(&mean)
+            .map(|(&sq, &m)| (sq as f64 / n - m * m).max(0.0))
+            .collect();
+        Ok(DatasetStats {
+            n,
+            mean,
+            var,
+            y_mean: aux[1] as f64 / n,
+            treated_share: aux[2] as f64 / n,
+        })
+    }
+}
+
+/// Per-block stats partial: Tensors([col sums, col sumsqs, [count, Σy, Σt]]).
+fn stats_task(d: usize) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let b = args[0].as_block()?;
+        let mut sum = vec![0.0f32; d];
+        let mut sumsq = vec![0.0f32; d];
+        let mut aux = vec![0.0f32; 3];
+        for slot in 0..b.valid {
+            let row = b.x.row(slot);
+            for j in 0..d {
+                sum[j] += row[j];
+                sumsq[j] += row[j] * row[j];
+            }
+            aux[0] += 1.0;
+            aux[1] += b.y[slot];
+            aux[2] += b.t[slot];
+        }
+        Ok(Payload::Tensors(vec![
+            Tensor::vector(sum),
+            Tensor::vector(sumsq),
+            Tensor::vector(aux),
+        ]))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::generate;
+
+    fn small_cfg(n: usize, d: usize) -> SynthConfig {
+        SynthConfig { n, d, seed: 41, ..Default::default() }
+    }
+
+    #[test]
+    fn streaming_ingest_equals_materialized_blocks() {
+        let cfg = small_cfg(300, 4);
+        let ctx = RayContext::inline();
+        let ds = generate(&cfg);
+        let mat = ShardedDataset::from_materialized(&ctx, &ds, 8, 64).unwrap();
+        let (st, report) = ShardedDataset::ingest_synth(
+            &ctx,
+            &cfg,
+            8,
+            &IngestOpts { chunk: 100, block: 64 },
+        )
+        .unwrap();
+        assert_eq!(st.n_rows, 300);
+        assert_eq!(report.n_rows, 300);
+        assert_eq!(report.chunk_rows, 128, "chunk rounds up to a block multiple");
+        assert_eq!(st.meta, mat.meta, "same row → block layout");
+        // block payloads are bit-identical
+        for (a, b) in mat.blocks.iter().zip(&st.blocks) {
+            let pa = ctx.get(a).unwrap();
+            let pb = ctx.get(b).unwrap();
+            let (ba, bb) = (pa.as_block().unwrap(), pb.as_block().unwrap());
+            assert_eq!(ba.x, bb.x);
+            assert_eq!(ba.y, bb.y);
+            assert_eq!(ba.t, bb.t);
+            assert_eq!(ba.mask, bb.mask);
+            assert_eq!(ba.rows, bb.rows);
+        }
+        // driver peak is O(chunk), far below the materialized matrix
+        assert!(report.driver_peak_bytes > 0);
+        assert!(report.driver_peak_bytes < 4 * 300 * (4 + 8 + 4));
+    }
+
+    #[test]
+    fn ingest_is_chunk_invariant() {
+        let cfg = small_cfg(257, 3);
+        let ctx = RayContext::inline();
+        let (a, _) = ShardedDataset::ingest_synth(
+            &ctx,
+            &cfg,
+            8,
+            &IngestOpts { chunk: 32, block: 32 },
+        )
+        .unwrap();
+        let (b, _) = ShardedDataset::ingest_synth(
+            &ctx,
+            &cfg,
+            8,
+            &IngestOpts { chunk: 1000, block: 32 },
+        )
+        .unwrap();
+        assert_eq!(a.meta, b.meta);
+        assert_eq!(a.collect_t(&ctx).unwrap(), b.collect_t(&ctx).unwrap());
+        assert_eq!(
+            a.scatter_columns(&ctx, &[1]).unwrap(),
+            b.scatter_columns(&ctx, &[1]).unwrap()
+        );
+    }
+
+    #[test]
+    fn collect_t_matches_source() {
+        let cfg = small_cfg(120, 3);
+        let ds = generate(&cfg);
+        let ctx = RayContext::inline();
+        let (st, _) = ShardedDataset::ingest_synth(
+            &ctx,
+            &cfg,
+            8,
+            &IngestOpts { chunk: 50, block: 16 },
+        )
+        .unwrap();
+        assert_eq!(st.collect_t(&ctx).unwrap(), ds.t);
+        // column 1 of the padded block is raw covariate 0
+        let col = st.scatter_columns(&ctx, &[1]).unwrap();
+        for i in 0..120 {
+            assert_eq!(col[0][i], ds.x.get(i, 0));
+        }
+    }
+
+    #[test]
+    fn split_by_fold_partitions_rows() {
+        let cfg = small_cfg(200, 3);
+        let ctx = RayContext::inline();
+        let (st, _) = ShardedDataset::ingest_synth(
+            &ctx,
+            &cfg,
+            8,
+            &IngestOpts { chunk: 64, block: 32 },
+        )
+        .unwrap();
+        let plan = FoldPlan::random(200, 4, 7).unwrap();
+        let (refs, rows) = st.split_by_fold(&ctx, &plan, 48, 0.0).unwrap();
+        assert_eq!(refs.len(), 4);
+        let mut seen: Vec<usize> = Vec::new();
+        for (fold_refs, fold_rows) in refs.iter().zip(&rows) {
+            for (r, meta_rows) in fold_refs.iter().zip(fold_rows) {
+                let p = ctx.get(r).unwrap();
+                let b = p.as_block().unwrap();
+                assert_eq!(&b.rows, meta_rows);
+                assert_eq!(b.valid, meta_rows.len());
+                assert!(b.valid > 0, "all-padding fold block");
+                let msum: f32 = b.mask.iter().sum();
+                assert_eq!(msum as usize, b.valid);
+                seen.extend(&b.rows);
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..200).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stats_match_direct_computation() {
+        let cfg = small_cfg(400, 3);
+        let ds = generate(&cfg);
+        let ctx = RayContext::threads(3);
+        let st = ShardedDataset::from_matrix(&ctx, &ds.x, &ds.y, &ds.t, 64).unwrap();
+        let s = st.stats(&ctx).unwrap();
+        assert_eq!(s.n, 400.0);
+        let direct_mean: f64 =
+            (0..400).map(|i| ds.x.get(i, 0) as f64).sum::<f64>() / 400.0;
+        assert!((s.mean[0] - direct_mean).abs() < 1e-3, "{} vs {direct_mean}", s.mean[0]);
+        assert!((s.var[0] - 1.0).abs() < 0.2, "x0 ~ N(0,1): var={}", s.var[0]);
+        let share = ds.t.iter().map(|&t| t as f64).sum::<f64>() / 400.0;
+        assert!((s.treated_share - share).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_ingest_roundtrips_exported_dataset() {
+        let cfg = small_cfg(90, 3);
+        let ds = generate(&cfg);
+        let dir = std::env::temp_dir().join("nexus-dataset-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ingest.csv");
+        io::export_csv(&ds, &path).unwrap();
+        let ctx = RayContext::inline();
+        let (st, report) = ShardedDataset::ingest_csv(
+            &ctx,
+            &path,
+            8,
+            &IngestOpts { chunk: 40, block: 16 },
+        )
+        .unwrap();
+        assert_eq!(report.n_rows, 90);
+        assert_eq!(report.d_in, 3);
+        assert!(report.true_ate.is_none());
+        // shortest-f32 CSV formatting round-trips bit-exactly
+        let mat = ShardedDataset::from_materialized(&ctx, &ds, 8, 16).unwrap();
+        for (a, b) in mat.blocks.iter().zip(&st.blocks) {
+            let pa = ctx.get(a).unwrap();
+            let pb = ctx.get(b).unwrap();
+            assert_eq!(pa.as_block().unwrap().x, pb.as_block().unwrap().x);
+            assert_eq!(pa.as_block().unwrap().y, pb.as_block().unwrap().y);
+        }
+    }
+
+    #[test]
+    fn constructors_reject_bad_inputs() {
+        let ctx = RayContext::inline();
+        let cfg = small_cfg(50, 3);
+        let ds = generate(&cfg);
+        assert!(ShardedDataset::from_materialized(&ctx, &ds, 8, 0).is_err());
+        assert!(ShardedDataset::from_materialized(&ctx, &ds, 2, 16).is_err(), "d_pad too small");
+        assert!(ShardedDataset::from_matrix(&ctx, &ds.x, &ds.y[..10], &ds.t, 16).is_err());
+        assert!(ShardedDataset::ingest_synth(
+            &ctx,
+            &SynthConfig { n: 0, ..cfg.clone() },
+            8,
+            &IngestOpts::default()
+        )
+        .is_err());
+        let (st, _) =
+            ShardedDataset::ingest_synth(&ctx, &cfg, 8, &IngestOpts { chunk: 16, block: 16 })
+                .unwrap();
+        assert!(st.scatter_columns(&ctx, &[99]).is_err());
+        let plan = FoldPlan::random(40, 2, 1).unwrap();
+        assert!(st.split_by_fold(&ctx, &plan, 16, 0.0).is_err(), "plan size mismatch");
+    }
+}

@@ -4,7 +4,7 @@
 //! The NEXUS platform (§4) caches generated/ingested datasets between
 //! runs; benches use this to avoid regenerating 1M-row tables.
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use crate::data::matrix::Matrix;
@@ -130,6 +130,87 @@ pub fn export_csv(ds: &CausalDataset, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Streaming CSV reader over the [`export_csv`] layout
+/// (`x0..x{d-1},t,y`): yields chunks of at most `chunk` rows so ingest
+/// never materializes the full table on the driver.
+pub struct CsvChunks {
+    lines: std::io::Lines<BufReader<std::fs::File>>,
+    d: usize,
+    chunk: usize,
+    line_no: usize,
+}
+
+/// Open a CSV for chunked reading; validates the header shape.
+pub fn csv_chunks(path: &Path, chunk: usize) -> Result<CsvChunks> {
+    if chunk == 0 {
+        return Err(NexusError::Data("csv_chunks: chunk must be positive".into()));
+    }
+    let file = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(file).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| NexusError::Data(format!("{}: empty csv", path.display())))??;
+    let cols: Vec<&str> = header.split(',').map(str::trim).collect();
+    if cols.len() < 3 || cols[cols.len() - 2] != "t" || cols[cols.len() - 1] != "y" {
+        return Err(NexusError::Data(format!(
+            "{}: expected header x0..x{{d-1}},t,y, got '{header}'",
+            path.display()
+        )));
+    }
+    Ok(CsvChunks { lines, d: cols.len() - 2, chunk, line_no: 1 })
+}
+
+impl CsvChunks {
+    /// Covariate count from the header.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Next chunk of rows as `(x, y, t)`; `Ok(None)` at EOF.
+    pub fn next_chunk(&mut self) -> Result<Option<(Matrix, Vec<f32>, Vec<f32>)>> {
+        let mut xs: Vec<f32> = Vec::with_capacity(self.chunk * self.d);
+        let mut ys: Vec<f32> = Vec::with_capacity(self.chunk);
+        let mut ts: Vec<f32> = Vec::with_capacity(self.chunk);
+        let mut rows = 0usize;
+        while rows < self.chunk {
+            let line = match self.lines.next() {
+                None => break,
+                Some(line) => line?,
+            };
+            self.line_no += 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cells: Vec<&str> = line.split(',').collect();
+            if cells.len() != self.d + 2 {
+                return Err(NexusError::Data(format!(
+                    "csv line {}: {} cells, expected {}",
+                    self.line_no,
+                    cells.len(),
+                    self.d + 2
+                )));
+            }
+            for (c, cell) in cells.iter().enumerate() {
+                let v: f32 = cell.trim().parse().map_err(|_| {
+                    NexusError::Data(format!("csv line {}: bad number '{cell}'", self.line_no))
+                })?;
+                if c < self.d {
+                    xs.push(v);
+                } else if c == self.d {
+                    ts.push(v);
+                } else {
+                    ys.push(v);
+                }
+            }
+            rows += 1;
+        }
+        if rows == 0 {
+            return Ok(None);
+        }
+        Ok(Some((Matrix::from_vec(rows, self.d, xs)?, ys, ts)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +248,42 @@ mod tests {
         let a = load_or_generate(&cfg, &dir).unwrap();
         let b = load_or_generate(&cfg, &dir).unwrap();
         assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn csv_chunked_read_roundtrips_bitexact() {
+        let ds = generate(&SynthConfig { n: 37, d: 3, ..Default::default() });
+        let path = tmp("chunked.csv");
+        export_csv(&ds, &path).unwrap();
+        let mut reader = csv_chunks(&path, 10).unwrap();
+        assert_eq!(reader.d(), 3);
+        let mut at = 0usize;
+        while let Some((x, y, t)) = reader.next_chunk().unwrap() {
+            assert!(x.rows() <= 10);
+            for r in 0..x.rows() {
+                assert_eq!(x.row(r), ds.x.row(at + r), "row {at}+{r}");
+                assert_eq!(y[r], ds.y[at + r]);
+                assert_eq!(t[r], ds.t[at + r]);
+            }
+            at += x.rows();
+        }
+        assert_eq!(at, 37);
+    }
+
+    #[test]
+    fn csv_chunks_rejects_malformed_input() {
+        let bad_header = tmp("badheader.csv");
+        std::fs::write(&bad_header, "a,b,c\n1,2,3\n").unwrap();
+        assert!(csv_chunks(&bad_header, 8).is_err());
+        let bad_row = tmp("badrow.csv");
+        std::fs::write(&bad_row, "x0,t,y\n1.0,0.0\n").unwrap();
+        let mut r = csv_chunks(&bad_row, 8).unwrap();
+        assert!(r.next_chunk().is_err(), "short row must error");
+        let bad_num = tmp("badnum.csv");
+        std::fs::write(&bad_num, "x0,t,y\nfoo,0.0,1.0\n").unwrap();
+        let mut r = csv_chunks(&bad_num, 8).unwrap();
+        assert!(r.next_chunk().is_err(), "non-numeric cell must error");
+        assert!(csv_chunks(&bad_num, 0).is_err(), "chunk=0 must error");
     }
 
     #[test]

@@ -1,12 +1,17 @@
-//! Datasets: dense matrices, synthetic generators, folds, and sharding.
+//! Datasets: dense matrices, synthetic generators, folds, sharding, and
+//! the object-store-resident dataset plane (`dataset` + `pipeline`).
 
 pub mod matrix;
 pub mod synth;
 pub mod folds;
 pub mod partition;
 pub mod io;
+pub mod dataset;
+pub mod pipeline;
 
 pub use matrix::Matrix;
 pub use synth::{CausalDataset, SynthConfig};
 pub use folds::FoldPlan;
 pub use partition::{BlockPlan, RowBlock};
+pub use dataset::{DatasetStats, IngestOpts, IngestReport, ShardedDataset};
+pub use pipeline::Pipeline;

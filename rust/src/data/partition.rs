@@ -7,6 +7,7 @@
 //! contract tests in python/tests/test_model.py and rust linalg tests).
 
 use crate::data::matrix::Matrix;
+use crate::error::{NexusError, Result};
 
 /// One padded row block plus its validity mask.
 #[derive(Clone, Debug)]
@@ -34,8 +35,18 @@ pub struct BlockPlan {
 }
 
 impl BlockPlan {
-    pub fn new(n_rows: usize, block: usize, d: usize) -> BlockPlan {
-        BlockPlan { block, d, n_blocks: n_rows.div_ceil(block) }
+    /// Plan `n_rows` into `block`-row blocks.  `block > n_rows` is valid
+    /// (one padded block); empty inputs and zero-sized blocks are clean
+    /// errors rather than a divide-by-zero or a zero-block plan that
+    /// downstream code would misread as "no work".
+    pub fn new(n_rows: usize, block: usize, d: usize) -> Result<BlockPlan> {
+        if n_rows == 0 {
+            return Err(NexusError::Data("BlockPlan: n_rows must be positive".into()));
+        }
+        if block == 0 {
+            return Err(NexusError::Data("BlockPlan: block size must be positive".into()));
+        }
+        Ok(BlockPlan { block, d, n_blocks: n_rows.div_ceil(block) })
     }
 }
 
@@ -77,16 +88,25 @@ pub fn make_blocks(
 
 /// Pick the smallest shipped block size whose block count stays reasonable,
 /// preferring larger blocks for larger inputs (fewer tasks, better FLOP
-/// amortization).  `shipped` must be sorted ascending.
-pub fn pick_block_size(n_rows: usize, shipped: &[usize]) -> usize {
-    assert!(!shipped.is_empty());
+/// amortization).  `shipped` must be sorted ascending; an empty catalog
+/// or an empty input is a clean error (the old panic-or-garbage paths).
+pub fn pick_block_size(n_rows: usize, shipped: &[usize]) -> Result<usize> {
+    if n_rows == 0 {
+        return Err(NexusError::Data("pick_block_size: n_rows must be positive".into()));
+    }
+    if shipped.is_empty() {
+        return Err(NexusError::Data("pick_block_size: no shipped block sizes".into()));
+    }
+    if shipped.contains(&0) {
+        return Err(NexusError::Data("pick_block_size: shipped sizes must be positive".into()));
+    }
     for &b in shipped {
         // aim for at least ~4 blocks per fold so distribution has grain
         if n_rows <= b * 8 {
-            return b;
+            return Ok(b);
         }
     }
-    *shipped.last().unwrap()
+    Ok(*shipped.last().unwrap())
 }
 
 #[cfg(test)]
@@ -141,16 +161,34 @@ mod tests {
     #[test]
     fn pick_block_prefers_grain() {
         let shipped = [256, 4096];
-        assert_eq!(pick_block_size(1000, &shipped), 256);
-        assert_eq!(pick_block_size(3000, &shipped), 4096); // > 256*8
-        assert_eq!(pick_block_size(1_000_000, &shipped), 4096);
+        assert_eq!(pick_block_size(1000, &shipped).unwrap(), 256);
+        assert_eq!(pick_block_size(3000, &shipped).unwrap(), 4096); // > 256*8
+        assert_eq!(pick_block_size(1_000_000, &shipped).unwrap(), 4096);
+    }
+
+    #[test]
+    fn pick_block_edge_cases_are_clean_errors() {
+        assert!(pick_block_size(0, &[256]).is_err(), "n_rows=0 must not pick");
+        assert!(pick_block_size(100, &[]).is_err(), "empty catalog must error");
+        assert!(pick_block_size(100, &[0, 256]).is_err(), "zero shipped size");
+        // block larger than n_rows is a VALID pick (one padded block)
+        assert_eq!(pick_block_size(10, &[256, 4096]).unwrap(), 256);
     }
 
     #[test]
     fn plan_counts() {
-        let p = BlockPlan::new(1000, 256, 64);
+        let p = BlockPlan::new(1000, 256, 64).unwrap();
         assert_eq!(p.n_blocks, 4);
-        assert_eq!(BlockPlan::new(1024, 256, 64).n_blocks, 4);
-        assert_eq!(BlockPlan::new(1025, 256, 64).n_blocks, 5);
+        assert_eq!(BlockPlan::new(1024, 256, 64).unwrap().n_blocks, 4);
+        assert_eq!(BlockPlan::new(1025, 256, 64).unwrap().n_blocks, 5);
+    }
+
+    #[test]
+    fn plan_edge_cases_are_clean_errors() {
+        assert!(BlockPlan::new(0, 256, 64).is_err(), "n_rows=0 must error");
+        assert!(BlockPlan::new(100, 0, 64).is_err(), "block=0 must error");
+        // block > n_rows: one padded block, not an error
+        let p = BlockPlan::new(10, 256, 64).unwrap();
+        assert_eq!(p.n_blocks, 1);
     }
 }

@@ -1,0 +1,325 @@
+//! Lazy transform pipelines over a [`ShardedDataset`].
+//!
+//! A [`Pipeline`] records an op chain (`map_blocks` → `filter_rows` →
+//! `repartition` → …) without running anything; [`Pipeline::execute`]
+//! lowers the chain onto the [`RayContext`] task graph — one task per
+//! block per op, blocks flowing store-to-store — so the inline /
+//! thread-pool / simulated executors all run the same plan and lineage
+//! reconstruction covers transformed blocks exactly like model tasks.
+//!
+//! Op semantics:
+//!
+//! * `map_blocks` — value transform that must preserve row membership
+//!   (the task wrapper enforces it; changing membership is what
+//!   `filter_rows` / `repartition` are for).
+//! * `filter_rows` — per-block predicate over `(x_row, y, t)`; survivors
+//!   are compacted in place, empty blocks are dropped.  Row ids keep
+//!   their original values, so a `repartition` is required before ops
+//!   that need dense ids (fold splits).
+//! * `repartition` — gathers all rows into fresh `block`-row blocks and
+//!   renumbers them densely `0..n` (a fresh partition of the row set).
+//!
+//! Terminal ops ([`Pipeline::stats`], [`Pipeline::split_by_fold`])
+//! execute the chain, then run the corresponding one-pass reduction.
+
+use std::sync::Arc;
+
+use crate::data::dataset::{DatasetStats, ShardedDataset};
+use crate::data::folds::FoldPlan;
+use crate::data::matrix::Matrix;
+use crate::data::partition::RowBlock;
+use crate::error::{NexusError, Result};
+use crate::raylet::api::RayContext;
+use crate::raylet::payload::Payload;
+use crate::raylet::task::{ObjectRef, TaskFn};
+
+/// Per-block value transform (must preserve row membership and shape).
+pub type BlockMapFn = Arc<dyn Fn(&RowBlock) -> Result<RowBlock> + Send + Sync>;
+
+/// Row predicate over `(x_row, y, t)`; `true` keeps the row.
+pub type RowPred = Arc<dyn Fn(&[f32], f32, f32) -> bool + Send + Sync>;
+
+enum Op {
+    MapBlocks { label: String, f: BlockMapFn },
+    FilterRows { label: String, pred: RowPred },
+    Repartition { block: usize },
+}
+
+/// A lazy op chain rooted at a [`ShardedDataset`].
+pub struct Pipeline {
+    src: ShardedDataset,
+    ops: Vec<Op>,
+}
+
+impl Pipeline {
+    pub fn new(src: ShardedDataset) -> Pipeline {
+        Pipeline { src, ops: Vec::new() }
+    }
+
+    /// Append a per-block value transform.
+    pub fn map_blocks(mut self, label: &str, f: BlockMapFn) -> Pipeline {
+        self.ops.push(Op::MapBlocks { label: label.to_string(), f });
+        self
+    }
+
+    /// Append a row filter.
+    pub fn filter_rows(mut self, label: &str, pred: RowPred) -> Pipeline {
+        self.ops.push(Op::FilterRows { label: label.to_string(), pred });
+        self
+    }
+
+    /// Append a dense re-blocking of the surviving rows.
+    pub fn repartition(mut self, block: usize) -> Pipeline {
+        self.ops.push(Op::Repartition { block });
+        self
+    }
+
+    /// Lower the chain onto the context's task graph and return the
+    /// resulting dataset (blocks are task outputs: reconstructable).
+    pub fn execute(self, ctx: &RayContext) -> Result<ShardedDataset> {
+        let mut cur = self.src;
+        for op in self.ops {
+            cur = match op {
+                Op::MapBlocks { label, f } => apply_map(ctx, cur, &label, f)?,
+                Op::FilterRows { label, pred } => apply_filter(ctx, cur, &label, pred)?,
+                Op::Repartition { block } => apply_repartition(ctx, cur, block)?,
+            };
+        }
+        Ok(cur)
+    }
+
+    /// Execute, then run the distributed summary pass.
+    pub fn stats(self, ctx: &RayContext) -> Result<DatasetStats> {
+        self.execute(ctx)?.stats(ctx)
+    }
+
+    /// Execute, then split into per-fold eval block sets.
+    pub fn split_by_fold(
+        self,
+        ctx: &RayContext,
+        plan: &FoldPlan,
+        block: usize,
+        gather_cost: f64,
+    ) -> Result<(Vec<Vec<ObjectRef>>, Vec<Vec<Vec<usize>>>)> {
+        self.execute(ctx)?.split_by_fold(ctx, plan, block, gather_cost)
+    }
+}
+
+fn block_bytes(b: usize, d: usize) -> usize {
+    4 * (b * d + 3 * b)
+}
+
+fn apply_map(
+    ctx: &RayContext,
+    sds: ShardedDataset,
+    label: &str,
+    f: BlockMapFn,
+) -> Result<ShardedDataset> {
+    let d = sds.d;
+    let mut blocks = Vec::with_capacity(sds.blocks.len());
+    for r in &sds.blocks {
+        let f2 = f.clone();
+        let task: TaskFn = Arc::new(move |args: &[&Payload]| {
+            let src = args[0].as_block()?;
+            let out = f2(src)?;
+            if out.rows != src.rows || out.valid != src.valid || out.mask != src.mask {
+                return Err(NexusError::Data(
+                    "map_blocks must preserve row membership (use filter_rows / repartition)"
+                        .into(),
+                ));
+            }
+            if out.x.rows() != src.x.rows() || out.x.cols() != src.x.cols() {
+                return Err(NexusError::Data("map_blocks must preserve block shape".into()));
+            }
+            Ok(Payload::Block(out))
+        });
+        blocks.push(ctx.submit_sized(label, vec![*r], 0.0, block_bytes(sds.block, d), task));
+    }
+    Ok(ShardedDataset { blocks, ..sds })
+}
+
+fn apply_filter(
+    ctx: &RayContext,
+    sds: ShardedDataset,
+    label: &str,
+    pred: RowPred,
+) -> Result<ShardedDataset> {
+    let d = sds.d;
+    let mut out_refs = Vec::with_capacity(sds.blocks.len());
+    for r in &sds.blocks {
+        let p2 = pred.clone();
+        let task: TaskFn = Arc::new(move |args: &[&Payload]| {
+            let src = args[0].as_block()?;
+            let (b, d) = (src.x.rows(), src.x.cols());
+            let mut bx = Matrix::zeros(b, d);
+            let mut by = vec![0.0f32; b];
+            let mut bt = vec![0.0f32; b];
+            let mut mask = vec![0.0f32; b];
+            let mut rows = Vec::new();
+            let mut w = 0usize;
+            for slot in 0..src.valid {
+                if p2(src.x.row(slot), src.y[slot], src.t[slot]) {
+                    bx.row_mut(w).copy_from_slice(src.x.row(slot));
+                    by[w] = src.y[slot];
+                    bt[w] = src.t[slot];
+                    mask[w] = 1.0;
+                    rows.push(src.rows[slot]);
+                    w += 1;
+                }
+            }
+            Ok(Payload::Block(RowBlock { x: bx, y: by, t: bt, mask, valid: w, rows }))
+        });
+        out_refs.push(ctx.submit_sized(label, vec![*r], 0.0, block_bytes(sds.block, d), task));
+    }
+    // survivors are only known post-execution: refresh the driver meta
+    // one block at a time (O(n) row ids) and drop emptied blocks
+    let mut blocks = Vec::new();
+    let mut meta = Vec::new();
+    let mut n_rows = 0usize;
+    for r in out_refs {
+        let p = ctx.get(&r)?;
+        let rows = p.as_block()?.rows.clone();
+        if rows.is_empty() {
+            continue;
+        }
+        n_rows += rows.len();
+        blocks.push(r);
+        meta.push(rows);
+    }
+    if n_rows == 0 {
+        return Err(NexusError::Data(format!("{label}: filter removed every row")));
+    }
+    Ok(ShardedDataset { blocks, meta, n_rows, d, block: sds.block, padded: sds.padded })
+}
+
+fn apply_repartition(
+    ctx: &RayContext,
+    sds: ShardedDataset,
+    block: usize,
+) -> Result<ShardedDataset> {
+    let all_rows: Vec<usize> = sds.meta.iter().flat_map(|rows| rows.iter().copied()).collect();
+    let new_ids: Vec<usize> = (0..all_rows.len()).collect();
+    let (blocks, meta) =
+        sds.gather(ctx, &all_rows, Some(&new_ids), block, "shard:repartition", 0.0)?;
+    Ok(ShardedDataset {
+        blocks,
+        meta,
+        n_rows: all_rows.len(),
+        d: sds.d,
+        block,
+        padded: sds.padded,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::IngestOpts;
+    use crate::data::synth::{generate, SynthConfig};
+
+    fn ingest(ctx: &RayContext, n: usize) -> ShardedDataset {
+        let cfg = SynthConfig { n, d: 3, seed: 5, ..Default::default() };
+        ShardedDataset::ingest_synth(ctx, &cfg, 8, &IngestOpts { chunk: 64, block: 32 })
+            .unwrap()
+            .0
+    }
+
+    #[test]
+    fn map_blocks_transforms_values_in_place() {
+        let ctx = RayContext::inline();
+        let sds = ingest(&ctx, 100);
+        let before = sds.stats(&ctx).unwrap();
+        let out = Pipeline::new(sds)
+            .map_blocks(
+                "double-y",
+                Arc::new(|b: &RowBlock| {
+                    let mut out = b.clone();
+                    for (v, &m) in out.y.iter_mut().zip(&b.mask) {
+                        *v *= 2.0 * m;
+                    }
+                    Ok(out)
+                }),
+            )
+            .execute(&ctx)
+            .unwrap();
+        let after = out.stats(&ctx).unwrap();
+        assert_eq!(out.n_rows, 100);
+        assert!((after.y_mean - 2.0 * before.y_mean).abs() < 1e-4);
+        assert_eq!(after.treated_share, before.treated_share);
+    }
+
+    #[test]
+    fn map_blocks_rejects_membership_changes() {
+        let ctx = RayContext::inline();
+        let sds = ingest(&ctx, 64);
+        let out = Pipeline::new(sds)
+            .map_blocks(
+                "bad",
+                Arc::new(|b: &RowBlock| {
+                    let mut out = b.clone();
+                    out.rows.pop();
+                    out.valid -= 1;
+                    Ok(out)
+                }),
+            )
+            .execute(&ctx)
+            .unwrap();
+        assert!(ctx.get(&out.blocks[0]).is_err(), "wrapper must reject membership edits");
+    }
+
+    #[test]
+    fn filter_then_repartition_partitions_survivors() {
+        let ctx = RayContext::threads(3);
+        let cfg = SynthConfig { n: 200, d: 3, seed: 9, ..Default::default() };
+        let ds = generate(&cfg);
+        let sds = ShardedDataset::from_materialized(&ctx, &ds, 8, 32).unwrap();
+        let treated = ds.t.iter().filter(|&&t| t > 0.5).count();
+        let out = Pipeline::new(sds)
+            .filter_rows("treated-only", Arc::new(|_x, _y, t| t > 0.5))
+            .repartition(16)
+            .execute(&ctx)
+            .unwrap();
+        assert_eq!(out.n_rows, treated);
+        // dense ids after repartition: fold split works again
+        let plan = FoldPlan::random(treated, 2, 3).unwrap();
+        let (refs, _) = out.split_by_fold(&ctx, &plan, 16, 0.0).unwrap();
+        let mut seen: Vec<usize> = Vec::new();
+        for fold in &refs {
+            for r in fold {
+                let p = ctx.get(r).unwrap();
+                seen.extend(&p.as_block().unwrap().rows);
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..treated).collect::<Vec<_>>());
+        // and every surviving row is treated
+        let t = out.collect_t(&ctx).unwrap();
+        assert!(t.iter().all(|&v| v > 0.5));
+    }
+
+    #[test]
+    fn filter_removing_everything_is_an_error() {
+        let ctx = RayContext::inline();
+        let sds = ingest(&ctx, 64);
+        let res = Pipeline::new(sds)
+            .filter_rows("nothing", Arc::new(|_x, _y, _t| false))
+            .execute(&ctx);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn lazy_chain_defers_until_execute() {
+        let ctx = RayContext::sim(crate::config::ClusterConfig::default(), true);
+        let sds = ingest(&ctx, 100);
+        let tasks_before = ctx.metrics().tasks_run;
+        let pipe = Pipeline::new(sds)
+            .map_blocks("noop", Arc::new(|b: &RowBlock| Ok(b.clone())))
+            .repartition(16);
+        // building the chain submits nothing
+        assert_eq!(ctx.metrics().tasks_run, tasks_before);
+        let out = pipe.execute(&ctx).unwrap();
+        ctx.drain().unwrap();
+        assert!(ctx.metrics().tasks_run > tasks_before);
+        assert_eq!(out.n_rows, 100);
+    }
+}

@@ -88,13 +88,11 @@ impl CausalDataset {
     }
 }
 
-/// Generate a dataset from the config (deterministic in `seed`).
-pub fn generate(cfg: &SynthConfig) -> CausalDataset {
-    assert!(cfg.n_confounders <= cfg.d, "more confounders than covariates");
-    let mut rng = Pcg32::with_stream(cfg.seed, 0xDA7A);
-
-    // Outcome weights: x0 gets weight 1 (the paper's listing), the rest
-    // decay so high-d problems stay well-posed.
+/// Outcome/propensity weights of the DGP (deterministic in the config).
+///
+/// Outcome weights: x0 gets weight 1 (the paper's listing), the rest
+/// decay so high-d problems stay well-posed.
+fn dgp_weights(cfg: &SynthConfig) -> (Vec<f32>, Vec<f32>) {
     let w_y: Vec<f32> = (0..cfg.d)
         .map(|j| {
             if j == 0 {
@@ -113,20 +111,48 @@ pub fn generate(cfg: &SynthConfig) -> CausalDataset {
             }
         })
         .collect();
+    (w_y, w_t)
+}
 
-    let x = Matrix::from_fn(cfg.n, cfg.d, |_, _| rng.normal_f32());
-    let mut t = Vec::with_capacity(cfg.n);
-    let mut y = Vec::with_capacity(cfg.n);
-    let mut true_cate = Vec::with_capacity(cfg.n);
-    let mut true_prop = Vec::with_capacity(cfg.n);
+/// Stream-id base for per-row generators (see [`generate_range`]).
+const ROW_STREAM: u64 = 0xDA7A_0000;
 
-    for i in 0..cfg.n {
-        let xi = x.row(i);
+/// Generate a dataset from the config (deterministic in `seed`).
+pub fn generate(cfg: &SynthConfig) -> CausalDataset {
+    generate_range(cfg, 0, cfg.n)
+}
+
+/// Generate rows `[start, end)` of the dataset — bit-identical to the
+/// same rows of a full [`generate`]: every row draws from its own PCG
+/// stream derived from `(seed, row)`, so chunked streaming ingest
+/// reproduces the materialized dataset exactly regardless of chunk size.
+///
+/// The returned dataset holds `end - start` rows; `config` keeps the
+/// full-run `n` so chunk provenance stays visible.
+pub fn generate_range(cfg: &SynthConfig, start: usize, end: usize) -> CausalDataset {
+    assert!(cfg.n_confounders <= cfg.d, "more confounders than covariates");
+    assert!(start <= end && end <= cfg.n, "range [{start}, {end}) outside 0..{}", cfg.n);
+    let (w_y, w_t) = dgp_weights(cfg);
+
+    let rows = end - start;
+    let mut x = Matrix::zeros(rows, cfg.d);
+    let mut t = Vec::with_capacity(rows);
+    let mut y = Vec::with_capacity(rows);
+    let mut true_cate = Vec::with_capacity(rows);
+    let mut true_prop = Vec::with_capacity(rows);
+
+    for i in start..end {
+        let mut rng = Pcg32::with_stream(cfg.seed, ROW_STREAM + i as u64);
+        let r = i - start;
+        for j in 0..cfg.d {
+            x.set(r, j, rng.normal_f32());
+        }
+        let xi = x.row(r);
         let eta: f32 = xi.iter().zip(&w_t).map(|(a, b)| a * b).sum();
         let p = sigmoid(eta);
-        let ti = if rng.bernoulli(p as f64) { 1.0f32 } else { 0.0 };
         let tau = cfg.effect_base + cfg.effect_het * xi[0];
         let base: f32 = xi.iter().zip(&w_y).map(|(a, b)| a * b).sum();
+        let ti = if rng.bernoulli(p as f64) { 1.0f32 } else { 0.0 };
         let yi = tau * ti + base + cfg.noise * rng.normal_f32();
         t.push(ti);
         y.push(yi);
@@ -160,6 +186,30 @@ mod tests {
         assert_eq!(a.y, b.y);
         let c = generate(&SynthConfig { seed: 999, ..cfg });
         assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn chunked_generation_matches_full() {
+        // the load-bearing property of streaming ingest: any chunking of
+        // generate_range concatenates to exactly the full dataset.
+        let cfg = SynthConfig { n: 257, d: 5, ..Default::default() };
+        let full = generate(&cfg);
+        for chunk in [1usize, 64, 100, 257, 300] {
+            let mut at = 0;
+            while at < cfg.n {
+                let end = (at + chunk).min(cfg.n);
+                let part = generate_range(&cfg, at, end);
+                assert_eq!(part.n(), end - at);
+                for r in 0..part.n() {
+                    assert_eq!(part.x.row(r), full.x.row(at + r), "chunk={chunk} row={r}");
+                    assert_eq!(part.y[r], full.y[at + r]);
+                    assert_eq!(part.t[r], full.t[at + r]);
+                    assert_eq!(part.true_cate[r], full.true_cate[at + r]);
+                    assert_eq!(part.true_propensity[r], full.true_propensity[at + r]);
+                }
+                at = end;
+            }
+        }
     }
 
     #[test]

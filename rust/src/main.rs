@@ -50,6 +50,7 @@ fn run() -> Result<()> {
                  usage: nexus <fit|tune|serve|simulate|info> [--key value ...]\n\
                  examples:\n\
                  \x20 nexus fit --n 20000 --d 50 --cv 5 --exec ray --workers 4\n\
+                 \x20 nexus fit --n 200000 --d 50 --sharded --ingest-chunk 16384 --exec ray\n\
                  \x20 nexus tune --trials 16 --strategy sha\n\
                  \x20 nexus simulate --n 1000000 --d 500 --nodes 5\n\
                  \x20 nexus serve --replicas 4 --policy p2c --rate 2000\n\
@@ -81,6 +82,11 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     }
     cfg.cluster.nodes = args.usize_or("nodes", cfg.cluster.nodes)?;
     cfg.cluster.slots_per_node = args.usize_or("slots", cfg.cluster.slots_per_node)?;
+    cfg.ingest_chunk = args.usize_or("ingest-chunk", cfg.ingest_chunk)?;
+    cfg.shard_block = args.usize_or("shard-blocks", cfg.shard_block)?;
+    if args.flag("sharded") {
+        cfg.sharded = true;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -88,9 +94,17 @@ fn run_config(args: &Args) -> Result<RunConfig> {
 fn cmd_fit(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
     println!(
-        "fit: n={} d={} cv={} exec={} backend={}",
-        cfg.n, cfg.d, cfg.cv, cfg.exec.name(), cfg.backend
+        "fit: n={} d={} cv={} exec={} backend={}{}",
+        cfg.n,
+        cfg.d,
+        cfg.cv,
+        cfg.exec.name(),
+        cfg.backend,
+        if cfg.sharded { " ingest=sharded" } else { "" }
     );
+    if cfg.sharded {
+        return cmd_fit_sharded(args, &cfg);
+    }
     let ds = generate(&SynthConfig {
         n: cfg.n,
         d: cfg.d,
@@ -122,6 +136,57 @@ fn cmd_fit(args: &Args) -> Result<()> {
             .set("tasks", fit.metrics.tasks_run as i64)
             .set("spills", fit.metrics.spills as i64)
             .set("peak_store_bytes", fit.metrics.peak_store_bytes as i64)
+            .set("wall_secs", wall);
+        println!("{}", j.to_string());
+    }
+    Ok(())
+}
+
+/// `nexus fit --sharded`: the dataset never materializes on the driver —
+/// chunked synth generation streams straight into the object store and
+/// the whole estimate runs over resident blocks.
+fn cmd_fit_sharded(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let start = std::time::Instant::now();
+    let (fit, report) = dml::fit_streaming(cfg)?;
+    let wall = start.elapsed().as_secs_f64();
+    println!("theta = {:?}", fit.theta);
+    println!(
+        "ATE = {:.4} ± {:.4}  (95% CI [{:.4}, {:.4}])   truth = {:.4}",
+        fit.ate.value,
+        fit.ate.se,
+        fit.ate.ci_lo,
+        fit.ate.ci_hi,
+        report.true_ate.unwrap_or(f64::NAN)
+    );
+    let materialized = 4 * cfg.n * (cfg.d + report.d_pad + 4);
+    println!(
+        "ingest: {} blocks x {} rows (chunk {}) | driver peak {} B vs {} B materialized ({:.1}x)",
+        report.blocks,
+        cfg.shard_block,
+        report.chunk_rows,
+        report.driver_peak_bytes,
+        materialized,
+        materialized as f64 / report.driver_peak_bytes.max(1) as f64
+    );
+    let m = &fit.metrics;
+    println!(
+        "tasks={} retries={} wall={:.2}s makespan={:.2}s busy={:.2}s",
+        m.tasks_run, m.retries, wall, m.makespan, m.busy_secs
+    );
+    println!(
+        "store: peak={} B spills={} reconstructions={}",
+        m.peak_store_bytes, m.spills, m.reconstructions
+    );
+    if args.flag("json") {
+        let j = nexus::util::json::Json::obj()
+            .set("ate", fit.ate.value)
+            .set("se", fit.ate.se)
+            .set("true_ate", report.true_ate.unwrap_or(f64::NAN))
+            .set("tasks", fit.metrics.tasks_run as i64)
+            .set("spills", fit.metrics.spills as i64)
+            .set("peak_store_bytes", fit.metrics.peak_store_bytes as i64)
+            .set("driver_peak_bytes", report.driver_peak_bytes as i64)
+            .set("ingest_blocks", report.blocks as i64)
             .set("wall_secs", wall);
         println!("{}", j.to_string());
     }

@@ -19,9 +19,8 @@
 
 use std::sync::Arc;
 
+use crate::data::dataset::ShardedDataset;
 use crate::data::folds::FoldPlan;
-use crate::data::matrix::Matrix;
-use crate::data::partition::make_blocks;
 use crate::data::synth::CausalDataset;
 use crate::error::{NexusError, Result};
 use crate::models::cost::CostModel;
@@ -127,19 +126,14 @@ fn block_bytes(b: usize, d: usize) -> usize {
 }
 
 /// Pad raw covariates with an intercept column and zero columns up to
-/// `d_pad`.
-pub fn pad_covariates(x: &Matrix, d_pad: usize) -> Result<Matrix> {
-    let with_icpt = x.with_intercept();
-    if with_icpt.cols() > d_pad {
-        return Err(NexusError::Data(format!(
-            "d+1={} exceeds padded width {d_pad}",
-            with_icpt.cols()
-        )));
-    }
-    Ok(with_icpt.pad_cols(d_pad))
-}
+/// `d_pad` (re-exported from the dataset plane, its canonical home).
+pub use crate::data::dataset::pad_covariates;
 
-/// Build + submit the full cross-fitting DAG over real data.
+/// Build + submit the full cross-fitting DAG over a driver-resident
+/// dataset.  This is now a thin adapter: the data is pushed through
+/// [`ShardedDataset::from_materialized`] and [`run_sharded`], so every
+/// caller — including the Fig 6 comparison — exercises the same
+/// object-store-resident plane as streaming ingest.
 pub fn run(
     ctx: &RayContext,
     kx: Arc<dyn KernelExec>,
@@ -147,29 +141,51 @@ pub fn run(
     ds: &CausalDataset,
     cfg: &CrossfitConfig,
 ) -> Result<CrossfitOutput> {
-    let n = ds.n();
+    let sds = ShardedDataset::from_materialized(ctx, ds, cfg.d_pad, cfg.block)?;
+    run_sharded(ctx, kx, cost, &sds, cfg)
+}
+
+/// Cross-fitting over object-store-resident blocks.  The fold split is
+/// itself a task-graph op ([`ShardedDataset::split_by_fold`]) producing
+/// blocks bit-identical to the driver-side blocking, so sharded and
+/// materialized estimates agree exactly; only the treatment column
+/// (O(n) f32, for stratification) ever lands on the driver.
+pub fn run_sharded(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    cost: &CostModel,
+    sds: &ShardedDataset,
+    cfg: &CrossfitConfig,
+) -> Result<CrossfitOutput> {
+    if sds.d != cfg.d_pad {
+        return Err(NexusError::Config(format!(
+            "sharded width {} != configured d_pad {}",
+            sds.d, cfg.d_pad
+        )));
+    }
+    if !sds.padded {
+        return Err(NexusError::Data(
+            "crossfit needs a padded sharded dataset (intercept column)".into(),
+        ));
+    }
+    let n = sds.n_rows;
     let fold_plan = if cfg.stratified {
-        FoldPlan::stratified(&ds.t, cfg.cv, cfg.seed)?
+        // only stratification needs the treatment column on the driver
+        let t = sds.collect_t(ctx)?;
+        FoldPlan::stratified(&t, cfg.cv, cfg.seed)?
     } else {
         FoldPlan::random(n, cfg.cv, cfg.seed)?
     };
-    let x_pad = pad_covariates(&ds.x, cfg.d_pad)?;
-
-    // put blocks fold by fold
-    let mut block_refs: Vec<Vec<ObjectRef>> = Vec::with_capacity(cfg.cv);
-    let mut block_meta: Vec<Vec<BlockMeta>> = Vec::with_capacity(cfg.cv);
-    for f in 0..cfg.cv as u32 {
-        let rows = fold_plan.fold_rows(f);
-        let blocks = make_blocks(&x_pad, &ds.y, &ds.t, &rows, cfg.block);
-        let mut refs = Vec::with_capacity(blocks.len());
-        let mut metas = Vec::with_capacity(blocks.len());
-        for blk in &blocks {
-            refs.push(ctx.put(distops::block_payload(blk)));
-            metas.push(BlockMeta { rows: blk.rows.clone() });
-        }
-        block_refs.push(refs);
-        block_meta.push(metas);
-    }
+    let (block_refs, fold_rows) = sds.split_by_fold(
+        ctx,
+        &fold_plan,
+        cfg.block,
+        cost.residual(cfg.block, cfg.d_pad),
+    )?;
+    let block_meta: Vec<Vec<BlockMeta>> = fold_rows
+        .into_iter()
+        .map(|metas| metas.into_iter().map(|rows| BlockMeta { rows }).collect())
+        .collect();
 
     let out = submit_graph(ctx, Some(kx), cost, cfg, fold_plan, block_refs, block_meta)?;
     collect(ctx, out, n)
@@ -429,6 +445,8 @@ fn collect(ctx: &RayContext, mut out: CrossfitOutput, n: usize) -> Result<Crossf
 mod tests {
     use super::*;
     use crate::config::ClusterConfig;
+    use crate::data::dataset::IngestOpts;
+    use crate::data::matrix::Matrix;
     use crate::data::synth::{generate, SynthConfig};
     use crate::runtime::backend::HostBackend;
 
@@ -479,6 +497,35 @@ mod tests {
         assert_eq!(a.y_res, c.y_res, "sim != inline");
         assert_eq!(a.t_res, b.t_res);
         assert_eq!(a.beta_y, b.beta_y);
+    }
+
+    #[test]
+    fn streaming_ingest_matches_materialized_bit_for_bit() {
+        // the acceptance invariant of the sharded plane: chunked synth
+        // ingest and driver-side materialization feed the crossfit DAG
+        // identical blocks, so every output matches exactly.
+        let cfg = small_cfg();
+        let scfg = SynthConfig { n: 900, d: 6, ..Default::default() };
+        let ds = generate(&scfg);
+        let cost = CostModel::default();
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        let ctx_a = RayContext::inline();
+        let a = run(&ctx_a, kx.clone(), &cost, &ds, &cfg).unwrap();
+        let ctx_b = RayContext::inline();
+        let (sds, report) = crate::data::dataset::ShardedDataset::ingest_synth(
+            &ctx_b,
+            &scfg,
+            cfg.d_pad,
+            &IngestOpts { chunk: 200, block: 64 },
+        )
+        .unwrap();
+        let b = run_sharded(&ctx_b, kx, &cost, &sds, &cfg).unwrap();
+        assert_eq!(a.y_res, b.y_res, "streaming ingest bent the residuals");
+        assert_eq!(a.t_res, b.t_res);
+        assert_eq!(a.beta_y, b.beta_y);
+        assert_eq!(a.beta_t, b.beta_t);
+        // driver peak is bounded by the chunk, not the table
+        assert!(report.driver_peak_bytes < 4 * 900 * (6 + 8 + 4));
     }
 
     #[test]

@@ -1,0 +1,155 @@
+//! Property tests for the partition layer and the sharded dataset
+//! plane: for arbitrary shapes, blocking is a partition of the row set
+//! (every row exactly once, mask sums match, no all-padding blocks), and
+//! `split_by_fold` ∘ streaming ingest partitions the rows exactly.
+
+use nexus::data::dataset::{IngestOpts, ShardedDataset};
+use nexus::data::folds::FoldPlan;
+use nexus::data::matrix::Matrix;
+use nexus::data::partition::{make_blocks, pick_block_size, BlockPlan};
+use nexus::data::synth::{generate, SynthConfig};
+use nexus::raylet::api::RayContext;
+use nexus::util::prop::forall;
+
+#[test]
+fn prop_make_blocks_partitions_rows() {
+    forall("make_blocks is a partition", 60, |g| {
+        let n = g.len_up_to(300);
+        let d = g.usize_in(1..8);
+        let block = g.usize_in(1..64);
+        let x = Matrix::from_fn(n, d, |i, j| (i * d + j) as f32);
+        let y: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let t: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        // arbitrary subset of the rows, in order
+        let rows: Vec<usize> = (0..n).filter(|_| g.bool()).collect();
+        let blocks = make_blocks(&x, &y, &t, &rows, block);
+        assert_eq!(blocks.len(), rows.len().div_ceil(block));
+        let mut seen: Vec<usize> = Vec::new();
+        let mut mask_total = 0usize;
+        for b in &blocks {
+            assert!(b.valid > 0, "all-padding block emitted");
+            assert_eq!(b.rows.len(), b.valid);
+            assert_eq!(b.x.rows(), block, "blocks are padded to exactly `block` rows");
+            assert_eq!(b.x.cols(), d);
+            let msum: f32 = b.mask.iter().sum();
+            assert_eq!(msum as usize, b.valid, "mask sum != valid");
+            mask_total += msum as usize;
+            // padded tail must be inert
+            for r in b.valid..block {
+                assert_eq!(b.mask[r], 0.0);
+                assert_eq!(b.y[r], 0.0);
+                assert_eq!(b.t[r], 0.0);
+            }
+            seen.extend(&b.rows);
+        }
+        assert_eq!(mask_total, rows.len(), "mask sums must equal the row count");
+        seen.sort_unstable();
+        let mut want = rows.clone();
+        want.sort_unstable();
+        assert_eq!(seen, want, "every row exactly once");
+    });
+}
+
+#[test]
+fn prop_block_plan_agrees_with_make_blocks() {
+    forall("plan counts match materialized blocks", 40, |g| {
+        let n = g.len_up_to(500);
+        let block = g.usize_in(1..80);
+        let plan = BlockPlan::new(n, block, 4).unwrap();
+        let x = Matrix::zeros(n, 4);
+        let y = vec![0.0f32; n];
+        let t = vec![0.0f32; n];
+        let rows: Vec<usize> = (0..n).collect();
+        let blocks = make_blocks(&x, &y, &t, &rows, block);
+        assert_eq!(plan.n_blocks, blocks.len());
+    });
+}
+
+#[test]
+fn prop_split_by_fold_after_ingest_partitions_rows() {
+    forall("split_by_fold ∘ ingest is a partition", 15, |g| {
+        let n = g.usize_in(20..260);
+        let d = g.usize_in(1..5);
+        let block = g.usize_in(1..32);
+        let chunk = g.usize_in(1..80);
+        let cv = g.usize_in(2..5.min(n));
+        let fold_block = g.usize_in(1..48);
+        let seed = g.usize_in(0..10_000) as u64;
+
+        let cfg = SynthConfig { n, d, seed, ..Default::default() };
+        let ctx = RayContext::inline();
+        let d_pad = (d + 1).next_power_of_two().max(8);
+        let (sds, report) =
+            ShardedDataset::ingest_synth(&ctx, &cfg, d_pad, &IngestOpts { chunk, block })
+                .unwrap();
+        // ingest itself is a partition of 0..n
+        let mut ingested: Vec<usize> =
+            sds.meta.iter().flat_map(|rows| rows.iter().copied()).collect();
+        ingested.sort_unstable();
+        assert_eq!(ingested, (0..n).collect::<Vec<_>>(), "ingest partition broken");
+        assert_eq!(report.n_rows, n);
+
+        let plan = FoldPlan::random(n, cv, seed).unwrap();
+        let (refs, rows_meta) = sds.split_by_fold(&ctx, &plan, fold_block, 0.0).unwrap();
+        assert_eq!(refs.len(), cv);
+        let mut seen: Vec<usize> = Vec::new();
+        for (fold_refs, fold_rows) in refs.iter().zip(&rows_meta) {
+            for (r, meta_rows) in fold_refs.iter().zip(fold_rows) {
+                let p = ctx.get(r).unwrap();
+                let b = p.as_block().unwrap();
+                assert!(b.valid > 0, "all-padding fold block");
+                assert_eq!(&b.rows, meta_rows);
+                let msum: f32 = b.mask.iter().sum();
+                assert_eq!(msum as usize, b.valid);
+                seen.extend(&b.rows);
+            }
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>(), "fold split lost or duplicated rows");
+    });
+}
+
+#[test]
+fn prop_gathered_fold_blocks_match_source_values() {
+    forall("fold blocks carry source values", 10, |g| {
+        let n = g.usize_in(30..150);
+        let d = g.usize_in(1..4);
+        let seed = g.usize_in(0..10_000) as u64;
+        let cfg = SynthConfig { n, d, seed, ..Default::default() };
+        let ds = generate(&cfg);
+        let ctx = RayContext::inline();
+        let d_pad = (d + 1).next_power_of_two().max(8);
+        let (sds, _) = ShardedDataset::ingest_synth(
+            &ctx,
+            &cfg,
+            d_pad,
+            &IngestOpts { chunk: 40, block: 16 },
+        )
+        .unwrap();
+        let plan = FoldPlan::stratified(&ds.t, 3, seed).unwrap();
+        let (refs, _) = sds.split_by_fold(&ctx, &plan, 24, 0.0).unwrap();
+        for fold_refs in &refs {
+            for r in fold_refs {
+                let p = ctx.get(r).unwrap();
+                let b = p.as_block().unwrap();
+                for (slot, &row) in b.rows.iter().enumerate() {
+                    assert_eq!(b.y[slot], ds.y[row]);
+                    assert_eq!(b.t[slot], ds.t[row]);
+                    assert_eq!(b.x.get(slot, 0), 1.0, "intercept column");
+                    for j in 0..d {
+                        assert_eq!(b.x.get(slot, j + 1), ds.x.get(row, j));
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn partition_edge_cases_error_cleanly() {
+    assert!(BlockPlan::new(0, 16, 4).is_err());
+    assert!(BlockPlan::new(16, 0, 4).is_err());
+    assert_eq!(BlockPlan::new(5, 16, 4).unwrap().n_blocks, 1);
+    assert!(pick_block_size(0, &[256]).is_err());
+    assert!(pick_block_size(10, &[]).is_err());
+}

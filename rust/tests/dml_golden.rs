@@ -1,0 +1,122 @@
+//! Golden-value statistical regression for LinearDML: a fixed-seed
+//! synthetic fit must (a) recover the true ATE within its own reported
+//! CI, (b) match the snapshotted theta/SE to 1e-4, and (c) be
+//! bit-identical between the materialized and streaming-ingest paths —
+//! so future refactors can't silently bend the estimator.
+//!
+//! The snapshot lives in `tests/golden_lineardml.json`.  On first run
+//! (file absent) the test bootstraps it and asks for it to be
+//! committed; once committed, any drift beyond 1e-4 fails here.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use nexus::causal::dml;
+use nexus::data::dataset::{IngestOpts, ShardedDataset};
+use nexus::data::synth::{generate, SynthConfig};
+use nexus::models::cost::CostModel;
+use nexus::models::crossfit::CrossfitConfig;
+use nexus::raylet::api::RayContext;
+use nexus::runtime::backend::{HostBackend, KernelExec};
+use nexus::util::json::{self, Json};
+
+const GOLDEN_TOL: f64 = 1e-4;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden_lineardml.json")
+}
+
+fn fixture() -> (SynthConfig, CrossfitConfig) {
+    let scfg = SynthConfig { n: 6000, d: 6, seed: 20240131, ..Default::default() };
+    let ccfg = CrossfitConfig {
+        cv: 5,
+        lam_y: 1e-3,
+        lam_t: 1e-3,
+        irls_iters: 5,
+        block: 256,
+        d_pad: 8,
+        d_real: 6,
+        seed: 20240131,
+        stratified: true,
+        reuse_suffstats: false,
+    };
+    (scfg, ccfg)
+}
+
+#[test]
+fn golden_lineardml_estimates_are_pinned() {
+    let (scfg, ccfg) = fixture();
+    let ds = generate(&scfg);
+    let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+    let cost = CostModel::default();
+    let fit = dml::fit_with(&RayContext::inline(), kx, &cost, &ds, &ccfg, 1, 2).unwrap();
+
+    // analytic anchors: truth is ATE = 1 (y = (1 + .5 x0) T + ...)
+    assert!(fit.ate.contains(1.0), "CI [{}, {}] must cover truth", fit.ate.ci_lo, fit.ate.ci_hi);
+    assert!((fit.ate.value - 1.0).abs() < 0.1, "ate={}", fit.ate.value);
+    assert!((fit.theta[1] as f64 - 0.5).abs() < 0.15, "theta={:?}", fit.theta);
+    assert!(fit.ate.se > 0.0 && fit.ate.se < 0.2, "se={}", fit.ate.se);
+
+    let path = golden_path();
+    if !path.exists() {
+        // bootstrap: record the snapshot; commit it to arm the guard
+        let theta: Vec<Json> = fit.theta.iter().map(|&v| Json::Num(v as f64)).collect();
+        let j = Json::obj()
+            .set("fixture", "n=6000 d=6 seed=20240131 host-backend inline")
+            .set("theta", Json::Arr(theta))
+            .set("ate", fit.ate.value)
+            .set("se", fit.ate.se);
+        std::fs::write(&path, j.to_string()).unwrap();
+        eprintln!(
+            "golden_lineardml: bootstrapped {} — commit this file to pin the estimator",
+            path.display()
+        );
+        return;
+    }
+    let want = json::parse_file(&path).unwrap();
+    let theta_want = want.req("theta").unwrap().as_arr().unwrap();
+    assert_eq!(theta_want.len(), fit.theta.len(), "theta arity changed");
+    for (j, (got, want)) in fit.theta.iter().zip(theta_want).enumerate() {
+        let want = want.as_f64().unwrap();
+        assert!(
+            (*got as f64 - want).abs() < GOLDEN_TOL,
+            "theta[{j}] drifted: {got} vs golden {want}"
+        );
+    }
+    let ate_want = want.req("ate").unwrap().as_f64().unwrap();
+    let se_want = want.req("se").unwrap().as_f64().unwrap();
+    assert!(
+        (fit.ate.value - ate_want).abs() < GOLDEN_TOL,
+        "ATE drifted: {} vs {ate_want}",
+        fit.ate.value
+    );
+    assert!(
+        (fit.ate.se - se_want).abs() < GOLDEN_TOL,
+        "SE drifted: {} vs {se_want}",
+        fit.ate.se
+    );
+}
+
+#[test]
+fn golden_streaming_path_is_bit_identical() {
+    // the second half of the guard: whatever the numbers are, the
+    // streaming-ingest path must reproduce them exactly.
+    let (scfg, ccfg) = fixture();
+    let ds = generate(&scfg);
+    let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+    let cost = CostModel::default();
+    let mat = dml::fit_with(&RayContext::inline(), kx.clone(), &cost, &ds, &ccfg, 1, 2).unwrap();
+    let ctx = RayContext::inline();
+    let (sds, _) = ShardedDataset::ingest_synth(
+        &ctx,
+        &scfg,
+        ccfg.d_pad,
+        &IngestOpts { chunk: 1500, block: 256 },
+    )
+    .unwrap();
+    let st = dml::fit_sharded(&ctx, kx, &cost, &sds, &ccfg, 1, 2).unwrap();
+    assert_eq!(mat.theta, st.theta);
+    assert_eq!(mat.ate.value, st.ate.value);
+    assert_eq!(mat.ate.se, st.ate.se);
+    assert_eq!(mat.cov.data(), st.cov.data());
+}

@@ -9,7 +9,9 @@
 
 use std::sync::Arc;
 
+use nexus::causal::dml;
 use nexus::config::ClusterConfig;
+use nexus::data::dataset::{IngestOpts, ShardedDataset};
 use nexus::data::synth::{generate, SynthConfig};
 use nexus::models::cost::CostModel;
 use nexus::models::crossfit::{self, CrossfitConfig};
@@ -94,6 +96,72 @@ fn crossfit_parity_under_kills_and_drops() {
         let m = ctx.metrics();
         assert!(m.retries > 0, "{mode}: crash injection never fired");
         assert!(m.reconstructions >= cfg.cv as u64, "{mode}: no reconstructions");
+        assert_eq!(m.failed, 0, "{mode}: permanent failures");
+    }
+}
+
+/// The sharded-ingest pipeline path: streaming ingest + fold split +
+/// the full DML DAG must be bit-identical across inline / threads / sim
+/// with per-attempt kills active, and must survive explicit drops of
+/// fold blocks and residuals (both are task outputs now — the whole
+/// dataset plane is lineage-reconstructable).
+#[test]
+fn sharded_ingest_dml_parity_under_kills_and_drops() {
+    let scfg = SynthConfig { n: 600, d: 5, seed: 123, ..Default::default() };
+    let cfg = ccfg();
+    let cost = CostModel::default();
+    let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+
+    // clean baseline: the materialized adapter path, no faults
+    let ds = generate(&scfg);
+    let clean =
+        dml::fit_with(&RayContext::inline(), kx.clone(), &cost, &ds, &cfg, 1, 2).unwrap();
+
+    let opts = ExecOpts {
+        fault: FaultPlan::with_prob(0.2, 60, 99),
+        store_cap: None,
+    };
+    for ctx in contexts(&opts) {
+        let mode = ctx.mode();
+        let (sds, report) = ShardedDataset::ingest_synth(
+            &ctx,
+            &scfg,
+            cfg.d_pad,
+            &IngestOpts { chunk: 200, block: 64 },
+        )
+        .unwrap();
+        assert_eq!(report.n_rows, 600);
+        let fit = dml::fit_sharded(&ctx, kx.clone(), &cost, &sds, &cfg, 1, 2).unwrap();
+        assert_eq!(clean.theta, fit.theta, "{mode}: theta diverged under kills");
+        assert_eq!(clean.ate.value, fit.ate.value, "{mode}: ATE diverged");
+        assert_eq!(clean.crossfit.y_res, fit.crossfit.y_res, "{mode}: residuals diverged");
+
+        // drop a fold block AND a residual per fold; both reconstruct
+        // through lineage (fold blocks are gather-task outputs)
+        for k in 0..cfg.cv {
+            ctx.drop_object(&fit.crossfit.block_refs[k][0]).unwrap();
+            ctx.drop_object(&fit.crossfit.resid_refs[k][0]).unwrap();
+        }
+        for k in 0..cfg.cv {
+            let blk = ctx.get(&fit.crossfit.block_refs[k][0]).unwrap();
+            let b = blk.as_block().unwrap();
+            let meta = &fit.crossfit.block_meta[k][0];
+            assert_eq!(b.rows, meta.rows, "{mode}: fold block membership changed");
+            for (slot, &row) in b.rows.iter().enumerate() {
+                assert_eq!(b.y[slot], ds.y[row], "{mode}: fold block y diverged");
+            }
+            let r = ctx.get(&fit.crossfit.resid_refs[k][0]).unwrap();
+            let ts = r.as_tensors().unwrap();
+            for (slot, &row) in meta.rows.iter().enumerate() {
+                assert_eq!(
+                    ts[0].data[slot], clean.crossfit.y_res[row],
+                    "{mode}: residual diverged after drop+reconstruct"
+                );
+            }
+        }
+        let m = ctx.metrics();
+        assert!(m.retries > 0, "{mode}: crash injection never fired");
+        assert!(m.reconstructions >= 2 * cfg.cv as u64, "{mode}: no reconstructions");
         assert_eq!(m.failed, 0, "{mode}: permanent failures");
     }
 }
