@@ -79,6 +79,19 @@ fn main() -> nexus::Result<()> {
         cost.task_fixed * 1e6
     );
 
+    // ---- kernel core: blocked vs naive at the threads-mode workload
+    // shape (the gram block the 1M x 500 run spends its time in).  Both
+    // rates land in the session record so the speedup is checkable from
+    // one run of the artifact.
+    let (cb, cd) = if quick { (1024, 512) } else { (4096, 512) };
+    let blocked_cal = CostModel::calibrate(backend_by_name("host")?.as_ref(), cb, cd);
+    let naive_cal = CostModel::calibrate(backend_by_name("host-naive")?.as_ref(), cb, cd);
+    let kernel_speedup = blocked_cal.gflops / naive_cal.gflops;
+    println!(
+        "kernel core at ({cb} x {cd}): blocked {:.2} GFLOP/s vs naive {:.2} GFLOP/s => {kernel_speedup:.1}x",
+        blocked_cal.gflops, naive_cal.gflops
+    );
+
     // ---- Part A: simulator validation at 10k x 500 (real vs virtual) ----
     if !quick {
         let n = 10_000;
@@ -169,7 +182,10 @@ fn main() -> nexus::Result<()> {
         Json::obj()
             .set("backend", kx.name())
             .set("quick", quick)
-            .set("gflops_effective", cost.gflops)
+            .set("gflops_effective", blocked_cal.gflops)
+            .set("gflops_naive", naive_cal.gflops)
+            .set("kernel_speedup", kernel_speedup)
+            .set("gflops_cost_model", cost.gflops)
             .set("runs", Json::Arr(records)),
     );
     let n_sessions = sessions.len();

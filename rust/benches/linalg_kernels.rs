@@ -1,0 +1,153 @@
+//! Kernel-core microbench: blocked/threaded gram vs the naive oracle.
+//!
+//! Sweeps block shape (n x d) x tile width x thread count over the fused
+//! masked-gram kernel (`linalg::blocked::gram_block`) — the op the DML
+//! hot loop spends its time in — and records GFLOP/s plus the speedup
+//! over the single-threaded naive loops (`linalg::graphs::gram_block`).
+//! Every timed configuration is also checked bit-identical to the
+//! oracle, so a perf run doubles as a determinism check.
+//!
+//! Results append to `BENCH_linalg_kernels.json` (one session per
+//! invocation) so the perf trajectory is tracked across PRs.
+//!
+//!     cargo bench --offline --bench linalg_kernels
+//!     NEXUS_BENCH_QUICK=1 ...   (smaller shapes, fewer reps — CI)
+//!     NEXUS_PERF_SMOKE=1 ...    (exit 1 if blocked is slower than naive)
+
+use std::time::Instant;
+
+use nexus::bench_support::Table;
+use nexus::data::matrix::Matrix;
+use nexus::linalg;
+use nexus::linalg::blocked::KernelOpts;
+use nexus::models::cost::CostModel;
+use nexus::util::json::Json;
+use nexus::util::rng::Pcg32;
+
+fn block(seed: u64, n: usize, d: usize) -> (Matrix, Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg32::new(seed);
+    let x = Matrix::from_fn(n, d, |_, _| rng.normal_f32());
+    let y: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let mask: Vec<f32> = (0..n).map(|i| if i % 13 == 0 { 0.0 } else { 1.0 }).collect();
+    (x, y, mask)
+}
+
+/// Min-over-reps seconds for one invocation of `f`.
+fn time_min(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() -> nexus::Result<()> {
+    let quick = std::env::var("NEXUS_BENCH_QUICK").is_ok();
+    let smoke = std::env::var("NEXUS_PERF_SMOKE").is_ok();
+    let reps = if quick { 3 } else { 5 };
+    let shapes: &[(usize, usize)] =
+        if quick { &[(1024, 128), (1024, 256)] } else { &[(4096, 128), (4096, 256), (4096, 512)] };
+    let tiles: &[usize] = if quick { &[32, 64] } else { &[32, 64, 128] };
+    let max_threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let threads: Vec<usize> =
+        [1usize, 2, 4, 8].iter().copied().filter(|&t| t == 1 || t <= max_threads).collect();
+
+    let mut tbl = Table::new(
+        "Blocked kernel core — fused masked gram, GFLOP/s (speedup vs naive)",
+        &["n", "d", "tile", "threads", "naive", "blocked", "speedup"],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    // speedup of the best blocked config vs naive, per shape — the
+    // perf-smoke gate uses the worst shape
+    let mut smoke_worst = f64::INFINITY;
+
+    for &(n, d) in shapes {
+        let (x, y, mask) = block(n as u64 * 31 + d as u64, n, d);
+        let flops = CostModel::gram_flops(n, d);
+
+        let naive_secs = time_min(reps, || {
+            let _ = linalg::graphs::gram_block(&x, &y, &mask).unwrap();
+        });
+        let naive_gflops = flops / naive_secs / 1e9;
+
+        // determinism spot-check once per shape: blocked output at an
+        // awkward tile must equal the oracle bitwise
+        {
+            let (g0, b0, n0) = linalg::graphs::gram_block(&x, &y, &mask)?;
+            let opts = KernelOpts { threads: max_threads, tile_cols: 48, tile_rows: 1000 };
+            let st = linalg::blocked::gram_block_with(&x, &y, &mask, &opts)?;
+            assert_eq!(st.g.data(), g0.data(), "blocked gram differs from oracle at {n}x{d}");
+            assert_eq!(st.xty, b0);
+            assert_eq!(st.n, n0);
+        }
+
+        let mut best_speedup = 0.0f64;
+        for &tile in tiles {
+            for &t in &threads {
+                let opts = KernelOpts { threads: t, tile_cols: tile, tile_rows: 2048 };
+                let secs = time_min(reps, || {
+                    let _ = linalg::blocked::gram_block_with(&x, &y, &mask, &opts).unwrap();
+                });
+                let gflops = flops / secs / 1e9;
+                let speedup = naive_secs / secs;
+                best_speedup = best_speedup.max(speedup);
+                tbl.row(vec![
+                    format!("{n}"),
+                    format!("{d}"),
+                    format!("{tile}"),
+                    format!("{t}"),
+                    format!("{naive_gflops:.2}"),
+                    format!("{gflops:.2}"),
+                    format!("{speedup:.2}x"),
+                ]);
+                records.push(
+                    Json::obj()
+                        .set("n", n)
+                        .set("d", d)
+                        .set("tile", tile)
+                        .set("threads", t)
+                        .set("naive_gflops", naive_gflops)
+                        .set("blocked_gflops", gflops)
+                        .set("speedup", speedup),
+                );
+            }
+        }
+        smoke_worst = smoke_worst.min(best_speedup);
+    }
+    tbl.print();
+
+    let path = std::path::Path::new("BENCH_linalg_kernels.json");
+    let mut sessions: Vec<Json> = nexus::util::json::parse_file(path)
+        .ok()
+        .and_then(|old| old.get("sessions").and_then(|s| s.as_arr().ok().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    sessions.push(
+        Json::obj()
+            .set("quick", quick)
+            .set("machine_threads", max_threads)
+            .set("worst_shape_best_speedup", smoke_worst)
+            .set("runs", Json::Arr(records)),
+    );
+    let n_sessions = sessions.len();
+    let out = Json::obj()
+        .set("bench", "linalg_kernels")
+        .set("sessions", Json::Arr(sessions));
+    std::fs::write(path, out.to_string())?;
+    println!("\nwrote BENCH_linalg_kernels.json ({n_sessions} sessions total)");
+
+    if smoke {
+        // perf gate: at every shape the best blocked config must beat the
+        // naive loops outright (5% slack for timer noise on tiny shapes)
+        if smoke_worst < 1.05 {
+            eprintln!(
+                "PERF SMOKE FAILED: best blocked speedup {smoke_worst:.2}x < 1.05x — \
+                 the blocked kernel core is not beating the naive oracle"
+            );
+            std::process::exit(1);
+        }
+        println!("perf smoke passed: worst-shape best speedup {smoke_worst:.2}x");
+    }
+    Ok(())
+}

@@ -234,6 +234,7 @@ fn slice_square(m: &Matrix, p: usize) -> Matrix {
 /// shipped artifact shapes, fit.
 pub fn fit(cfg: &RunConfig, ds: &CausalDataset) -> Result<DmlFit> {
     cfg.validate()?;
+    crate::linalg::pool::set_kernel_threads(cfg.kernel_threads);
     let kx = backend_by_name(&cfg.backend)?;
     let (block, d_pad, p_pad) = pick_shapes(cfg)?;
     let ccfg = CrossfitConfig::from_run(cfg, block, d_pad);
@@ -250,6 +251,7 @@ pub fn fit(cfg: &RunConfig, ds: &CausalDataset) -> Result<DmlFit> {
 /// oracle ATE accumulated during ingest.
 pub fn fit_streaming(cfg: &RunConfig) -> Result<(DmlFit, IngestReport)> {
     cfg.validate()?;
+    crate::linalg::pool::set_kernel_threads(cfg.kernel_threads);
     let kx = backend_by_name(&cfg.backend)?;
     let (block, d_pad, p_pad) = pick_shapes(cfg)?;
     let ccfg = CrossfitConfig::from_run(cfg, block, d_pad);

@@ -37,7 +37,7 @@ impl Estimate {
 /// product S (both p x p).
 pub fn sandwich_covariance(m: &Matrix, s: &Matrix) -> Result<Matrix> {
     let m_inv = linalg::inv_spd(m)?;
-    Ok(linalg::mat_mul(&linalg::mat_mul(&m_inv, s), &m_inv))
+    linalg::mat_mul(&linalg::mat_mul(&m_inv, s)?, &m_inv)
 }
 
 /// Standard normal CDF via the Abramowitz–Stegun erf approximation

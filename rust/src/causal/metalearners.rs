@@ -72,8 +72,8 @@ pub fn t_learner(
 ) -> Result<MetaFit> {
     let (beta1, beta0) = arm_regressions(ctx, kx.clone(), ds, lam, block)?;
     let xi = with_intercept(&ds.x);
-    let mu1 = crate::linalg::mat_vec(&xi, &beta1);
-    let mu0 = crate::linalg::mat_vec(&xi, &beta0);
+    let mu1 = crate::linalg::mat_vec(&xi, &beta1)?;
+    let mu0 = crate::linalg::mat_vec(&xi, &beta0)?;
     let cate: Vec<f32> = mu1.iter().zip(&mu0).map(|(a, b)| a - b).collect();
     let ate = cate.iter().map(|&c| c as f64).sum::<f64>() / cate.len() as f64;
     Ok(MetaFit { ate, cate })
@@ -90,8 +90,8 @@ pub fn x_learner(
 ) -> Result<MetaFit> {
     let (beta1, beta0) = arm_regressions(ctx, kx.clone(), ds, lam, block)?;
     let xi = with_intercept(&ds.x);
-    let mu1 = crate::linalg::mat_vec(&xi, &beta1);
-    let mu0 = crate::linalg::mat_vec(&xi, &beta0);
+    let mu1 = crate::linalg::mat_vec(&xi, &beta1)?;
+    let mu0 = crate::linalg::mat_vec(&xi, &beta0)?;
 
     // imputed individual effects
     let (mut x1_rows, mut d1) = (Vec::new(), Vec::new());
@@ -110,9 +110,9 @@ pub fn x_learner(
 
     // propensity blend
     let beta_e = logistic::fit_simple(ctx, kx, &xi, &ds.t, 1e-3, 5, block)?;
-    let e = crate::linalg::mat_vec(&xi, &beta_e);
-    let t1 = crate::linalg::mat_vec(&xi, &tau1);
-    let t0 = crate::linalg::mat_vec(&xi, &tau0);
+    let e = crate::linalg::mat_vec(&xi, &beta_e)?;
+    let t1 = crate::linalg::mat_vec(&xi, &tau1)?;
+    let t0 = crate::linalg::mat_vec(&xi, &tau0)?;
     let cate: Vec<f32> = (0..ds.n())
         .map(|i| {
             let g = crate::data::synth::sigmoid(e[i]);

@@ -218,6 +218,11 @@ pub struct RunConfig {
     pub ingest_chunk: usize,
     /// Rows per sharded store block (`--shard-blocks`).
     pub shard_block: usize,
+    /// Threads per kernel call in the blocked linalg core
+    /// (`--kernel-threads`); 0 = auto (env `NEXUS_KERNEL_THREADS`, else
+    /// machine parallelism).  Performance-only: estimates are
+    /// bit-identical at every setting.
+    pub kernel_threads: usize,
     pub seed: u64,
 }
 
@@ -239,6 +244,7 @@ impl Default for RunConfig {
             sharded: false,
             ingest_chunk: 65_536,
             shard_block: 4096,
+            kernel_threads: 0,
             seed: 123,
         }
     }
@@ -324,6 +330,9 @@ impl RunConfig {
         if let Some(x) = v.get("shard_blocks") {
             cfg.shard_block = x.as_usize()?;
         }
+        if let Some(x) = v.get("kernel_threads") {
+            cfg.kernel_threads = x.as_usize()?;
+        }
         if let Some(c) = v.get("cluster") {
             if let Some(x) = c.get("nodes") {
                 cfg.cluster.nodes = x.as_usize()?;
@@ -369,6 +378,7 @@ impl RunConfig {
             .set("sharded", self.sharded)
             .set("ingest_chunk", self.ingest_chunk)
             .set("shard_blocks", self.shard_block)
+            .set("kernel_threads", self.kernel_threads)
             .set("seed", self.seed as i64)
             .set(
                 "cluster",
@@ -406,6 +416,7 @@ mod tests {
         cfg.sharded = true;
         cfg.ingest_chunk = 8192;
         cfg.shard_block = 512;
+        cfg.kernel_threads = 3;
         let v = cfg.to_json();
         let back = RunConfig::from_json(&v).unwrap();
         assert_eq!(back.n, 77_000);
@@ -417,6 +428,7 @@ mod tests {
         assert!(back.sharded);
         assert_eq!(back.ingest_chunk, 8192);
         assert_eq!(back.shard_block, 512);
+        assert_eq!(back.kernel_threads, 3);
     }
 
     #[test]

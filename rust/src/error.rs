@@ -26,6 +26,11 @@ pub enum NexusError {
     /// Data / shape errors (dimension mismatch, empty dataset, bad fold).
     Data(String),
 
+    /// Kernel-argument shape mismatches (block vs beta/vector arity).
+    /// Distinct from `Data` so a malformed block surfaces through the
+    /// task retry path as a kernel error instead of panicking a worker.
+    Shape(String),
+
     /// Numerical failures (singular system, non-finite values).
     Numeric(String),
 
@@ -47,6 +52,7 @@ impl fmt::Display for NexusError {
             NexusError::Config(m) => write!(f, "config: {m}"),
             NexusError::Raylet(m) => write!(f, "raylet: {m}"),
             NexusError::Data(m) => write!(f, "data: {m}"),
+            NexusError::Shape(m) => write!(f, "shape: {m}"),
             NexusError::Numeric(m) => write!(f, "numeric: {m}"),
             NexusError::Tune(m) => write!(f, "tune: {m}"),
             NexusError::Serve(m) => write!(f, "serve: {m}"),

@@ -1,0 +1,569 @@
+//! Blocked, multi-threaded kernel core — the Rust port of the Pallas
+//! kernel specs (`python/compile/kernels/gram.py`, `residual.py`).
+//!
+//! Layout mirrors the Pallas grid: gram-shaped kernels are partitioned
+//! into `tile_cols x tile_cols` *output* tiles with f64 accumulators;
+//! row-shaped kernels (residualize, predict) are partitioned into
+//! `tile_rows` row chunks.  Both partitions are chosen so that every
+//! output element is reduced in EXACTLY the order the naive oracle in
+//! `linalg` uses (rows ascending for gram/xt_v, columns ascending for
+//! dot products), which makes the blocked kernels **bit-identical** to
+//! the naive path and invariant across `--kernel-threads` — the
+//! determinism contract of DESIGN.md §8, enforced by
+//! `tests/linalg_blocked_props.rs`.
+//!
+//! Why it is faster anyway: the naive gram walks the full `d x d` f64
+//! accumulator once per row (2 MB at d = 512 — far beyond L1/L2), while
+//! a 64x64 output tile is a 32 KB accumulator that stays cache-resident
+//! for its whole pass over the rows; tiles are independent, so the
+//! kernel pool (`linalg::pool`) runs them on every core.  Fused entry
+//! points additionally collapse multi-traversal graphs into one pass
+//! over the block: [`gram_block`] produces `(X'X, X'y, y'y, n)` without
+//! materializing the masked copy of X, [`residual_block`] emits both
+//! residual vectors in a single row sweep.
+//!
+//! Knobs: `--kernel-threads` / `NEXUS_KERNEL_THREADS` (thread budget),
+//! `NEXUS_TILE_COLS` (output-tile width, default 64), `NEXUS_TILE_ROWS`
+//! (rows per parallel chunk, default 2048).  All performance-only —
+//! results are identical at every setting.
+
+use std::sync::OnceLock;
+
+use crate::data::matrix::Matrix;
+use crate::data::synth::sigmoid;
+use crate::error::{NexusError, Result};
+use crate::linalg::pool::{self, par_map};
+
+/// Per-call kernel tuning; [`KernelOpts::current`] snapshots the global
+/// knobs.  Benches and property tests construct explicit values instead
+/// of mutating process-global state.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelOpts {
+    /// Max threads for this call (caller included), >= 1.
+    pub threads: usize,
+    /// Output-tile width for gram-shaped kernels.
+    pub tile_cols: usize,
+    /// Rows per chunk for row-parallel kernels.
+    pub tile_rows: usize,
+}
+
+fn env_usize(var: &str, default: usize) -> usize {
+    std::env::var(var)
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(default)
+}
+
+fn default_tile_cols() -> usize {
+    static V: OnceLock<usize> = OnceLock::new();
+    *V.get_or_init(|| env_usize("NEXUS_TILE_COLS", 64))
+}
+
+fn default_tile_rows() -> usize {
+    static V: OnceLock<usize> = OnceLock::new();
+    *V.get_or_init(|| env_usize("NEXUS_TILE_ROWS", 2048))
+}
+
+impl KernelOpts {
+    /// Snapshot the global knobs (`--kernel-threads`, tile env vars).
+    pub fn current() -> KernelOpts {
+        KernelOpts {
+            threads: pool::kernel_threads(),
+            tile_cols: default_tile_cols(),
+            tile_rows: default_tile_rows(),
+        }
+    }
+
+    /// Current tiles with an explicit thread budget.
+    pub fn with_threads(threads: usize) -> KernelOpts {
+        KernelOpts { threads: threads.max(1), ..KernelOpts::current() }
+    }
+}
+
+fn shape_err(kernel: &str, msg: String) -> NexusError {
+    NexusError::Shape(format!("{kernel}: {msg}"))
+}
+
+fn check_len(kernel: &str, name: &str, got: usize, want: usize) -> Result<()> {
+    if got != want {
+        return Err(shape_err(kernel, format!("{name} has {got} elements, block needs {want}")));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Core: tiled gram with optional row scaling and fused X'y
+// ---------------------------------------------------------------------------
+
+/// One pass over the rows computing `G = (S X)' (S X)` tile by tile,
+/// where `S = diag(scale)` (identity if `None`), plus `X' yv` for the
+/// diagonal tiles when `yv` is given (`yv` must already be scaled).
+///
+/// Determinism: each output element `G[a, b]` is a single f64
+/// accumulator fed rows `0..n` in ascending order — the same operation
+/// sequence as the naive `linalg::gram` on a pre-scaled matrix, for any
+/// tile size and thread count.  Off-diagonal tiles are mirrored, which
+/// is exact because IEEE multiplication commutes bitwise.
+fn gram_fused(
+    x: &Matrix,
+    scale: Option<&[f32]>,
+    yv: Option<&[f32]>,
+    opts: &KernelOpts,
+) -> (Vec<f64>, Vec<f64>) {
+    let (n, d) = (x.rows(), x.cols());
+    let dt = opts.tile_cols.max(1);
+    let nt = d.div_ceil(dt).max(1);
+    let mut tiles: Vec<(usize, usize)> = Vec::with_capacity(nt * (nt + 1) / 2);
+    for ta in 0..nt {
+        for tb in ta..nt {
+            tiles.push((ta, tb));
+        }
+    }
+
+    struct TileOut {
+        ta: usize,
+        tb: usize,
+        acc: Vec<f64>,
+        bacc: Vec<f64>,
+    }
+
+    let outs = par_map(tiles.len(), opts.threads, |idx| {
+        let (ta, tb) = tiles[idx];
+        let (a0, b0) = (ta * dt, tb * dt);
+        let da = dt.min(d - a0);
+        let db = dt.min(d - b0);
+        let mut acc = vec![0.0f64; da * db];
+        let want_b = yv.is_some() && ta == tb;
+        let mut bacc = vec![0.0f64; if want_b { da } else { 0 }];
+        // row panel scratch: the right panel scaled + widened once per row
+        let mut pbuf = vec![0.0f64; db];
+        for i in 0..n {
+            let row = x.row(i);
+            let pa = &row[a0..a0 + da];
+            let pb = &row[b0..b0 + db];
+            let s = scale.map(|s| s[i]);
+            match s {
+                // scale in f32 FIRST (matching the oracle's materialized
+                // `x[i][j] * m` rounding), then widen
+                Some(m) => {
+                    for (dst, &v) in pbuf.iter_mut().zip(pb) {
+                        *dst = (v * m) as f64;
+                    }
+                }
+                None => {
+                    for (dst, &v) in pbuf.iter_mut().zip(pb) {
+                        *dst = v as f64;
+                    }
+                }
+            }
+            let vi = yv.map(|yv| yv[i] as f64);
+            for (p, &va) in pa.iter().enumerate() {
+                let a64 = match s {
+                    Some(m) => (va * m) as f64,
+                    None => va as f64,
+                };
+                let dst = &mut acc[p * db..(p + 1) * db];
+                for (o, &b64) in dst.iter_mut().zip(&pbuf) {
+                    *o += a64 * b64;
+                }
+                if want_b {
+                    bacc[p] += vi.unwrap() * a64;
+                }
+            }
+        }
+        TileOut { ta, tb, acc, bacc }
+    });
+
+    let mut g = vec![0.0f64; d * d];
+    let mut bvec = vec![0.0f64; if yv.is_some() { d } else { 0 }];
+    for t in outs {
+        let (a0, b0) = (t.ta * dt, t.tb * dt);
+        let da = dt.min(d - a0);
+        let db = dt.min(d - b0);
+        for p in 0..da {
+            for q in 0..db {
+                let v = t.acc[p * db + q];
+                g[(a0 + p) * d + (b0 + q)] = v;
+                if t.ta != t.tb {
+                    g[(b0 + q) * d + (a0 + p)] = v;
+                }
+            }
+        }
+        for (p, &v) in t.bacc.iter().enumerate() {
+            bvec[a0 + p] = v;
+        }
+    }
+    (g, bvec)
+}
+
+fn cast_matrix(d: usize, g: Vec<f64>) -> Matrix {
+    Matrix::from_vec(d, d, g.into_iter().map(|v| v as f32).collect()).unwrap()
+}
+
+/// Row range [start, end) of chunk `c` when `n` rows are split into
+/// `tile_rows`-sized chunks.
+fn chunk_bounds(c: usize, n: usize, rows: usize) -> (usize, usize) {
+    let start = c * rows;
+    (start, (start + rows).min(n))
+}
+
+// ---------------------------------------------------------------------------
+// Public kernels
+// ---------------------------------------------------------------------------
+
+/// Blocked `G = X^T X` (f64 tile accumulators, f32 result).
+pub fn gram(x: &Matrix) -> Matrix {
+    gram_with(x, &KernelOpts::current())
+}
+
+pub fn gram_with(x: &Matrix, opts: &KernelOpts) -> Matrix {
+    let (g, _) = gram_fused(x, None, None, opts);
+    cast_matrix(x.cols(), g)
+}
+
+/// Fused gram statistics over a masked block — everything the ridge
+/// normal equations need, in one pass over the rows.
+pub struct GramStats {
+    /// `(M X)' (M X)` where `M = diag(mask)`.
+    pub g: Matrix,
+    /// `(M X)' (M y)`.
+    pub xty: Vec<f32>,
+    /// `(M y)' (M y)` — the residual-sum-of-squares building block.
+    pub yty: f32,
+    /// Effective rows: `sum(mask)`.
+    pub n: f32,
+}
+
+/// Blocked, fused `(X'X, X'y, y'y, n)` over a masked block.  Replaces
+/// the oracle's clone + scale + gram + xt_v (three data traversals and
+/// an O(n d) allocation) with one traversal and no clone; `g`/`xty`/`n`
+/// are bit-identical to `linalg::graphs::gram_block`.
+pub fn gram_block(x: &Matrix, y: &[f32], mask: &[f32]) -> Result<GramStats> {
+    gram_block_with(x, y, mask, &KernelOpts::current())
+}
+
+pub fn gram_block_with(
+    x: &Matrix,
+    y: &[f32],
+    mask: &[f32],
+    opts: &KernelOpts,
+) -> Result<GramStats> {
+    let n = x.rows();
+    check_len("gram_block", "y", y.len(), n)?;
+    check_len("gram_block", "mask", mask.len(), n)?;
+    let ym: Vec<f32> = y.iter().zip(mask).map(|(a, b)| a * b).collect();
+    let (g, b) = gram_fused(x, Some(mask), Some(&ym), opts);
+    let mut yty = 0.0f64;
+    for &v in &ym {
+        yty += v as f64 * v as f64;
+    }
+    let mut nsum = 0.0f32;
+    for &m in mask {
+        nsum += m;
+    }
+    Ok(GramStats {
+        g: cast_matrix(x.cols(), g),
+        xty: b.into_iter().map(|v| v as f32).collect(),
+        yty: yty as f32,
+        n: nsum,
+    })
+}
+
+/// Blocked `yhat = X beta` (row-parallel; each row's dot product runs
+/// columns ascending in f64 — the oracle's order).
+pub fn mat_vec(x: &Matrix, beta: &[f32]) -> Result<Vec<f32>> {
+    mat_vec_with(x, beta, &KernelOpts::current())
+}
+
+pub fn mat_vec_with(x: &Matrix, beta: &[f32], opts: &KernelOpts) -> Result<Vec<f32>> {
+    check_len("mat_vec", "beta", beta.len(), x.cols())?;
+    Ok(row_chunks(x, opts, |row| dot_f64(row, beta)))
+}
+
+/// Blocked `sigmoid(X beta)` — the predict-proba fusion.
+pub fn predict_proba_with(x: &Matrix, beta: &[f32], opts: &KernelOpts) -> Result<Vec<f32>> {
+    check_len("predict_proba", "beta", beta.len(), x.cols())?;
+    Ok(row_chunks(x, opts, |row| sigmoid(dot_f64(row, beta))))
+}
+
+#[inline]
+fn dot_f64(row: &[f32], beta: &[f32]) -> f32 {
+    row.iter().zip(beta).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>() as f32
+}
+
+/// Map each row through `f`, in parallel chunks, preserving row order.
+fn row_chunks<T: Send>(x: &Matrix, opts: &KernelOpts, f: impl Fn(&[f32]) -> T + Sync) -> Vec<T> {
+    let n = x.rows();
+    let rows = opts.tile_rows.max(1);
+    let chunks = n.div_ceil(rows).max(1);
+    let parts = par_map(chunks, opts.threads, |c| {
+        let (s, e) = chunk_bounds(c, n, rows);
+        (s..e).map(|i| f(x.row(i))).collect::<Vec<T>>()
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// Blocked `b = X^T v` (column-tile parallel; each element reduces rows
+/// ascending like the oracle).
+pub fn xt_v(x: &Matrix, v: &[f32]) -> Result<Vec<f32>> {
+    xt_v_with(x, v, &KernelOpts::current())
+}
+
+pub fn xt_v_with(x: &Matrix, v: &[f32], opts: &KernelOpts) -> Result<Vec<f32>> {
+    let (n, d) = (x.rows(), x.cols());
+    check_len("xt_v", "v", v.len(), n)?;
+    let dt = opts.tile_cols.max(1);
+    let nt = d.div_ceil(dt).max(1);
+    let parts = par_map(nt, opts.threads, |t| {
+        let a0 = t * dt;
+        let da = dt.min(d - a0);
+        let mut acc = vec![0.0f64; da];
+        for i in 0..n {
+            let vi = v[i] as f64;
+            let pa = &x.row(i)[a0..a0 + da];
+            for (o, &xa) in acc.iter_mut().zip(pa) {
+                *o += vi * xa as f64;
+            }
+        }
+        acc
+    });
+    Ok(parts.into_iter().flatten().map(|v| v as f32).collect())
+}
+
+/// Blocked fused residualization (`residual.py`): one pass over the rows
+/// emitting `y - X b_y` and `t - sigmoid(X b_t)` together.
+pub fn residual_block(
+    x: &Matrix,
+    y: &[f32],
+    t: &[f32],
+    beta_y: &[f32],
+    beta_t: &[f32],
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    residual_block_with(x, y, t, beta_y, beta_t, &KernelOpts::current())
+}
+
+pub fn residual_block_with(
+    x: &Matrix,
+    y: &[f32],
+    t: &[f32],
+    beta_y: &[f32],
+    beta_t: &[f32],
+    opts: &KernelOpts,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let (n, d) = (x.rows(), x.cols());
+    check_len("residual_block", "y", y.len(), n)?;
+    check_len("residual_block", "t", t.len(), n)?;
+    check_len("residual_block", "beta_y", beta_y.len(), d)?;
+    check_len("residual_block", "beta_t", beta_t.len(), d)?;
+    let rows = opts.tile_rows.max(1);
+    let chunks = n.div_ceil(rows).max(1);
+    let parts = par_map(chunks, opts.threads, |c| {
+        let (s, e) = chunk_bounds(c, n, rows);
+        let mut yr = Vec::with_capacity(e - s);
+        let mut tr = Vec::with_capacity(e - s);
+        for i in s..e {
+            let row = x.row(i);
+            yr.push(y[i] - dot_f64(row, beta_y));
+            tr.push(t[i] - sigmoid(dot_f64(row, beta_t)));
+        }
+        (yr, tr)
+    });
+    let mut yr = Vec::with_capacity(n);
+    let mut tr = Vec::with_capacity(n);
+    for (a, b) in parts {
+        yr.extend(a);
+        tr.extend(b);
+    }
+    Ok((yr, tr))
+}
+
+/// Blocked IRLS partials `(H, c, nll)`: one parallel row pass computes
+/// `eta`, the sqrt-weights and working response, then the scaled gram
+/// runs through the tiled core with on-the-fly row scaling (no `O(n d)`
+/// scaled copy of X, unlike the oracle).
+pub fn irls_block(
+    x: &Matrix,
+    t: &[f32],
+    mask: &[f32],
+    beta: &[f32],
+) -> Result<(Matrix, Vec<f32>, f32)> {
+    irls_block_with(x, t, mask, beta, &KernelOpts::current())
+}
+
+pub fn irls_block_with(
+    x: &Matrix,
+    t: &[f32],
+    mask: &[f32],
+    beta: &[f32],
+    opts: &KernelOpts,
+) -> Result<(Matrix, Vec<f32>, f32)> {
+    let (n, d) = (x.rows(), x.cols());
+    check_len("irls_block", "t", t.len(), n)?;
+    check_len("irls_block", "mask", mask.len(), n)?;
+    check_len("irls_block", "beta", beta.len(), d)?;
+    let rows = opts.tile_rows.max(1);
+    let chunks = n.div_ceil(rows).max(1);
+    let parts = par_map(chunks, opts.threads, |c| {
+        let (s, e) = chunk_bounds(c, n, rows);
+        let mut sw = Vec::with_capacity(e - s);
+        let mut wz = Vec::with_capacity(e - s);
+        let mut nll_terms = Vec::with_capacity(e - s);
+        for i in s..e {
+            let eta = dot_f64(x.row(i), beta);
+            let p = sigmoid(eta);
+            let w = (p * (1.0 - p)).max(1e-6);
+            let wm = w * mask[i];
+            let z = eta + (t[i] - p) / w;
+            sw.push(wm.sqrt());
+            wz.push(wm * z);
+            let eps = 1e-7f64;
+            let pd = p as f64;
+            nll_terms.push(
+                mask[i] as f64
+                    * (t[i] as f64 * (pd + eps).ln()
+                        + (1.0 - t[i] as f64) * (1.0 - pd + eps).ln()),
+            );
+        }
+        (sw, wz, nll_terms)
+    });
+    let mut sw = Vec::with_capacity(n);
+    let mut wz = Vec::with_capacity(n);
+    let mut nll = 0.0f64;
+    for (a, b, terms) in parts {
+        sw.extend(a);
+        wz.extend(b);
+        // sequential row-order reduction: matches the oracle's running
+        // `nll -= term` fold exactly
+        for term in terms {
+            nll -= term;
+        }
+    }
+    let (h, _) = gram_fused(x, Some(&sw), None, opts);
+    let c = xt_v_with(x, &wz, opts)?;
+    Ok((cast_matrix(d, h), c, nll as f32))
+}
+
+/// Blocked final-stage normal-equation partials `(M, v)`.
+pub fn final_moments(
+    y_res: &[f32],
+    t_res: &[f32],
+    phi: &Matrix,
+    mask: &[f32],
+) -> Result<(Matrix, Vec<f32>)> {
+    final_moments_with(y_res, t_res, phi, mask, &KernelOpts::current())
+}
+
+pub fn final_moments_with(
+    y_res: &[f32],
+    t_res: &[f32],
+    phi: &Matrix,
+    mask: &[f32],
+    opts: &KernelOpts,
+) -> Result<(Matrix, Vec<f32>)> {
+    let n = phi.rows();
+    check_len("final_moments", "y_res", y_res.len(), n)?;
+    check_len("final_moments", "t_res", t_res.len(), n)?;
+    check_len("final_moments", "mask", mask.len(), n)?;
+    // tphi rows are scaled by t_res * mask; reuse the fused core with
+    // that per-row scale and y_res as the fused vector
+    let scale: Vec<f32> = t_res.iter().zip(mask).map(|(t, m)| t * m).collect();
+    let (g, b) = gram_fused(phi, Some(&scale), Some(y_res), opts);
+    Ok((cast_matrix(phi.cols(), g), b.into_iter().map(|v| v as f32).collect()))
+}
+
+/// Blocked final-stage HC meat partial `S`.
+pub fn final_score(
+    y_res: &[f32],
+    t_res: &[f32],
+    phi: &Matrix,
+    theta: &[f32],
+    mask: &[f32],
+) -> Result<Matrix> {
+    final_score_with(y_res, t_res, phi, theta, mask, &KernelOpts::current())
+}
+
+pub fn final_score_with(
+    y_res: &[f32],
+    t_res: &[f32],
+    phi: &Matrix,
+    theta: &[f32],
+    mask: &[f32],
+    opts: &KernelOpts,
+) -> Result<Matrix> {
+    let n = phi.rows();
+    check_len("final_score", "y_res", y_res.len(), n)?;
+    check_len("final_score", "t_res", t_res.len(), n)?;
+    check_len("final_score", "mask", mask.len(), n)?;
+    // per-row score scale e_i, f32 ops in the oracle's exact order
+    let scale: Vec<f32> = (0..n)
+        .map(|i| {
+            let fit: f32 = phi.row(i).iter().zip(theta).map(|(a, b)| a * b).sum();
+            (y_res[i] - t_res[i] * fit) * t_res[i] * mask[i]
+        })
+        .collect();
+    let (g, _) = gram_fused(phi, Some(&scale), None, opts);
+    Ok(cast_matrix(phi.cols(), g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randm(seed: u64, n: usize, d: usize) -> Matrix {
+        let mut rng = Pcg32::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.normal_f32())
+    }
+
+    fn opts(threads: usize, tile: usize) -> KernelOpts {
+        KernelOpts { threads, tile_cols: tile, tile_rows: 7 }
+    }
+
+    #[test]
+    fn gram_bitwise_matches_oracle_at_tail_shapes() {
+        for (n, d, tile) in [(33, 5, 2), (100, 17, 8), (64, 16, 16), (1, 3, 4)] {
+            let x = randm(n as u64 * 31 + d as u64, n, d);
+            let want = crate::linalg::gram(&x);
+            for threads in [1, 3] {
+                let got = gram_with(&x, &opts(threads, tile));
+                assert_eq!(got.data(), want.data(), "n={n} d={d} tile={tile} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_gram_block_matches_oracle_bitwise() {
+        let (n, d) = (97, 13);
+        let x = randm(5, n, d);
+        let mut rng = Pcg32::new(6);
+        let y: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let mask: Vec<f32> = (0..n).map(|i| if i % 7 == 0 { 0.0 } else { 1.0 }).collect();
+        let (g0, b0, n0) = crate::linalg::graphs::gram_block(&x, &y, &mask).unwrap();
+        let st = gram_block_with(&x, &y, &mask, &opts(4, 5)).unwrap();
+        assert_eq!(st.g.data(), g0.data());
+        assert_eq!(st.xty, b0);
+        assert_eq!(st.n, n0);
+        // y'y sanity: masked sum of squares
+        let want_yty: f64 = y
+            .iter()
+            .zip(&mask)
+            .map(|(a, b)| {
+                let v = a * b;
+                v as f64 * v as f64
+            })
+            .sum();
+        assert!((st.yty as f64 - want_yty).abs() < 1e-3);
+    }
+
+    #[test]
+    fn shape_errors_are_shape_variant() {
+        let x = randm(7, 10, 4);
+        let e = gram_block_with(&x, &[0.0; 9], &[1.0; 10], &opts(1, 4)).unwrap_err();
+        assert!(matches!(e, NexusError::Shape(_)), "{e}");
+        let e = mat_vec_with(&x, &[0.0; 5], &opts(1, 4)).unwrap_err();
+        assert!(matches!(e, NexusError::Shape(_)), "{e}");
+        let e = xt_v_with(&x, &[0.0; 3], &opts(1, 4)).unwrap_err();
+        assert!(matches!(e, NexusError::Shape(_)), "{e}");
+    }
+}

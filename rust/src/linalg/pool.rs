@@ -1,0 +1,298 @@
+//! Persistent worker pool for the blocked kernel core.
+//!
+//! The raylet executors parallelize across *tasks*; this pool
+//! parallelizes *within* a kernel call (one gram/residual block) by
+//! splitting output tiles or row chunks across threads.  Design points:
+//!
+//! * **Persistent**: threads are spawned once (lazily, on first parallel
+//!   kernel) and reused for every subsequent call — no per-call spawn
+//!   cost, which matters at the 4096-row block granularity.
+//! * **Caller participation**: the submitting thread drains the same job
+//!   queue as the workers and `run` returns only when every job has
+//!   finished.  Because the caller never blocks while holding a lock and
+//!   never waits on a *specific* worker, nested use from raylet worker
+//!   threads cannot deadlock — worst case the caller runs all jobs
+//!   itself.
+//! * **Scoped jobs**: jobs may borrow the caller's stack (`'scope`
+//!   lifetime).  `run` erases the lifetime to hand boxes to the workers,
+//!   which is sound because it blocks until the batch completes before
+//!   returning (see the `SAFETY` comment).
+//! * **Determinism is the kernel's job, not the pool's**: the pool gives
+//!   no ordering guarantees; `linalg::blocked` partitions work so every
+//!   output element is reduced in a fixed order regardless of how jobs
+//!   interleave (DESIGN.md §8).
+//!
+//! Thread count resolution (highest wins): `set_kernel_threads(n)` with
+//! n > 0 (the `--kernel-threads` CLI knob), else the
+//! `NEXUS_KERNEL_THREADS` env var, else `available_parallelism()`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Explicit `--kernel-threads` setting; 0 = unset (auto/env).
+static KERNEL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the kernel-level thread budget (0 = auto).  Process-global: this
+/// is a performance knob, never a correctness one — blocked kernels
+/// return bit-identical results at every thread count.
+pub fn set_kernel_threads(n: usize) {
+    KERNEL_THREADS.store(n, Ordering::Relaxed);
+}
+
+fn env_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("NEXUS_KERNEL_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(0)
+    })
+}
+
+fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolved kernel thread budget (always >= 1).
+pub fn kernel_threads() -> usize {
+    let explicit = KERNEL_THREADS.load(Ordering::Relaxed);
+    if explicit > 0 {
+        return explicit;
+    }
+    let env = env_threads();
+    if env > 0 {
+        return env;
+    }
+    auto_threads()
+}
+
+type Job = Box<dyn FnOnce() + Send>;
+
+struct BatchState {
+    jobs: VecDeque<Job>,
+    pending: usize,
+    panicked: bool,
+}
+
+/// One `run` call: a queue of jobs plus a completion latch.
+struct Batch {
+    state: Mutex<BatchState>,
+    done: Condvar,
+}
+
+impl Batch {
+    fn new(jobs: VecDeque<Job>) -> Batch {
+        let pending = jobs.len();
+        Batch {
+            state: Mutex::new(BatchState { jobs, pending, panicked: false }),
+            done: Condvar::new(),
+        }
+    }
+
+    /// Drain jobs until the queue is empty.  Panics inside a job are
+    /// caught so `pending` always reaches zero and waiters wake up.
+    fn work(&self) {
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                match st.jobs.pop_front() {
+                    Some(j) => j,
+                    None => return,
+                }
+            };
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)).is_ok();
+            let mut st = self.state.lock().unwrap();
+            st.pending -= 1;
+            if !ok {
+                st.panicked = true;
+            }
+            if st.pending == 0 {
+                self.done.notify_all();
+            }
+        }
+    }
+
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.panicked
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Batch>>>,
+    cv: Condvar,
+}
+
+/// The process-wide kernel pool.
+pub struct KernelPool {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+impl KernelPool {
+    fn spawn(workers: usize) -> KernelPool {
+        let shared = Arc::new(Shared { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() });
+        for i in 0..workers {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("nexus-kernel-{i}"))
+                .spawn(move || loop {
+                    let batch = {
+                        let mut q = sh.queue.lock().unwrap();
+                        loop {
+                            if let Some(b) = q.pop_front() {
+                                break b;
+                            }
+                            q = sh.cv.wait(q).unwrap();
+                        }
+                    };
+                    batch.work();
+                })
+                .expect("spawn kernel worker");
+        }
+        KernelPool { shared, workers }
+    }
+
+    /// The global pool.  Sized to the machine minus the caller's core;
+    /// the per-call `max_threads` cap decides how many actually help.
+    pub fn global() -> &'static KernelPool {
+        static POOL: OnceLock<KernelPool> = OnceLock::new();
+        POOL.get_or_init(|| KernelPool::spawn(auto_threads().saturating_sub(1).min(31)))
+    }
+
+    /// Run `jobs` with up to `max_threads` participants (caller
+    /// included) and block until all complete.  Re-panics on the caller
+    /// thread if any job panicked.
+    pub fn run<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>, max_threads: usize) {
+        let n = jobs.len();
+        if n == 0 {
+            return;
+        }
+        let helpers = max_threads.saturating_sub(1).min(self.workers).min(n - 1);
+        if helpers == 0 {
+            for j in jobs {
+                j();
+            }
+            return;
+        }
+        // SAFETY: the 'scope borrows inside each job outlive this call
+        // because `run` does not return until `pending == 0`, i.e. every
+        // job (caller-run or worker-run) has finished executing.  Workers
+        // can still hold the Batch Arc afterwards, but only to observe an
+        // empty queue — no erased job survives the wait below.
+        let jobs: VecDeque<Job> = jobs
+            .into_iter()
+            .map(|j| unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(j)
+            })
+            .collect();
+        let batch = Arc::new(Batch::new(jobs));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..helpers {
+                q.push_back(batch.clone());
+            }
+        }
+        self.shared.cv.notify_all();
+        batch.work();
+        if batch.wait() {
+            panic!("kernel pool job panicked");
+        }
+    }
+}
+
+/// Run `f(0..n)` with up to `max_threads` threads, collecting results in
+/// index order.  Falls back to a plain sequential map when parallelism
+/// cannot help.
+pub fn par_map<T, F>(n: usize, max_threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n <= 1 || max_threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..n)
+            .map(|i| {
+                let slots = &slots;
+                let f = &f;
+                Box::new(move || {
+                    let v = f(i);
+                    *slots[i].lock().unwrap() = Some(v);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        KernelPool::global().run(jobs, max_threads);
+    }
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("kernel pool job did not run"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_sequential() {
+        for threads in [1, 2, 8, 64] {
+            let got = par_map(37, threads, |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_borrows_caller_stack() {
+        let base = vec![1.0f64; 1000];
+        let sums = par_map(8, 4, |i| base.iter().sum::<f64>() + i as f64);
+        for (i, s) in sums.iter().enumerate() {
+            assert_eq!(*s, 1000.0 + i as f64);
+        }
+    }
+
+    #[test]
+    fn nested_par_map_does_not_deadlock() {
+        let out = par_map(4, 4, |i| par_map(4, 4, move |j| i * 10 + j));
+        assert_eq!(out[2][3], 23);
+    }
+
+    #[test]
+    fn empty_and_single_job() {
+        assert!(par_map(0, 8, |i| i).is_empty());
+        assert_eq!(par_map(1, 8, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn panicking_job_propagates_without_poisoning_pool() {
+        let r = std::panic::catch_unwind(|| {
+            par_map(8, 4, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        assert!(r.is_err());
+        // pool still serviceable afterwards
+        assert_eq!(par_map(5, 4, |i| i).len(), 5);
+    }
+
+    #[test]
+    fn thread_setting_resolution() {
+        set_kernel_threads(3);
+        assert_eq!(kernel_threads(), 3);
+        set_kernel_threads(0);
+        assert!(kernel_threads() >= 1);
+    }
+}

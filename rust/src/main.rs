@@ -51,6 +51,7 @@ fn run() -> Result<()> {
                  examples:\n\
                  \x20 nexus fit --n 20000 --d 50 --cv 5 --exec ray --workers 4\n\
                  \x20 nexus fit --n 200000 --d 50 --sharded --ingest-chunk 16384 --exec ray\n\
+                 \x20 nexus fit --n 100000 --d 200 --backend host --kernel-threads 8\n\
                  \x20 nexus tune --trials 16 --strategy sha\n\
                  \x20 nexus simulate --n 1000000 --d 500 --nodes 5\n\
                  \x20 nexus serve --replicas 4 --policy p2c --rate 2000\n\
@@ -84,6 +85,7 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     cfg.cluster.slots_per_node = args.usize_or("slots", cfg.cluster.slots_per_node)?;
     cfg.ingest_chunk = args.usize_or("ingest-chunk", cfg.ingest_chunk)?;
     cfg.shard_block = args.usize_or("shard-blocks", cfg.shard_block)?;
+    cfg.kernel_threads = args.usize_or("kernel-threads", cfg.kernel_threads)?;
     if args.flag("sharded") {
         cfg.sharded = true;
     }

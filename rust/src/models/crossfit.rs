@@ -470,6 +470,31 @@ mod tests {
     }
 
     #[test]
+    fn blocked_and_naive_backends_crossfit_identically() {
+        // determinism contract at the crossfit layer: the blocked,
+        // multi-threaded kernel core behind `host` must reproduce the
+        // naive oracle backend bit-for-bit through the whole fold DAG
+        let ds = small_data();
+        let cfg = small_cfg();
+        let ctx = RayContext::inline();
+        let blocked =
+            run(&ctx, Arc::new(HostBackend), &CostModel::default(), &ds, &cfg).unwrap();
+        let ctx2 = RayContext::inline();
+        let naive = run(
+            &ctx2,
+            Arc::new(crate::runtime::backend::NaiveHostBackend),
+            &CostModel::default(),
+            &ds,
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(blocked.y_res, naive.y_res);
+        assert_eq!(blocked.t_res, naive.t_res);
+        assert_eq!(blocked.beta_y, naive.beta_y);
+        assert_eq!(blocked.beta_t, naive.beta_t);
+    }
+
+    #[test]
     fn residuals_cover_every_row_once() {
         let ds = small_data();
         let ctx = RayContext::inline();

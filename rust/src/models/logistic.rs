@@ -130,7 +130,7 @@ mod tests {
             .map(|i| sigmoid(x.row(i).iter().zip(&beta).map(|(a, b)| a * b).sum()))
             .collect();
         let resid: Vec<f32> = t.iter().zip(&p).map(|(a, b)| a - b).collect();
-        let grad = crate::linalg::xt_v(&x, &resid);
+        let grad = crate::linalg::xt_v(&x, &resid).unwrap();
         assert!(grad.iter().all(|g| g.abs() < 2.0), "grad={grad:?}");
     }
 
@@ -155,7 +155,7 @@ mod tests {
                 .map(|i| sigmoid(x.row(i).iter().zip(beta).map(|(a, b)| a * b).sum()))
                 .collect();
             let r: Vec<f32> = t.iter().zip(&p).map(|(a, b)| a - b).collect();
-            crate::linalg::xt_v(&x, &r).iter().map(|g| g.abs()).fold(0.0, f32::max)
+            crate::linalg::xt_v(&x, &r).unwrap().iter().map(|g| g.abs()).fold(0.0, f32::max)
         };
         let b1 = fit_simple(&ctx, kx.clone(), &x, &t, 1e-4, 1, 512).unwrap();
         let b5 = fit_simple(&ctx, kx, &x, &t, 1e-4, 5, 512).unwrap();

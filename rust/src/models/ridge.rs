@@ -166,7 +166,7 @@ mod tests {
         let ctx = RayContext::inline();
         let beta = fit_simple(&ctx, Arc::new(HostBackend), &x, &y, 0.5, 100).unwrap();
         let g = linalg::gram(&x);
-        let b = linalg::xt_v(&x, &y);
+        let b = linalg::xt_v(&x, &y).unwrap();
         let lam = lam_diag(4, 4, 0.5);
         let want = linalg::ridge_solve(&g, &b, &lam).unwrap();
         for (a, w) in beta.iter().zip(&want) {

@@ -7,9 +7,15 @@
 //!   artifact through the PJRT engine.  Block inputs must already be at
 //!   shipped shapes (the partition layer produces exact blocks); small
 //!   one-off ops (`ridge_solve`, final stage) are padded here.
-//! * [`HostBackend`] — pure-rust `linalg` fallback: exact same contracts,
-//!   no artifacts needed.  Used by unit tests, as the cross-check oracle,
-//!   and for tiny problems where PJRT dispatch overhead dominates.
+//! * [`HostBackend`] — pure-rust path over the blocked, multi-threaded
+//!   kernel core (`linalg::blocked`): exact same contracts, no artifacts
+//!   needed.  This is what every executor, crossfit fold and sharded
+//!   task runs when PJRT artifacts are absent.
+//!
+//! A third name, `host-naive` ([`NaiveHostBackend`]), exposes the
+//! single-threaded oracle loops — bit-identical to `host` by the
+//! determinism contract (DESIGN.md §8), kept addressable so benches can
+//! record the naive baseline in the same run.
 
 use crate::data::matrix::Matrix;
 use crate::error::{NexusError, Result};
@@ -78,13 +84,17 @@ pub trait KernelExec: Send + Sync {
 // Host backend
 // ---------------------------------------------------------------------------
 
-/// Pure-rust backend over `linalg` — no artifacts required.
+/// Pure-rust backend over the blocked kernel core — no artifacts
+/// required.  Thread budget and tile sizes come from the global knobs
+/// (`--kernel-threads`, `NEXUS_TILE_COLS`/`NEXUS_TILE_ROWS`); outputs
+/// are bit-identical at every setting.
 #[derive(Clone, Default)]
 pub struct HostBackend;
 
 impl KernelExec for HostBackend {
     fn gram_block(&self, x: &Matrix, y: &[f32], mask: &[f32]) -> Result<(Matrix, Vec<f32>, f32)> {
-        Ok(linalg::graphs::gram_block(x, y, mask))
+        let st = linalg::blocked::gram_block(x, y, mask)?;
+        Ok((st.g, st.xty, st.n))
     }
 
     fn ridge_solve(&self, g: &Matrix, b: &[f32], lam: &[f32]) -> Result<Vec<f32>> {
@@ -92,11 +102,81 @@ impl KernelExec for HostBackend {
     }
 
     fn predict(&self, x: &Matrix, beta: &[f32]) -> Result<Vec<f32>> {
-        Ok(linalg::mat_vec(x, beta))
+        linalg::blocked::mat_vec(x, beta)
     }
 
     fn predict_proba(&self, x: &Matrix, beta: &[f32]) -> Result<Vec<f32>> {
-        Ok(linalg::mat_vec(x, beta)
+        linalg::blocked::predict_proba_with(x, beta, &linalg::blocked::KernelOpts::current())
+    }
+
+    fn irls_block(
+        &self,
+        x: &Matrix,
+        t: &[f32],
+        mask: &[f32],
+        beta: &[f32],
+    ) -> Result<(Matrix, Vec<f32>, f32)> {
+        linalg::blocked::irls_block(x, t, mask, beta)
+    }
+
+    fn residual_block(
+        &self,
+        x: &Matrix,
+        y: &[f32],
+        t: &[f32],
+        beta_y: &[f32],
+        beta_t: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        linalg::blocked::residual_block(x, y, t, beta_y, beta_t)
+    }
+
+    fn final_moments(
+        &self,
+        y_res: &[f32],
+        t_res: &[f32],
+        phi: &Matrix,
+        mask: &[f32],
+    ) -> Result<(Matrix, Vec<f32>)> {
+        linalg::blocked::final_moments(y_res, t_res, phi, mask)
+    }
+
+    fn final_score(
+        &self,
+        y_res: &[f32],
+        t_res: &[f32],
+        phi: &Matrix,
+        theta: &[f32],
+        mask: &[f32],
+    ) -> Result<Matrix> {
+        linalg::blocked::final_score(y_res, t_res, phi, theta, mask)
+    }
+
+    fn name(&self) -> &'static str {
+        "host"
+    }
+}
+
+/// The naive oracle loops as a backend — single-threaded, no tiling.
+/// Exists so benches can measure the un-optimized baseline in the same
+/// process and tests can cross-check the blocked path end to end.
+#[derive(Clone, Default)]
+pub struct NaiveHostBackend;
+
+impl KernelExec for NaiveHostBackend {
+    fn gram_block(&self, x: &Matrix, y: &[f32], mask: &[f32]) -> Result<(Matrix, Vec<f32>, f32)> {
+        linalg::graphs::gram_block(x, y, mask)
+    }
+
+    fn ridge_solve(&self, g: &Matrix, b: &[f32], lam: &[f32]) -> Result<Vec<f32>> {
+        linalg::ridge_solve(g, b, lam)
+    }
+
+    fn predict(&self, x: &Matrix, beta: &[f32]) -> Result<Vec<f32>> {
+        linalg::mat_vec(x, beta)
+    }
+
+    fn predict_proba(&self, x: &Matrix, beta: &[f32]) -> Result<Vec<f32>> {
+        Ok(linalg::mat_vec(x, beta)?
             .into_iter()
             .map(crate::data::synth::sigmoid)
             .collect())
@@ -109,7 +189,7 @@ impl KernelExec for HostBackend {
         mask: &[f32],
         beta: &[f32],
     ) -> Result<(Matrix, Vec<f32>, f32)> {
-        Ok(linalg::graphs::irls_block(x, t, mask, beta))
+        linalg::graphs::irls_block(x, t, mask, beta)
     }
 
     fn residual_block(
@@ -120,7 +200,7 @@ impl KernelExec for HostBackend {
         beta_y: &[f32],
         beta_t: &[f32],
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        Ok(linalg::graphs::residual_block(x, y, t, beta_y, beta_t))
+        linalg::graphs::residual_block(x, y, t, beta_y, beta_t)
     }
 
     fn final_moments(
@@ -130,7 +210,7 @@ impl KernelExec for HostBackend {
         phi: &Matrix,
         mask: &[f32],
     ) -> Result<(Matrix, Vec<f32>)> {
-        Ok(linalg::graphs::final_moments(y_res, t_res, phi, mask))
+        linalg::graphs::final_moments(y_res, t_res, phi, mask)
     }
 
     fn final_score(
@@ -141,11 +221,11 @@ impl KernelExec for HostBackend {
         theta: &[f32],
         mask: &[f32],
     ) -> Result<Matrix> {
-        Ok(linalg::graphs::final_score(y_res, t_res, phi, theta, mask))
+        linalg::graphs::final_score(y_res, t_res, phi, theta, mask)
     }
 
     fn name(&self) -> &'static str {
-        "host"
+        "host-naive"
     }
 }
 
@@ -336,11 +416,13 @@ impl KernelExec for PjrtBackend {
     }
 }
 
-/// Build the backend selected by name: "host", "pjrt" (jnp family) or
-/// "pjrt-pallas" (L1 kernel family).
+/// Build the backend selected by name: "host" (blocked kernel core),
+/// "host-naive" (oracle loops), "pjrt" (jnp family) or "pjrt-pallas"
+/// (L1 kernel family).
 pub fn backend_by_name(name: &str) -> Result<std::sync::Arc<dyn KernelExec>> {
     match name {
         "host" => Ok(std::sync::Arc::new(HostBackend)),
+        "host-naive" => Ok(std::sync::Arc::new(NaiveHostBackend)),
         "pjrt" => Ok(std::sync::Arc::new(PjrtBackend::new(Engine::default_engine()?))),
         "pjrt-pallas" => {
             let mut e = Engine::default_engine()?;
@@ -440,6 +522,64 @@ mod tests {
     #[test]
     fn backend_by_name_resolves() {
         assert!(backend_by_name("host").is_ok());
+        assert!(backend_by_name("host-naive").is_ok());
         assert!(backend_by_name("bogus").is_err());
+    }
+
+    #[test]
+    fn blocked_host_is_bitwise_equal_to_naive_host() {
+        // the determinism contract, end to end at the KernelExec layer:
+        // tail shapes (257 rows, 19 cols — no tile multiples anywhere)
+        let h = HostBackend;
+        let nv = NaiveHostBackend;
+        let (b, d) = (257, 19);
+        let x = randm(20, b, d);
+        let mut rng = Pcg32::new(21);
+        let y: Vec<f32> = (0..b).map(|_| rng.normal_f32()).collect();
+        let t: Vec<f32> = (0..b).map(|_| if rng.bernoulli(0.4) { 1.0 } else { 0.0 }).collect();
+        let mask: Vec<f32> = (0..b).map(|i| if i % 11 == 0 { 0.0 } else { 1.0 }).collect();
+        let beta: Vec<f32> = (0..d).map(|_| 0.3 * rng.normal_f32()).collect();
+        let beta2: Vec<f32> = (0..d).map(|_| 0.3 * rng.normal_f32()).collect();
+
+        let (g1, b1, n1) = h.gram_block(&x, &y, &mask).unwrap();
+        let (g2, b2, n2) = nv.gram_block(&x, &y, &mask).unwrap();
+        assert_eq!(g1.data(), g2.data());
+        assert_eq!(b1, b2);
+        assert_eq!(n1, n2);
+
+        assert_eq!(h.predict(&x, &beta).unwrap(), nv.predict(&x, &beta).unwrap());
+        assert_eq!(h.predict_proba(&x, &beta).unwrap(), nv.predict_proba(&x, &beta).unwrap());
+
+        let (h1, c1, l1) = h.irls_block(&x, &t, &mask, &beta).unwrap();
+        let (h2, c2, l2) = nv.irls_block(&x, &t, &mask, &beta).unwrap();
+        assert_eq!(h1.data(), h2.data());
+        assert_eq!(c1, c2);
+        assert_eq!(l1, l2);
+
+        let (yr1, tr1) = h.residual_block(&x, &y, &t, &beta, &beta2).unwrap();
+        let (yr2, tr2) = nv.residual_block(&x, &y, &t, &beta, &beta2).unwrap();
+        assert_eq!(yr1, yr2);
+        assert_eq!(tr1, tr2);
+
+        let phi = randm(22, b, 2);
+        let theta = vec![0.7f32, -0.2];
+        let (m1, v1) = h.final_moments(&yr1, &tr1, &phi, &mask).unwrap();
+        let (m2, v2) = nv.final_moments(&yr2, &tr2, &phi, &mask).unwrap();
+        assert_eq!(m1.data(), m2.data());
+        assert_eq!(v1, v2);
+        let s1 = h.final_score(&yr1, &tr1, &phi, &theta, &mask).unwrap();
+        let s2 = nv.final_score(&yr2, &tr2, &phi, &theta, &mask).unwrap();
+        assert_eq!(s1.data(), s2.data());
+    }
+
+    #[test]
+    fn malformed_block_surfaces_shape_error_not_panic() {
+        let h = HostBackend;
+        let x = randm(30, 16, 4);
+        let short = vec![1.0f32; 7];
+        let err = h.gram_block(&x, &short, &short).unwrap_err();
+        assert!(matches!(err, NexusError::Shape(_)), "{err}");
+        let err = h.predict(&x, &[1.0; 3]).unwrap_err();
+        assert!(matches!(err, NexusError::Shape(_)), "{err}");
     }
 }

@@ -232,7 +232,7 @@ mod tests {
                 &[Tensor::from_matrix(&x), Tensor::vector(y.clone()), Tensor::vector(mask.clone())],
             )
             .unwrap();
-        let (g_ref, b_ref, n_ref) = linalg::graphs::gram_block(&x, &y, &mask);
+        let (g_ref, b_ref, n_ref) = linalg::graphs::gram_block(&x, &y, &mask).unwrap();
         let g = out[0].to_matrix().unwrap();
         assert!(g.max_abs_diff(&g_ref) < 1e-2, "diff={}", g.max_abs_diff(&g_ref));
         for (a, b) in out[1].data.iter().zip(&b_ref) {

@@ -1,0 +1,132 @@
+//! Determinism contract of the blocked kernel core (DESIGN.md §8).
+//!
+//! Every optimized kernel in `linalg::blocked` must be **bitwise**
+//! identical to the naive f64 oracle in `linalg`/`linalg::graphs` — at
+//! tail shapes (n, d not tile multiples), at awkward tile sizes, and at
+//! every thread count.  These properties are what lets `HostBackend`
+//! route through the blocked path without shifting a single golden
+//! value.
+
+use nexus::data::matrix::Matrix;
+use nexus::linalg;
+use nexus::linalg::blocked::{self, KernelOpts};
+use nexus::util::prop::{forall, Gen};
+
+const THREAD_SWEEP: [usize; 3] = [1, 2, 8];
+
+fn gen_block(g: &mut Gen) -> (Matrix, Vec<f32>, Vec<f32>) {
+    // deliberately awkward: n, d land anywhere, not at tile multiples
+    let n = g.usize_in(1..200);
+    let d = g.usize_in(1..24);
+    let x = Matrix::from_vec(n, d, g.vec_f32(n * d, -3.0, 3.0)).unwrap();
+    let y = g.vec_f32(n, -2.0, 2.0);
+    let mask: Vec<f32> = (0..n).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+    (x, y, mask)
+}
+
+fn gen_opts(g: &mut Gen, threads: usize) -> KernelOpts {
+    KernelOpts { threads, tile_cols: g.usize_in(1..10), tile_rows: g.usize_in(1..40) }
+}
+
+#[test]
+fn prop_gram_block_bitwise_and_thread_invariant() {
+    forall("blocked gram_block == oracle at every thread count", 60, |g| {
+        let (x, y, mask) = gen_block(g);
+        let (g0, b0, n0) = linalg::graphs::gram_block(&x, &y, &mask).unwrap();
+        for threads in THREAD_SWEEP {
+            let opts = gen_opts(g, threads);
+            let st = blocked::gram_block_with(&x, &y, &mask, &opts).unwrap();
+            assert_eq!(st.g.data(), g0.data(), "gram, threads={threads} opts={opts:?}");
+            assert_eq!(st.xty, b0, "xty, threads={threads}");
+            assert_eq!(st.n, n0, "n, threads={threads}");
+        }
+    });
+}
+
+#[test]
+fn prop_unmasked_gram_and_xt_v_bitwise() {
+    forall("blocked gram/xt_v == oracle", 60, |g| {
+        let (x, y, _) = gen_block(g);
+        let want_g = linalg::gram(&x);
+        let want_b = linalg::xt_v(&x, &y).unwrap();
+        for threads in THREAD_SWEEP {
+            let opts = gen_opts(g, threads);
+            assert_eq!(blocked::gram_with(&x, &opts).data(), want_g.data());
+            assert_eq!(blocked::xt_v_with(&x, &y, &opts).unwrap(), want_b);
+        }
+    });
+}
+
+#[test]
+fn prop_mat_vec_and_residual_bitwise() {
+    forall("blocked mat_vec/residual == oracle", 60, |g| {
+        let (x, y, _) = gen_block(g);
+        let (n, d) = (x.rows(), x.cols());
+        let t: Vec<f32> = (0..n).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+        let beta_y = g.vec_f32(d, -1.0, 1.0);
+        let beta_t = g.vec_f32(d, -1.0, 1.0);
+        let want_mv = linalg::mat_vec(&x, &beta_y).unwrap();
+        let (want_yr, want_tr) =
+            linalg::graphs::residual_block(&x, &y, &t, &beta_y, &beta_t).unwrap();
+        for threads in THREAD_SWEEP {
+            let opts = gen_opts(g, threads);
+            assert_eq!(blocked::mat_vec_with(&x, &beta_y, &opts).unwrap(), want_mv);
+            let (yr, tr) =
+                blocked::residual_block_with(&x, &y, &t, &beta_y, &beta_t, &opts).unwrap();
+            assert_eq!(yr, want_yr);
+            assert_eq!(tr, want_tr);
+        }
+    });
+}
+
+#[test]
+fn prop_irls_and_final_stage_bitwise() {
+    forall("blocked irls/final_moments/final_score == oracle", 40, |g| {
+        let (x, y, mask) = gen_block(g);
+        let (n, d) = (x.rows(), x.cols());
+        let t: Vec<f32> = (0..n).map(|_| if g.bool() { 1.0 } else { 0.0 }).collect();
+        let beta = g.vec_f32(d, -0.5, 0.5);
+        let (h0, c0, l0) = linalg::graphs::irls_block(&x, &t, &mask, &beta).unwrap();
+
+        let p = g.usize_in(1..4);
+        let phi = Matrix::from_vec(n, p, g.vec_f32(n * p, -2.0, 2.0)).unwrap();
+        let theta = g.vec_f32(p, -1.0, 1.0);
+        let t_res = g.vec_f32(n, -1.0, 1.0);
+        let (m0, v0) = linalg::graphs::final_moments(&y, &t_res, &phi, &mask).unwrap();
+        let s0 = linalg::graphs::final_score(&y, &t_res, &phi, &theta, &mask).unwrap();
+
+        for threads in THREAD_SWEEP {
+            let opts = gen_opts(g, threads);
+            let (h, c, l) = blocked::irls_block_with(&x, &t, &mask, &beta, &opts).unwrap();
+            assert_eq!(h.data(), h0.data(), "irls H, threads={threads}");
+            assert_eq!(c, c0, "irls c, threads={threads}");
+            assert_eq!(l, l0, "irls nll, threads={threads}");
+
+            let (m, v) = blocked::final_moments_with(&y, &t_res, &phi, &mask, &opts).unwrap();
+            assert_eq!(m.data(), m0.data());
+            assert_eq!(v, v0);
+            let s = blocked::final_score_with(&y, &t_res, &phi, &theta, &mask, &opts).unwrap();
+            assert_eq!(s.data(), s0.data());
+        }
+    });
+}
+
+#[test]
+fn prop_shape_mismatches_are_shape_errors() {
+    forall("malformed args surface NexusError::Shape", 30, |g| {
+        let (x, _, _) = gen_block(g);
+        let n = x.rows();
+        let bad_v = vec![0.0f32; n + 1];
+        let bad_beta = vec![0.0f32; x.cols() + 1];
+        let opts = gen_opts(g, 1);
+        for err in [
+            blocked::gram_block_with(&x, &bad_v, &bad_v, &opts).unwrap_err(),
+            blocked::xt_v_with(&x, &bad_v, &opts).unwrap_err(),
+            blocked::mat_vec_with(&x, &bad_beta, &opts).unwrap_err(),
+            linalg::xt_v(&x, &bad_v).unwrap_err(),
+            linalg::mat_vec(&x, &bad_beta).unwrap_err(),
+        ] {
+            assert!(matches!(err, nexus::NexusError::Shape(_)), "{err}");
+        }
+    });
+}
