@@ -25,7 +25,8 @@ use nexus::config::ClusterConfig;
 use nexus::data::synth::{generate, SynthConfig};
 use nexus::models::cost::CostModel;
 use nexus::models::crossfit::CrossfitConfig;
-use nexus::raylet::api::{Metrics, RayContext};
+use nexus::raylet::api::{ExecOpts, Metrics, RayContext, SpecPolicy};
+use nexus::raylet::fault::FaultPlan;
 use nexus::runtime::backend::backend_by_name;
 use nexus::util::json::Json;
 
@@ -60,6 +61,12 @@ fn record(mode: &str, workers: usize, n: usize, d: usize, m: &Metrics) -> Json {
         .set("spills", m.spills as i64)
         .set("peak_store_bytes", m.peak_store_bytes as i64)
         .set("bytes_transferred", m.bytes_transferred as i64)
+        .set("steals", m.steals as i64)
+        .set("spec_launched", m.spec_launched as i64)
+        .set("spec_wins", m.spec_wins as i64)
+        .set("spec_losses", m.spec_losses as i64)
+        .set("driver_block_bytes", m.driver_block_bytes as i64)
+        .set("shuffle_bytes", m.shuffle_bytes as i64)
         .set("cost_dollars", m.cost_dollars)
 }
 
@@ -169,6 +176,97 @@ fn main() -> nexus::Result<()> {
         ]);
     }
     tbl.print();
+
+    // ---- Part C: skewed-worker sweep (straggler + speculation) -----------
+    // One node of the 5x8 cluster runs every task 10x slower; with
+    // speculation off the makespan is hostage to that node, with it on
+    // clones of the stragglers land on healthy nodes and win the
+    // first-result race.  NEXUS_PERF_SMOKE=1 turns the comparison into a
+    // hard gate.
+    let smoke = std::env::var("NEXUS_PERF_SMOKE").is_ok();
+    {
+        let n = if quick { 10_000 } else { 100_000 };
+        let cfg = ccfg(n, d, d_pad);
+        let skew = FaultPlan { node_slow: vec![(1, 10.0)], ..FaultPlan::none() };
+        let run = |spec: SpecPolicy| -> nexus::Result<Metrics> {
+            let ctx = RayContext::sim_with(
+                cluster.clone(),
+                false,
+                ExecOpts { fault: skew.clone(), spec, ..ExecOpts::default() },
+            );
+            dml::fit_dry(&ctx, &cost, n, &cfg, 2)
+        };
+        let off = run(SpecPolicy::off())?;
+        let on = run(SpecPolicy::with_factor(2.0))?;
+        println!(
+            "\n[skew 10x on node 1] {n} x {d} on 5x8: no-spec {} vs spec {} ({:.2}x) | \
+             clones {} (wins {}, losses {}) | steals {}",
+            fmt_secs(off.makespan),
+            fmt_secs(on.makespan),
+            off.makespan / on.makespan,
+            on.spec_launched,
+            on.spec_wins,
+            on.spec_losses,
+            on.steals,
+        );
+        records.push(record("sim-skew-nospec", cluster.nodes * cluster.slots_per_node, n, d, &off));
+        records.push(record("sim-skew-spec", cluster.nodes * cluster.slots_per_node, n, d, &on));
+        if smoke && on.makespan >= off.makespan {
+            return Err(nexus::NexusError::Data(format!(
+                "perf smoke: speculation did not beat no-speculation under 10x skew \
+                 ({} >= {})",
+                fmt_secs(on.makespan),
+                fmt_secs(off.makespan)
+            )));
+        }
+    }
+
+    // ---- Part D: the shuffle stays off the driver; estimates survive ----
+    // Real (executing) runs under injected stragglers with speculation on:
+    // the repartition/split_by_fold exchange must move zero block bytes
+    // through the driver, and the estimates must stay bit-identical to a
+    // clean inline fit on every executor.
+    {
+        let (sn, sd) = (2_000, 50);
+        let sd_pad = 64;
+        let ds = generate(&SynthConfig { n: sn, d: sd, seed: 7, ..Default::default() });
+        let cfg = ccfg(sn, sd, sd_pad);
+        let base = dml::fit_with(&RayContext::inline(), kx.clone(), &cost, &ds, &cfg, 1, 2)?;
+        let straggle =
+            FaultPlan { node_slow: vec![(1, 10.0)], ..FaultPlan::with_delay(0.1, 0.005, 99) };
+        let opts = ExecOpts {
+            fault: straggle,
+            spec: SpecPolicy::with_factor(3.0),
+            ..ExecOpts::default()
+        };
+        let ctxs = [
+            ("straggle-inline", RayContext::inline_with(opts.clone())),
+            ("straggle-threads", RayContext::threads_with(3, opts.clone())),
+            ("straggle-sim", RayContext::sim_with(cluster.clone(), true, opts)),
+        ];
+        for (mode, ctx) in ctxs {
+            let fit = dml::fit_with(&ctx, kx.clone(), &cost, &ds, &cfg, 1, 2)?;
+            let m = ctx.metrics();
+            if fit.theta != base.theta || fit.ate.value != base.ate.value {
+                return Err(nexus::NexusError::Data(format!(
+                    "{mode}: straggler run changed the estimate (ATE {} vs {})",
+                    fit.ate.value, base.ate.value
+                )));
+            }
+            if m.driver_block_bytes != 0 {
+                return Err(nexus::NexusError::Data(format!(
+                    "{mode}: shuffle routed {} block bytes through the driver",
+                    m.driver_block_bytes
+                )));
+            }
+            println!(
+                "[{mode}] {sn} x {sd}: ATE bit-equal to clean inline | driver block bytes 0 | \
+                 shuffle bytes {} | clones {} (wins {})",
+                m.shuffle_bytes, m.spec_launched, m.spec_wins
+            );
+            records.push(record(mode, 3, sn, sd, &m));
+        }
+    }
 
     // append this invocation as one session so the trajectory across
     // PRs/invocations accumulates instead of being overwritten

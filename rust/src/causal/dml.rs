@@ -265,9 +265,20 @@ pub fn fit_streaming(cfg: &RunConfig) -> Result<(DmlFit, IngestReport)> {
 }
 
 /// Build the configured executor, honoring `cluster.store_cap_bytes`
-/// on every mode (not just the simulator).
+/// on every mode (not just the simulator) plus the scheduler policy
+/// knobs (`--steal`, `--speculate-factor`).
 pub fn executor_for(cfg: &RunConfig) -> RayContext {
-    let opts = ExecOpts { store_cap: cfg.cluster.store_cap(), ..Default::default() };
+    let spec = if cfg.speculate_factor > 0.0 {
+        crate::raylet::SpecPolicy::with_factor(cfg.speculate_factor)
+    } else {
+        crate::raylet::SpecPolicy::off()
+    };
+    let opts = ExecOpts {
+        store_cap: cfg.cluster.store_cap(),
+        steal: cfg.steal,
+        spec,
+        ..Default::default()
+    };
     match cfg.exec {
         ExecMode::Sequential => RayContext::inline_with(opts),
         ExecMode::Distributed => RayContext::threads_with(cfg.workers, opts),

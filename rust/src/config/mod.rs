@@ -223,6 +223,15 @@ pub struct RunConfig {
     /// machine parallelism).  Performance-only: estimates are
     /// bit-identical at every setting.
     pub kernel_threads: usize,
+    /// Locality-aware work stealing in the scheduler core (`--steal`);
+    /// on by default.  Performance-only: estimates are bit-identical
+    /// either way.
+    pub steal: bool,
+    /// Speculative straggler re-execution trigger (`--speculate-factor`):
+    /// a running task is cloned when its runtime exceeds this multiple
+    /// of the stage's running median.  0 disables speculation; useful
+    /// values are > 1.
+    pub speculate_factor: f64,
     pub seed: u64,
 }
 
@@ -245,6 +254,8 @@ impl Default for RunConfig {
             ingest_chunk: 65_536,
             shard_block: 4096,
             kernel_threads: 0,
+            steal: true,
+            speculate_factor: 0.0,
             seed: 123,
         }
     }
@@ -275,6 +286,13 @@ impl RunConfig {
         }
         if self.shard_block == 0 {
             return Err(NexusError::Config("shard_blocks must be positive".into()));
+        }
+        if self.speculate_factor < 0.0
+            || (self.speculate_factor > 0.0 && self.speculate_factor < 1.0)
+        {
+            return Err(NexusError::Config(
+                "speculate_factor must be 0 (off) or >= 1".into(),
+            ));
         }
         self.serve.validate()?;
         Ok(())
@@ -333,6 +351,12 @@ impl RunConfig {
         if let Some(x) = v.get("kernel_threads") {
             cfg.kernel_threads = x.as_usize()?;
         }
+        if let Some(x) = v.get("steal") {
+            cfg.steal = x.as_bool()?;
+        }
+        if let Some(x) = v.get("speculate_factor") {
+            cfg.speculate_factor = x.as_f64()?;
+        }
         if let Some(c) = v.get("cluster") {
             if let Some(x) = c.get("nodes") {
                 cfg.cluster.nodes = x.as_usize()?;
@@ -379,6 +403,8 @@ impl RunConfig {
             .set("ingest_chunk", self.ingest_chunk)
             .set("shard_blocks", self.shard_block)
             .set("kernel_threads", self.kernel_threads)
+            .set("steal", self.steal)
+            .set("speculate_factor", self.speculate_factor)
             .set("seed", self.seed as i64)
             .set(
                 "cluster",
@@ -417,6 +443,8 @@ mod tests {
         cfg.ingest_chunk = 8192;
         cfg.shard_block = 512;
         cfg.kernel_threads = 3;
+        cfg.steal = false;
+        cfg.speculate_factor = 2.5;
         let v = cfg.to_json();
         let back = RunConfig::from_json(&v).unwrap();
         assert_eq!(back.n, 77_000);
@@ -429,6 +457,8 @@ mod tests {
         assert_eq!(back.ingest_chunk, 8192);
         assert_eq!(back.shard_block, 512);
         assert_eq!(back.kernel_threads, 3);
+        assert!(!back.steal);
+        assert_eq!(back.speculate_factor, 2.5);
     }
 
     #[test]
@@ -448,6 +478,13 @@ mod tests {
         assert!(RunConfig { lam_y: -1.0, ..Default::default() }.validate().is_err());
         assert!(RunConfig { ingest_chunk: 0, ..Default::default() }.validate().is_err());
         assert!(RunConfig { shard_block: 0, ..Default::default() }.validate().is_err());
+        assert!(RunConfig { speculate_factor: -1.0, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(RunConfig { speculate_factor: 0.5, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(RunConfig { speculate_factor: 1.5, ..Default::default() }.validate().is_ok());
         let bad_serve = RunConfig {
             serve: ServeConfig { replicas: 0, ..Default::default() },
             ..Default::default()

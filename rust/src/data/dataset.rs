@@ -33,6 +33,7 @@ use crate::data::synth::{self, CausalDataset, SynthConfig};
 use crate::error::{NexusError, Result};
 use crate::models::distops;
 use crate::raylet::api::RayContext;
+use crate::raylet::core::ShuffleSpec;
 use crate::raylet::payload::Payload;
 use crate::raylet::task::{ObjectRef, TaskFn};
 use crate::runtime::tensor::Tensor;
@@ -452,6 +453,13 @@ impl ShardedDataset {
         self.gather_with_loc(ctx, &loc, rows, new_ids, block, label, cost_hint)
     }
 
+    /// Plan a [`ShuffleSpec`] for `rows` and submit it: the all-to-all
+    /// exchange runs store-to-store (single-source destinations are one
+    /// locality-placed task; multi-source destinations go through
+    /// per-source `shuffle:slice` tasks plus a merge), so no block bytes
+    /// ever route through the driver.  Outputs are bit-identical to the
+    /// old driver-planned single-task gather: exact row copies, same
+    /// padding / mask / valid / row ids.
     #[allow(clippy::too_many_arguments)]
     fn gather_with_loc(
         &self,
@@ -463,21 +471,15 @@ impl ShardedDataset {
         label: &str,
         cost_hint: f64,
     ) -> Result<(Vec<ObjectRef>, Vec<Vec<usize>>)> {
-        let d = self.d;
         let n_out = rows.len().div_ceil(block);
-        let mut refs = Vec::with_capacity(n_out);
+        let mut spec = ShuffleSpec::new(block, self.d);
         let mut metas = Vec::with_capacity(n_out);
         for (ci, chunk) in rows.chunks(block).enumerate() {
             let ids_chunk: Vec<usize> = match new_ids {
                 Some(ids) => ids[ci * block..ci * block + chunk.len()].to_vec(),
                 None => chunk.to_vec(),
             };
-            // dedup source blocks in first-appearance order; per output
-            // row remember (arg index, slot) for the in-task copy.
-            // O(1) lookup per row via a block-id -> arg-index table
-            let mut src: Vec<usize> = Vec::new();
-            let mut arg_of: Vec<u32> = vec![u32::MAX; self.blocks.len()];
-            let mut plan: Vec<(usize, usize)> = Vec::with_capacity(chunk.len());
+            let mut picks: Vec<(usize, usize)> = Vec::with_capacity(chunk.len());
             for &row in chunk {
                 let (bi, slot) = *loc.get(row).ok_or_else(|| {
                     NexusError::Data(format!("gather: row {row} not in this dataset"))
@@ -487,44 +489,16 @@ impl ShardedDataset {
                         "gather: row {row} not in this dataset"
                     )));
                 }
-                let bi = bi as usize;
-                let ai = if arg_of[bi] == u32::MAX {
-                    src.push(bi);
-                    arg_of[bi] = (src.len() - 1) as u32;
-                    src.len() - 1
-                } else {
-                    arg_of[bi] as usize
-                };
-                plan.push((ai, slot as usize));
+                picks.push((bi as usize, slot as usize));
             }
-            let args: Vec<ObjectRef> = src.iter().map(|&bi| self.blocks[bi]).collect();
-            let out_rows = ids_chunk.clone();
-            let f: TaskFn = Arc::new(move |args: &[&Payload]| {
-                let valid = plan.len();
-                let mut bx = Matrix::zeros(block, d);
-                let mut by = vec![0.0f32; block];
-                let mut bt = vec![0.0f32; block];
-                let mut mask = vec![0.0f32; block];
-                for (r, &(ai, slot)) in plan.iter().enumerate() {
-                    let srcb = args[ai].as_block()?;
-                    bx.row_mut(r).copy_from_slice(srcb.x.row(slot));
-                    by[r] = srcb.y[slot];
-                    bt[r] = srcb.t[slot];
-                    mask[r] = 1.0;
-                }
-                Ok(Payload::Block(RowBlock {
-                    x: bx,
-                    y: by,
-                    t: bt,
-                    mask,
-                    valid,
-                    rows: out_rows.clone(),
-                }))
-            });
-            let out_bytes = 4 * (block * d + 3 * block);
-            refs.push(ctx.submit_sized(label, args, cost_hint, out_bytes, f));
+            spec.add_dest(&picks, ids_chunk.clone());
             metas.push(ids_chunk);
         }
+        let mut submit =
+            |label: &str, args: Vec<ObjectRef>, cost: f64, out_bytes: usize, f: TaskFn| {
+                ctx.submit_sized(label, args, cost, out_bytes, f)
+            };
+        let refs = spec.submit(&self.blocks, label, cost_hint, &mut submit);
         Ok((refs, metas))
     }
 

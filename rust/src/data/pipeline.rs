@@ -18,6 +18,11 @@
 //!   that need dense ids (fold splits).
 //! * `repartition` — gathers all rows into fresh `block`-row blocks and
 //!   renumbers them densely `0..n` (a fresh partition of the row set).
+//!   Lowers onto the scheduler core's all-to-all shuffle
+//!   ([`crate::raylet::core::ShuffleSpec`] via `ShardedDataset::gather`):
+//!   blocks are exchanged store-to-store with locality-placed slice and
+//!   merge tasks, and zero block bytes route through the driver
+//!   (`Metrics::driver_block_bytes` stays 0).
 //!
 //! Terminal ops ([`Pipeline::stats`], [`Pipeline::split_by_fold`])
 //! execute the chain, then run the corresponding one-pass reduction.

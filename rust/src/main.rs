@@ -89,6 +89,13 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     if args.flag("sharded") {
         cfg.sharded = true;
     }
+    if let Some(v) = args.opt("steal") {
+        // explicit value: `--steal false` can override a config file
+        cfg.steal = !matches!(v, "0" | "false" | "off" | "no");
+    } else if args.flag("steal") {
+        cfg.steal = true;
+    }
+    cfg.speculate_factor = args.f64_or("speculate-factor", cfg.speculate_factor)?;
     cfg.validate()?;
     Ok(cfg)
 }

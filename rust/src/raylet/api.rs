@@ -15,6 +15,8 @@ use std::sync::Arc;
 
 use crate::config::ClusterConfig;
 use crate::error::Result;
+pub use crate::raylet::core::SpecPolicy;
+
 use crate::raylet::fault::FaultPlan;
 use crate::raylet::inline::InlineExec;
 use crate::raylet::payload::Payload;
@@ -46,20 +48,45 @@ pub struct Metrics {
     /// Bytes currently resident per node (workers for the thread pool,
     /// cluster nodes for sim, one entry for inline).
     pub node_residency: Vec<u64>,
+    /// Ready tasks taken by a worker/node other than the
+    /// locality-preferred one (work stealing).
+    pub steals: u64,
+    /// Speculative straggler clones launched.
+    pub spec_launched: u64,
+    /// Clones that won the first-result-wins race against the original.
+    pub spec_wins: u64,
+    /// Clones that lost the race (their work was discarded).
+    pub spec_losses: u64,
+    /// Bytes of `Payload::Block` data fetched to the driver via `get` —
+    /// must stay 0 for shuffle-lowered repartition / split_by_fold.
+    pub driver_block_bytes: u64,
+    /// Bytes committed by store-to-store shuffle exchange tasks.
+    pub shuffle_bytes: u64,
 }
 
-/// Execution options shared by every executor: the fault plan and the
-/// object-store memory cap (LRU spill-and-reconstruct).
+/// Execution options shared by every executor: the fault plan, the
+/// object-store memory cap (LRU spill-and-reconstruct), and the
+/// scheduler policy knobs (work stealing, straggler speculation).
 #[derive(Clone, Debug)]
 pub struct ExecOpts {
     pub fault: FaultPlan,
     /// Object-store byte cap; `None` = unbounded.
     pub store_cap: Option<usize>,
+    /// Locality-aware work stealing (`--steal`); on by default.
+    pub steal: bool,
+    /// Speculative straggler re-execution (`--speculate-factor`);
+    /// disabled by default ([`SpecPolicy::off`]).
+    pub spec: SpecPolicy,
 }
 
 impl Default for ExecOpts {
     fn default() -> Self {
-        ExecOpts { fault: FaultPlan::none(), store_cap: None }
+        ExecOpts {
+            fault: FaultPlan::none(),
+            store_cap: None,
+            steal: true,
+            spec: SpecPolicy::off(),
+        }
     }
 }
 
@@ -210,7 +237,12 @@ impl RayContext {
     }
 
     pub fn inline_with(opts: ExecOpts) -> RayContext {
-        RayContext::from_executor(Box::new(InlineExec::new(opts.fault, opts.store_cap)))
+        RayContext::from_executor(Box::new(InlineExec::with_policy(
+            opts.fault,
+            opts.store_cap,
+            opts.steal,
+            opts.spec,
+        )))
     }
 
     /// Real worker threads.
@@ -219,14 +251,16 @@ impl RayContext {
     }
 
     pub fn threads_with_faults(workers: usize, fault: FaultPlan) -> RayContext {
-        RayContext::threads_with(workers, ExecOpts { fault, store_cap: None })
+        RayContext::threads_with(workers, ExecOpts { fault, ..ExecOpts::default() })
     }
 
     pub fn threads_with(workers: usize, opts: ExecOpts) -> RayContext {
-        RayContext::from_executor(Box::new(ThreadPool::with_opts(
+        RayContext::from_executor(Box::new(ThreadPool::with_policy(
             workers,
             opts.fault,
             opts.store_cap,
+            opts.steal,
+            opts.spec,
         )))
     }
 
@@ -236,13 +270,13 @@ impl RayContext {
     }
 
     pub fn sim_with_faults(cfg: ClusterConfig, execute: bool, fault: FaultPlan) -> RayContext {
-        RayContext::sim_with(cfg, execute, ExecOpts { fault, store_cap: None })
+        RayContext::sim_with(cfg, execute, ExecOpts { fault, ..ExecOpts::default() })
     }
 
     pub fn sim_with(cfg: ClusterConfig, execute: bool, opts: ExecOpts) -> RayContext {
         let cap = opts.store_cap.or(cfg.store_cap());
-        RayContext::from_executor(Box::new(SimCluster::with_opts(
-            cfg, execute, opts.fault, cap,
+        RayContext::from_executor(Box::new(SimCluster::with_policy(
+            cfg, execute, opts.fault, cap, opts.steal, opts.spec,
         )))
     }
 
@@ -391,7 +425,7 @@ mod tests {
         let big_task = || -> TaskFn {
             Arc::new(|_: &[&Payload]| Ok(Payload::Floats(vec![0.0f32; 256])))
         };
-        let opts = ExecOpts { fault: FaultPlan::none(), store_cap: Some(2048) };
+        let opts = ExecOpts { store_cap: Some(2048), ..ExecOpts::default() };
         let run = |ctx: RayContext| {
             let refs: Vec<ObjectRef> =
                 (0..6).map(|_| ctx.submit("blk", vec![], 0.01, big_task())).collect();

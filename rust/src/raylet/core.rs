@@ -32,6 +32,8 @@
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::Arc;
 
+use crate::data::matrix::Matrix;
+use crate::data::partition::RowBlock;
 use crate::error::{NexusError, Result};
 use crate::raylet::fault::FaultPlan;
 use crate::raylet::payload::Payload;
@@ -54,6 +56,26 @@ pub struct CoreMetrics {
     /// Dispatch overhead seconds (queue pop -> fn start, or the
     /// simulator's per-task overhead).
     pub overhead_secs: f64,
+    /// Ready tasks taken by a node other than their locality-preferred
+    /// one (work stealing).
+    pub steals: u64,
+    /// Speculative clones launched for suspected stragglers.
+    pub spec_launched: u64,
+    /// Speculative clones that committed first (the original lost).
+    pub spec_wins: u64,
+    /// Speculative clones that lost the first-result-wins race.
+    pub spec_losses: u64,
+    /// Bytes of `Payload::Block` values fetched to the *driver* via
+    /// `get` — the anti-metric the shuffle exists to zero out for
+    /// repartition / split_by_fold.  Worker-side argument reads do not
+    /// count (they go store-to-store through `begin`).
+    pub driver_block_bytes: u64,
+    /// Bytes committed by shuffle exchange tasks (`shuffle:` labels) —
+    /// the store-to-store data volume of all-to-all repartitions.
+    pub shuffle_bytes: u64,
+    /// Cumulative bytes copied store-to-store when an argument was read
+    /// by a node it was not yet resident on (replica creation).
+    pub replica_bytes: u64,
 }
 
 /// One stored object: the value, its byte size, and which nodes hold a
@@ -93,6 +115,56 @@ pub enum Completion {
     Retry,
     /// The attempt errored with retries exhausted; the task is Failed.
     Fail,
+    /// The task was already terminal when this attempt reported — the
+    /// losing side of a first-result-wins speculation race (or a stale
+    /// simulator event).  Nothing was committed or re-counted; only the
+    /// attempt's busy seconds were charged.
+    Stale,
+}
+
+/// Speculative re-execution policy (Ray/Hadoop-style straggler
+/// mitigation).  When an attempt has been running longer than
+/// `factor ×` the running median for its stage, the driver launches a
+/// clone of it on another node; the first result wins and the loser is
+/// cancelled.  Tasks are deterministic and already retry-capable, so
+/// cloning is always safe — both attempts produce the same bits.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecPolicy {
+    /// Runtime multiple of the stage median that triggers a clone;
+    /// `0.0` disables speculation entirely.
+    pub factor: f64,
+    /// Completed samples required for a stage before its median is
+    /// trusted (too few samples → wild medians → clone storms).
+    pub min_samples: usize,
+}
+
+impl SpecPolicy {
+    /// Speculation disabled (the default).
+    pub fn off() -> SpecPolicy {
+        SpecPolicy { factor: 0.0, min_samples: 3 }
+    }
+
+    /// Speculate when an attempt exceeds `factor ×` the stage median.
+    pub fn with_factor(factor: f64) -> SpecPolicy {
+        SpecPolicy { factor, min_samples: 3 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.factor > 0.0
+    }
+}
+
+impl Default for SpecPolicy {
+    fn default() -> Self {
+        SpecPolicy::off()
+    }
+}
+
+/// Stage key for runtime statistics: the task label with ASCII digits
+/// stripped, so per-fold labels (`shard:fold0`, `shard:fold1`, ...)
+/// pool their samples into one stage.
+pub fn stage_key(label: &str) -> String {
+    label.chars().filter(|c| !c.is_ascii_digit()).collect()
 }
 
 /// The shared scheduler state machine.  Drivers wrap it in their own
@@ -103,6 +175,10 @@ pub struct SchedCore {
     lru_tick: u64,
     store: HashMap<u64, StoreEntry>,
     store_bytes: usize,
+    /// Extra bytes held by replicas beyond each object's primary copy
+    /// (`Σ (nodes.len() - 1) × bytes`).  Kept incrementally so the peak
+    /// accounts for store-to-store transfers, not just primaries.
+    replica_extra_bytes: usize,
     /// Object-store byte cap; `None` = unbounded.
     pub store_cap: Option<usize>,
     /// Task table (the lineage graph: specs are retained after Done).
@@ -110,20 +186,42 @@ pub struct SchedCore {
     /// Ready set, ordered by id for deterministic tie-breaking.
     pub ready: BTreeSet<u64>,
     pub fault: FaultPlan,
+    /// Locality-aware work stealing in [`SchedCore::pick_ready_for`];
+    /// off = the legacy greedy max-local-bytes pick.
+    pub steal: bool,
+    /// Straggler speculation policy (drivers consult it via
+    /// [`SchedCore::should_speculate`]).
+    pub spec: SpecPolicy,
+    /// Completed-attempt runtimes per stage ([`stage_key`]), feeding the
+    /// speculation median.
+    runtime_samples: HashMap<String, Vec<f64>>,
     pub metrics: CoreMetrics,
 }
 
 impl SchedCore {
     pub fn new(fault: FaultPlan, store_cap: Option<usize>) -> SchedCore {
+        SchedCore::with_policy(fault, store_cap, true, SpecPolicy::off())
+    }
+
+    pub fn with_policy(
+        fault: FaultPlan,
+        store_cap: Option<usize>,
+        steal: bool,
+        spec: SpecPolicy,
+    ) -> SchedCore {
         SchedCore {
             next_id: 1,
             lru_tick: 0,
             store: HashMap::new(),
             store_bytes: 0,
+            replica_extra_bytes: 0,
             store_cap,
             tasks: BTreeMap::new(),
             ready: BTreeSet::new(),
             fault,
+            steal,
+            spec,
+            runtime_samples: HashMap::new(),
             metrics: CoreMetrics::default(),
         }
     }
@@ -155,11 +253,20 @@ impl SchedCore {
         };
         if let Some(prev) = self.store.insert(id, entry) {
             self.store_bytes -= prev.bytes;
+            self.replica_extra_bytes -= (prev.nodes.len() - 1) * prev.bytes;
         }
         self.store_bytes += bytes;
-        self.metrics.peak_store_bytes =
-            self.metrics.peak_store_bytes.max(self.store_bytes as u64);
+        self.update_peak();
         self.evict_over_cap(id);
+    }
+
+    /// Peak accounting over ALL resident copies — primaries plus the
+    /// replicas created by store-to-store transfers.  (Replicas used to
+    /// be invisible here, under-reporting cluster memory whenever an
+    /// argument was read remotely.)
+    fn update_peak(&mut self) {
+        let total = (self.store_bytes + self.replica_extra_bytes) as u64;
+        self.metrics.peak_store_bytes = self.metrics.peak_store_bytes.max(total);
     }
 
     /// LRU spill: evict reconstructable objects until under the cap.
@@ -194,17 +301,23 @@ impl SchedCore {
             let Some(v) = victim else { return };
             let gone = self.store.remove(&v).unwrap();
             self.store_bytes -= gone.bytes;
+            self.replica_extra_bytes -= (gone.nodes.len() - 1) * gone.bytes;
             self.metrics.spills += 1;
         }
     }
 
-    /// Fetch a value (LRU touch).  `None` if absent (never produced,
-    /// dropped, or spilled).
+    /// Fetch a value to the driver (LRU touch).  `None` if absent (never
+    /// produced, dropped, or spilled).  Block payloads are charged to
+    /// `driver_block_bytes` — data-plane paths lowered onto the shuffle
+    /// must keep that counter at zero.
     pub fn value(&mut self, id: u64) -> Option<Arc<Payload>> {
         self.lru_tick += 1;
         let tick = self.lru_tick;
         let e = self.store.get_mut(&id)?;
         e.last_use = tick;
+        if matches!(e.value.as_ref(), Payload::Block(_)) {
+            self.metrics.driver_block_bytes += e.bytes as u64;
+        }
         Some(e.value.clone())
     }
 
@@ -327,22 +440,86 @@ impl SchedCore {
     /// size, crossfit-shaped DAGs fit entirely.
     const PICK_WINDOW: usize = 64;
 
-    /// Remove and return the ready task with the most argument bytes
-    /// resident on `node` (ties: lowest id), scanning the first
-    /// `PICK_WINDOW` ready ids.  This is the "most argument
-    /// bytes resident" locality policy, shared by the thread pool
-    /// (worker affinity) and usable by any future placement driver.
-    pub fn pick_ready_for(&mut self, node: usize) -> Option<u64> {
-        let mut best: Option<(usize, u64)> = None;
-        for &id in self.ready.iter().take(Self::PICK_WINDOW) {
-            let local = self.local_arg_bytes(id, node);
-            match best {
-                None => best = Some((local, id)),
-                Some((bl, _)) if local > bl => best = Some((local, id)),
-                _ => {}
+    /// Most argument bytes of `id` resident on any node OTHER than
+    /// `node` — how strongly some peer "prefers" this task.  Candidate
+    /// peers are read off the arguments' residency sets, so no node
+    /// count is needed.
+    fn best_peer_bytes(&self, id: u64, node: usize) -> usize {
+        let Some(t) = self.tasks.get(&id) else { return 0 };
+        let mut peers: BTreeSet<usize> = BTreeSet::new();
+        for a in &t.spec.args {
+            if let Some(e) = self.store.get(&a.0) {
+                for &n in &e.nodes {
+                    if n != node {
+                        peers.insert(n);
+                    }
+                }
             }
         }
-        let (_, id) = best?;
+        peers
+            .iter()
+            .map(|&n| self.local_arg_bytes(id, n))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Remove and return a ready task for `node`, scanning the first
+    /// `PICK_WINDOW` ready ids.
+    ///
+    /// With `steal` off this is the legacy greedy policy: the task with
+    /// the most argument bytes resident on `node` (ties: lowest id),
+    /// regardless of where it would rather run.
+    ///
+    /// With `steal` on (the default), tasks that prefer `node` — at
+    /// least as many argument bytes here as on any peer — are taken
+    /// first (max local bytes, ties lowest id).  Only when every window
+    /// task is better placed elsewhere does the idle node *steal*: it
+    /// takes the task with the SMALLEST peer affinity (the cheapest to
+    /// relocate, leaving well-placed work for its preferred workers) and
+    /// charges a `steals` metric.  Both modes always return a task when
+    /// one is ready (work-conserving — a worker never idles against a
+    /// non-empty ready set, which is also what makes the pool's condvar
+    /// protocol deadlock-free).
+    pub fn pick_ready_for(&mut self, node: usize) -> Option<u64> {
+        if !self.steal {
+            let mut best: Option<(usize, u64)> = None;
+            for &id in self.ready.iter().take(Self::PICK_WINDOW) {
+                let local = self.local_arg_bytes(id, node);
+                match best {
+                    None => best = Some((local, id)),
+                    Some((bl, _)) if local > bl => best = Some((local, id)),
+                    _ => {}
+                }
+            }
+            let (_, id) = best?;
+            self.ready.remove(&id);
+            return Some(id);
+        }
+        let mut home: Option<(usize, u64)> = None; // (local bytes, id), max local
+        let mut away: Option<(usize, u64)> = None; // (peer bytes, id), min peer
+        for &id in self.ready.iter().take(Self::PICK_WINDOW) {
+            let local = self.local_arg_bytes(id, node);
+            let peer = self.best_peer_bytes(id, node);
+            if local >= peer {
+                match home {
+                    None => home = Some((local, id)),
+                    Some((bl, _)) if local > bl => home = Some((local, id)),
+                    _ => {}
+                }
+            } else {
+                match away {
+                    None => away = Some((peer, id)),
+                    Some((bp, _)) if peer < bp => away = Some((peer, id)),
+                    _ => {}
+                }
+            }
+        }
+        if let Some((_, id)) = home {
+            self.ready.remove(&id);
+            return Some(id);
+        }
+        let (_, id) = away?;
+        self.metrics.steals += 1;
         self.ready.remove(&id);
         Some(id)
     }
@@ -409,15 +586,25 @@ impl SchedCore {
             return Ok(Dequeue::Retry);
         }
 
-        // pin argument values + mark them resident on the running node
+        // pin argument values + mark them resident on the running node;
+        // a newly created replica is a store-to-store transfer and is
+        // charged to the replica/peak accounting.
         let mut args = Vec::with_capacity(spec.args.len());
+        let mut copied = 0usize;
         for a in &spec.args {
             self.lru_tick += 1;
             let tick = self.lru_tick;
             let e = self.store.get_mut(&a.0).unwrap();
             e.last_use = tick;
-            e.nodes.insert(node);
+            if e.nodes.insert(node) {
+                copied += e.bytes;
+            }
             args.push(e.value.clone());
+        }
+        if copied > 0 {
+            self.replica_extra_bytes += copied;
+            self.metrics.replica_bytes += copied as u64;
+            self.update_peak();
         }
         Ok(Dequeue::Run { spec, args })
     }
@@ -498,13 +685,23 @@ impl SchedCore {
         busy: f64,
     ) -> Completion {
         self.metrics.busy_secs += busy;
+        // first-result-wins guard: a task that is already terminal was
+        // committed (or failed) by the other side of a speculation race —
+        // charge the losing attempt's time and change nothing else.
+        if self
+            .tasks
+            .get(&id)
+            .is_some_and(|t| t.status.is_terminal())
+        {
+            return Completion::Stale;
+        }
         match result {
             Ok(value) => {
                 let b = bytes.unwrap_or_else(|| value.size_bytes());
-                let dependents = {
+                let (dependents, label) = {
                     let t = self.tasks.get_mut(&id).unwrap();
                     t.status = TaskStatus::Done;
-                    std::mem::take(&mut t.dependents)
+                    (std::mem::take(&mut t.dependents), t.spec.label.clone())
                 };
                 let mut newly_ready = 0;
                 for dep in dependents {
@@ -521,9 +718,56 @@ impl SchedCore {
                 }
                 self.insert_object(id, Arc::new(value), b, node);
                 self.metrics.tasks_run += 1;
+                if label.starts_with("shuffle:") {
+                    self.metrics.shuffle_bytes += b as u64;
+                }
+                self.record_runtime(&label, busy);
                 Completion::Done { newly_ready }
             }
             Err(e) => self.record_failure(id, e.to_string()),
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // straggler speculation
+    // ---------------------------------------------------------------
+
+    /// Sample cap per stage: enough for a stable median, bounded memory.
+    const MAX_RUNTIME_SAMPLES: usize = 1024;
+
+    /// Record a successful attempt's runtime under its stage key.
+    fn record_runtime(&mut self, label: &str, secs: f64) {
+        if !self.spec.enabled() {
+            return;
+        }
+        let samples = self.runtime_samples.entry(stage_key(label)).or_default();
+        if samples.len() < Self::MAX_RUNTIME_SAMPLES {
+            samples.push(secs);
+        }
+    }
+
+    /// Running median runtime for `label`'s stage; `None` until
+    /// `spec.min_samples` attempts have completed.
+    pub fn median_runtime(&self, label: &str) -> Option<f64> {
+        let samples = self.runtime_samples.get(&stage_key(label))?;
+        if samples.len() < self.spec.min_samples.max(1) {
+            return None;
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        Some(sorted[sorted.len() / 2])
+    }
+
+    /// Should a driver clone an attempt of `label` that has been running
+    /// for `elapsed` seconds?  True when speculation is on, the stage
+    /// median is established, and the attempt exceeds `factor ×` median.
+    pub fn should_speculate(&self, label: &str, elapsed: f64) -> bool {
+        if !self.spec.enabled() {
+            return false;
+        }
+        match self.median_runtime(label) {
+            Some(med) => elapsed > self.spec.factor * med.max(f64::MIN_POSITIVE),
+            None => false,
         }
     }
 
@@ -600,6 +844,7 @@ impl SchedCore {
     pub fn drop_object(&mut self, id: u64) -> Result<()> {
         if let Some(e) = self.store.remove(&id) {
             self.store_bytes -= e.bytes;
+            self.replica_extra_bytes -= (e.nodes.len() - 1) * e.bytes;
         }
         if self.tasks.contains_key(&id) {
             self.metrics.reconstructions += 1;
@@ -621,9 +866,15 @@ impl SchedCore {
             .map(|(&id, _)| id)
             .collect();
         for id in affected {
-            let entry = self.store.get_mut(&id).unwrap();
-            entry.nodes.remove(&node);
-            if entry.nodes.is_empty() {
+            let (bytes, now_empty) = {
+                let entry = self.store.get_mut(&id).unwrap();
+                entry.nodes.remove(&node);
+                (entry.bytes, entry.nodes.is_empty())
+            };
+            if !now_empty {
+                // a surviving object lost one replica
+                self.replica_extra_bytes -= bytes;
+            } else {
                 let gone = self.store.remove(&id).unwrap();
                 self.store_bytes -= gone.bytes;
                 if self.tasks.contains_key(&id) {
@@ -679,6 +930,13 @@ impl SchedCore {
             peak_store_bytes: m.peak_store_bytes,
             busy_secs: m.busy_secs,
             overhead_secs: m.overhead_secs,
+            steals: m.steals,
+            spec_launched: m.spec_launched,
+            spec_wins: m.spec_wins,
+            spec_losses: m.spec_losses,
+            driver_block_bytes: m.driver_block_bytes,
+            shuffle_bytes: m.shuffle_bytes,
+            bytes_transferred: m.replica_bytes,
             node_residency: self.node_residency(n_nodes),
             ..Default::default()
         }
@@ -696,6 +954,192 @@ impl SchedCore {
             None
         }
     }
+}
+
+// -------------------------------------------------------------------
+// all-to-all shuffle
+// -------------------------------------------------------------------
+
+/// One output block's wire plan inside a [`ShuffleSpec`]: which source
+/// blocks feed it, and where each of its row slots comes from.
+pub struct ShuffleDest {
+    /// Distinct source block indices, first-appearance order.
+    pub srcs: Vec<usize>,
+    /// Per output slot: (index into `srcs`, slot within that source).
+    pub picks: Vec<(u32, u32)>,
+    /// Global row ids stamped onto the output block.
+    pub out_rows: Vec<usize>,
+}
+
+/// Driver-side wire plan for an all-to-all [`RowBlock`] exchange — the
+/// scheduler-level shuffle primitive `repartition` / `split_by_fold`
+/// lower onto.
+///
+/// The driver only *plans*: every byte moves store-to-store inside
+/// tasks.  A destination fed by a single source becomes one task whose
+/// argument is that source block — locality dispatch runs it on the
+/// node already holding the data, so nothing crosses the wire.  A
+/// destination fed by several sources becomes a two-phase exchange:
+/// per-source `shuffle:slice` tasks (one argument each, again placed at
+/// the data by locality) extract exactly the contributed rows into
+/// compact intermediates, and a final merge task interleaves the slices
+/// into the padded output block.  Only the compact slices — not whole
+/// source blocks — are exchanged between nodes, and their volume is
+/// what [`CoreMetrics::shuffle_bytes`] records.
+///
+/// Output blocks are bit-identical to a driver-side gather of the same
+/// rows: the copies are exact, and slot order, padding, mask, and row
+/// ids are reproduced verbatim.
+pub struct ShuffleSpec {
+    pub dests: Vec<ShuffleDest>,
+    /// Output block row capacity (blocks are zero-padded to this).
+    pub block: usize,
+    /// Stored column width.
+    pub d: usize,
+}
+
+/// Submission interface the shuffle drives — matches
+/// `RayContext::submit_sized` (label, args, cost hint, output bytes
+/// hint, task fn), so any executor can host the exchange.
+pub type SubmitFn<'a> = &'a mut dyn FnMut(&str, Vec<ObjectRef>, f64, usize, TaskFn) -> ObjectRef;
+
+impl ShuffleSpec {
+    pub fn new(block: usize, d: usize) -> ShuffleSpec {
+        ShuffleSpec { dests: Vec::new(), block, d }
+    }
+
+    /// Add one output block: `picks` gives, per output slot in order,
+    /// the (source block index, slot within source) to copy; `out_rows`
+    /// the global row ids of the block.
+    pub fn add_dest(&mut self, picks: &[(usize, usize)], out_rows: Vec<usize>) {
+        let mut srcs: Vec<usize> = Vec::new();
+        let mut compact: Vec<(u32, u32)> = Vec::with_capacity(picks.len());
+        for &(src, slot) in picks {
+            let ai = match srcs.iter().position(|&s| s == src) {
+                Some(ai) => ai,
+                None => {
+                    srcs.push(src);
+                    srcs.len() - 1
+                }
+            };
+            compact.push((ai as u32, slot as u32));
+        }
+        self.dests.push(ShuffleDest { srcs, picks: compact, out_rows });
+    }
+
+    /// Submit the exchange; returns one output ref per destination, in
+    /// destination order.
+    pub fn submit(
+        &self,
+        sources: &[ObjectRef],
+        label: &str,
+        cost_hint: f64,
+        submit: SubmitFn<'_>,
+    ) -> Vec<ObjectRef> {
+        let (block, d) = (self.block, self.d);
+        let mut refs = Vec::with_capacity(self.dests.len());
+        let out_bytes = 4 * (block * d + 3 * block);
+        for dest in &self.dests {
+            if dest.srcs.len() <= 1 {
+                // single-source (or empty) destination: one task, run at
+                // the data by locality dispatch — zero exchange.
+                let args: Vec<ObjectRef> = dest.srcs.iter().map(|&s| sources[s]).collect();
+                let plan: Vec<(u32, u32)> = dest.picks.clone();
+                let out_rows = dest.out_rows.clone();
+                let f: TaskFn = Arc::new(move |args: &[&Payload]| {
+                    let mut out = padded_block(block, d, plan.len(), &out_rows);
+                    for (r, &(ai, slot)) in plan.iter().enumerate() {
+                        copy_row(&mut out, r, args[ai as usize].as_block()?, slot as usize);
+                    }
+                    Ok(Payload::Block(out))
+                });
+                refs.push(submit(label, args, cost_hint, out_bytes, f));
+                continue;
+            }
+            // two-phase: per-source compact slices, then one merge.
+            let total = dest.picks.len().max(1);
+            let mut slice_refs = Vec::with_capacity(dest.srcs.len());
+            let mut within = vec![0u32; dest.srcs.len()];
+            let mut merge_plan: Vec<(u32, u32)> = Vec::with_capacity(dest.picks.len());
+            for &(ai, _) in &dest.picks {
+                merge_plan.push((ai, within[ai as usize]));
+                within[ai as usize] += 1;
+            }
+            for (ai, &src) in dest.srcs.iter().enumerate() {
+                let slots: Vec<u32> = dest
+                    .picks
+                    .iter()
+                    .filter(|&&(a, _)| a as usize == ai)
+                    .map(|&(_, slot)| slot)
+                    .collect();
+                let cnt = slots.len();
+                let slice_cost = cost_hint * cnt as f64 / total as f64;
+                let slice_bytes = 4 * (cnt * d + 3 * cnt);
+                let f: TaskFn = Arc::new(move |args: &[&Payload]| {
+                    let src = args[0].as_block()?;
+                    let mut out = compact_block(cnt, d);
+                    for (r, &slot) in slots.iter().enumerate() {
+                        copy_row(&mut out, r, src, slot as usize);
+                    }
+                    Ok(Payload::Block(out))
+                });
+                slice_refs.push(submit(
+                    "shuffle:slice",
+                    vec![sources[src]],
+                    slice_cost,
+                    slice_bytes,
+                    f,
+                ));
+            }
+            let out_rows = dest.out_rows.clone();
+            let f: TaskFn = Arc::new(move |args: &[&Payload]| {
+                let mut out = padded_block(block, d, merge_plan.len(), &out_rows);
+                for (r, &(ai, slot)) in merge_plan.iter().enumerate() {
+                    copy_row(&mut out, r, args[ai as usize].as_block()?, slot as usize);
+                }
+                Ok(Payload::Block(out))
+            });
+            refs.push(submit(label, slice_refs, cost_hint, out_bytes, f));
+        }
+        refs
+    }
+}
+
+/// Fresh zero-padded output block: `valid` real rows out of `block`
+/// capacity, mask pre-set for the real rows, global ids stamped.
+fn padded_block(block: usize, d: usize, valid: usize, out_rows: &[usize]) -> RowBlock {
+    let mut mask = vec![0.0f32; block];
+    for m in mask.iter_mut().take(valid) {
+        *m = 1.0;
+    }
+    RowBlock {
+        x: Matrix::zeros(block, d),
+        y: vec![0.0f32; block],
+        t: vec![0.0f32; block],
+        mask,
+        valid,
+        rows: out_rows.to_vec(),
+    }
+}
+
+/// Compact (unpadded) slice block: exactly `cnt` rows, no global ids —
+/// a shuffle wire intermediate, never consumed by estimators.
+fn compact_block(cnt: usize, d: usize) -> RowBlock {
+    RowBlock {
+        x: Matrix::zeros(cnt, d),
+        y: vec![0.0f32; cnt],
+        t: vec![0.0f32; cnt],
+        mask: vec![1.0f32; cnt],
+        valid: cnt,
+        rows: Vec::new(),
+    }
+}
+
+/// Copy one row (x row + y/t scalars) from `src[slot]` into `out[r]`.
+fn copy_row(out: &mut RowBlock, r: usize, src: &RowBlock, slot: usize) {
+    out.x.row_mut(r).copy_from_slice(src.x.row(slot));
+    out.y[r] = src.y[slot];
+    out.t[r] = src.t[slot];
 }
 
 #[cfg(test)]
@@ -794,5 +1238,230 @@ mod tests {
         assert_eq!(core.metrics.reconstructions, 1);
         run_to_quiescence(&mut core);
         assert!(core.has_object(a.0));
+    }
+
+    #[test]
+    fn replica_transfers_count_in_peak_and_transfer_bytes() {
+        // regression: a store-to-store replica (arg read by a remote
+        // node) must raise peak_store_bytes and replica_bytes.
+        let mut core = SchedCore::new(FaultPlan::none(), None);
+        let a = core.put(Payload::Floats(vec![0.0f32; 100]), 400, 0);
+        assert_eq!(core.metrics.peak_store_bytes, 400);
+        let t = core.submit("consume", vec![a], 0.0, val(1.0));
+        // run the consumer on node 1: the 400-byte arg is replicated
+        assert_eq!(core.pick_ready_for(1), Some(t.0));
+        match core.begin(t.0, 1).unwrap() {
+            Dequeue::Run { .. } => {}
+            _ => panic!("expected Run"),
+        }
+        assert_eq!(core.metrics.replica_bytes, 400);
+        assert!(
+            core.metrics.peak_store_bytes >= 800,
+            "peak must count both copies, got {}",
+            core.metrics.peak_store_bytes
+        );
+        // both nodes now appear in residency
+        let res = core.node_residency(2);
+        assert_eq!(res[0], 400);
+        assert_eq!(res[1], 400);
+        // losing the replica (not the primary) shrinks the live total
+        core.complete(t.0, 1, Ok(Payload::Scalar(1.0)), None, 0.0);
+        core.drop_node_replicas(1).unwrap();
+        assert!(core.has_object(a.0));
+        assert_eq!(core.node_residency(2)[1], 0);
+    }
+
+    #[test]
+    fn steal_prefers_home_tasks_then_cheapest_remote() {
+        let mut core = SchedCore::new(FaultPlan::none(), None);
+        assert!(core.steal, "stealing is the default");
+        let big = core.put(Payload::Floats(vec![0.0f32; 100]), 400, 1);
+        let small = core.put(Payload::Scalar(1.0), 8, 1);
+        let t_big = core.submit("uses-big", vec![big], 0.0, val(0.0));
+        let t_small = core.submit("uses-small", vec![small], 0.0, val(0.0));
+        // both tasks prefer node 1; idle node 0 steals the CHEAPEST one
+        assert_eq!(core.pick_ready_for(0), Some(t_small.0));
+        assert_eq!(core.metrics.steals, 1);
+        // node 1 keeps its well-placed task, no steal counted
+        assert_eq!(core.pick_ready_for(1), Some(t_big.0));
+        assert_eq!(core.metrics.steals, 1);
+    }
+
+    #[test]
+    fn steal_off_reproduces_greedy_pick() {
+        let mut core =
+            SchedCore::with_policy(FaultPlan::none(), None, false, SpecPolicy::off());
+        let big = core.put(Payload::Floats(vec![0.0f32; 100]), 400, 1);
+        let t_big = core.submit("uses-big", vec![big], 0.0, val(0.0));
+        let t_none = core.submit("no-args", vec![], 0.0, val(0.0));
+        // legacy greedy: node 0 has no local bytes for either, takes the
+        // lowest id — even though t_big is better placed on node 1.
+        assert_eq!(core.pick_ready_for(0), Some(t_big.0));
+        assert_eq!(core.metrics.steals, 0);
+        assert_eq!(core.pick_ready_for(0), Some(t_none.0));
+    }
+
+    #[test]
+    fn speculation_median_and_trigger() {
+        let mut core = SchedCore::with_policy(
+            FaultPlan::none(),
+            None,
+            true,
+            SpecPolicy::with_factor(4.0),
+        );
+        assert!(!core.should_speculate("stage:x", 100.0), "no samples yet");
+        for i in 0..4 {
+            let r = core.submit("stage:x0", vec![], 0.0, val(i as f64));
+            let id = core.pick_ready_for(0).unwrap();
+            assert_eq!(id, r.0);
+            match core.begin(id, 0).unwrap() {
+                Dequeue::Run { spec, args } => {
+                    let borrowed: Vec<&Payload> = args.iter().map(|a| a.as_ref()).collect();
+                    let result = (spec.func)(&borrowed);
+                    core.complete(id, 0, result, None, 1.0);
+                }
+                _ => panic!("expected Run"),
+            }
+        }
+        // four 1.0s samples under the digit-stripped key "stage:x"
+        assert_eq!(core.median_runtime("stage:x3"), Some(1.0));
+        assert!(core.should_speculate("stage:x1", 4.5));
+        assert!(!core.should_speculate("stage:x1", 3.5));
+        assert!(!core.should_speculate("stage:other", 100.0), "unknown stage");
+    }
+
+    #[test]
+    fn duplicate_completion_is_stale_and_commits_once() {
+        let mut core = SchedCore::new(FaultPlan::none(), None);
+        let r = core.submit("raced", vec![], 0.0, val(7.0));
+        let id = core.pick_ready_for(0).unwrap();
+        let spec = match core.begin(id, 0).unwrap() {
+            Dequeue::Run { spec, .. } => spec,
+            _ => panic!("expected Run"),
+        };
+        // first result wins ...
+        match core.complete(id, 0, (spec.func)(&[]), None, 1.0) {
+            Completion::Done { .. } => {}
+            _ => panic!("expected Done"),
+        }
+        assert_eq!(core.metrics.tasks_run, 1);
+        // ... the loser is stale: charged, not committed, not re-counted
+        match core.complete(id, 1, (spec.func)(&[]), None, 2.0) {
+            Completion::Stale => {}
+            _ => panic!("expected Stale"),
+        }
+        assert_eq!(core.metrics.tasks_run, 1);
+        assert!((core.metrics.busy_secs - 3.0).abs() < 1e-12);
+        let v = core.value(r.0).unwrap();
+        assert!(matches!(v.as_ref(), Payload::Scalar(s) if *s == 7.0));
+    }
+
+    #[test]
+    fn stage_key_strips_digits() {
+        assert_eq!(stage_key("shard:fold3"), "shard:fold");
+        assert_eq!(stage_key("final:moments"), "final:moments");
+        assert_eq!(stage_key("nuisance:y:fold12"), "nuisance:y:fold");
+    }
+
+    #[test]
+    fn driver_block_bytes_counts_only_block_gets() {
+        let mut core = SchedCore::new(FaultPlan::none(), None);
+        let s = core.put(Payload::Scalar(1.0), 8, 0);
+        let b = core.put(
+            Payload::Block(compact_block(4, 3)),
+            4 * (4 * 3 + 3 * 4),
+            0,
+        );
+        core.value(s.0).unwrap();
+        assert_eq!(core.metrics.driver_block_bytes, 0);
+        core.value(b.0).unwrap();
+        assert_eq!(core.metrics.driver_block_bytes, 4 * (4 * 3 + 3 * 4) as u64);
+    }
+
+    #[test]
+    fn shuffle_spec_plans_slices_and_merges() {
+        // two sources, one dest interleaving rows from both: the plan
+        // must emit 2 slice tasks + 1 merge, and the labels must let the
+        // core account shuffle_bytes.
+        let mut core = SchedCore::new(FaultPlan::none(), None);
+        let mk = |base: f32| {
+            let mut blk = compact_block(2, 2);
+            for r in 0..2 {
+                blk.x.row_mut(r)[0] = base + r as f32;
+                blk.y[r] = base + 10.0 + r as f32;
+                blk.t[r] = base + 20.0 + r as f32;
+            }
+            blk
+        };
+        let s0 = core.put(Payload::Block(mk(0.0)), 64, 0);
+        let s1 = core.put(Payload::Block(mk(100.0)), 64, 1);
+        let mut spec = ShuffleSpec::new(4, 2);
+        // interleave: s1[1], s0[0], s1[0]
+        spec.add_dest(&[(1, 1), (0, 0), (1, 0)], vec![9, 7, 8]);
+        let sources = vec![s0, s1];
+        let mut labels: Vec<String> = Vec::new();
+        let refs = {
+            let core = &mut core;
+            let labels = &mut labels;
+            let mut submit =
+                |label: &str, args: Vec<ObjectRef>, cost: f64, _bytes: usize, f: TaskFn| {
+                    labels.push(label.to_string());
+                    core.submit(label, args, cost, f)
+                };
+            spec.submit(&sources, "shard:test", 0.0, &mut submit)
+        };
+        assert_eq!(refs.len(), 1);
+        assert_eq!(labels, vec!["shuffle:slice", "shuffle:slice", "shard:test"]);
+        run_to_quiescence(&mut core);
+        let out = core.value(refs[0].0).unwrap();
+        let blk = match out.as_ref() {
+            Payload::Block(b) => b,
+            _ => panic!("expected block"),
+        };
+        assert_eq!(blk.valid, 3);
+        assert_eq!(blk.rows, vec![9, 7, 8]);
+        assert_eq!(blk.mask, vec![1.0, 1.0, 1.0, 0.0]);
+        // interleaved values: s1 row1, s0 row0, s1 row0
+        assert_eq!(blk.y[0], 111.0);
+        assert_eq!(blk.y[1], 10.0);
+        assert_eq!(blk.y[2], 110.0);
+        assert_eq!(blk.x.row(0)[0], 101.0);
+        assert_eq!(blk.x.row(2)[0], 100.0);
+        assert!(core.metrics.shuffle_bytes > 0, "slice commits must be counted");
+    }
+
+    #[test]
+    fn shuffle_single_source_dest_is_one_task() {
+        let mut core = SchedCore::new(FaultPlan::none(), None);
+        let mut blk = compact_block(3, 2);
+        for r in 0..3 {
+            blk.y[r] = r as f32;
+        }
+        let s0 = core.put(Payload::Block(blk), 64, 0);
+        let mut spec = ShuffleSpec::new(4, 2);
+        spec.add_dest(&[(0, 2), (0, 0)], vec![5, 6]);
+        let mut n_tasks = 0usize;
+        let refs = {
+            let core = &mut core;
+            let n = &mut n_tasks;
+            let mut submit =
+                |label: &str, args: Vec<ObjectRef>, cost: f64, _bytes: usize, f: TaskFn| {
+                    *n += 1;
+                    core.submit(label, args, cost, f)
+                };
+            spec.submit(&[s0], "shard:one", 0.0, &mut submit)
+        };
+        assert_eq!(n_tasks, 1, "single-source dest needs no slice phase");
+        run_to_quiescence(&mut core);
+        let out = core.value(refs[0].0).unwrap();
+        let blk = match out.as_ref() {
+            Payload::Block(b) => b,
+            _ => panic!("expected block"),
+        };
+        assert_eq!(blk.valid, 2);
+        assert_eq!(blk.y[0], 2.0);
+        assert_eq!(blk.y[1], 0.0);
+        assert_eq!(blk.rows, vec![5, 6]);
+        assert_eq!(core.metrics.shuffle_bytes, 0, "no exchange happened");
     }
 }

@@ -3,6 +3,14 @@
 //! Thread mode: per-attempt crash probability, drawn deterministically
 //! from (seed, task id, attempt) so failing runs are reproducible.
 //! Sim mode: scripted whole-node failures at virtual times.
+//!
+//! Beyond crashes, the plan can inject **stragglers**: a per-attempt
+//! `delay` fault (the attempt still succeeds, just late — modelling a
+//! sick worker, GC pause, or noisy neighbour) and per-node slowdown
+//! multipliers for the simulator (a whole node running on degraded
+//! hardware).  Both are deterministic in the seed, and both interact
+//! with speculative re-execution: a delayed original loses the
+//! first-result-wins race to its clone.
 
 /// Failure policy shared by both executors.
 #[derive(Clone, Debug)]
@@ -15,16 +23,40 @@ pub struct FaultPlan {
     pub seed: u64,
     /// (virtual time, node id) whole-node failures — sim mode only.
     pub node_failures: Vec<(f64, usize)>,
+    /// Probability a task *attempt* is delayed (straggler injection).
+    /// The attempt still succeeds — it just takes `delay_secs` longer.
+    pub delay_prob: f64,
+    /// Extra seconds added to a delayed attempt (threads: real sleep;
+    /// sim: added to the virtual duration).
+    pub delay_secs: f64,
+    /// (node id, multiplier) per-node duration multipliers — sim mode
+    /// only.  A `(1, 10.0)` entry makes node 1 run every task 10× slower,
+    /// the skewed-worker scenario speculation exists to absorb.
+    pub node_slow: Vec<(usize, f64)>,
 }
 
 impl FaultPlan {
     /// No failures (the default for production runs).
     pub fn none() -> FaultPlan {
-        FaultPlan { fail_prob: 0.0, max_retries: 3, seed: 0, node_failures: vec![] }
+        FaultPlan {
+            fail_prob: 0.0,
+            max_retries: 3,
+            seed: 0,
+            node_failures: vec![],
+            delay_prob: 0.0,
+            delay_secs: 0.0,
+            node_slow: vec![],
+        }
     }
 
     pub fn with_prob(fail_prob: f64, max_retries: u32, seed: u64) -> FaultPlan {
-        FaultPlan { fail_prob, max_retries, seed, node_failures: vec![] }
+        FaultPlan { fail_prob, seed, max_retries, ..FaultPlan::none() }
+    }
+
+    /// Straggler-only plan: each attempt is delayed by `delay_secs` with
+    /// probability `delay_prob` (no crashes).
+    pub fn with_delay(delay_prob: f64, delay_secs: f64, seed: u64) -> FaultPlan {
+        FaultPlan { delay_prob, delay_secs, seed, ..FaultPlan::none() }
     }
 
     /// Deterministic crash decision for (task, attempt).
@@ -34,6 +66,36 @@ impl FaultPlan {
         }
         let h = splitmix(self.seed ^ task_id.wrapping_mul(0x9E3779B97F4A7C15) ^ (attempt as u64) << 32);
         (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < self.fail_prob
+    }
+
+    /// Deterministic straggler decision for (task, attempt): extra
+    /// seconds this attempt takes (0.0 = not delayed).  Drawn from a
+    /// different stream than [`Self::should_fail`] so crash and delay
+    /// injection are independent.
+    pub fn delay_for(&self, task_id: u64, attempt: u32) -> f64 {
+        if self.delay_prob <= 0.0 || self.delay_secs <= 0.0 {
+            return 0.0;
+        }
+        let h = splitmix(
+            self.seed
+                ^ 0xD1B54A32D192ED03u64
+                ^ task_id.wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (attempt as u64) << 32,
+        );
+        if (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < self.delay_prob {
+            self.delay_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Per-node duration multiplier (sim mode); 1.0 when unlisted.
+    pub fn node_slowdown(&self, node: usize) -> f64 {
+        self.node_slow
+            .iter()
+            .find(|(n, _)| *n == node)
+            .map(|(_, m)| *m)
+            .unwrap_or(1.0)
     }
 }
 
@@ -53,6 +115,7 @@ mod tests {
     fn none_never_fails() {
         let f = FaultPlan::none();
         assert!((0..1000).all(|i| !f.should_fail(i, 0)));
+        assert!((0..1000).all(|i| f.delay_for(i, 0) == 0.0));
     }
 
     #[test]
@@ -78,5 +141,40 @@ mod tests {
             .filter(|&i| f.should_fail(i, 0) != f.should_fail(i, 1))
             .count();
         assert!(diff > 50, "{diff}");
+    }
+
+    #[test]
+    fn delay_is_deterministic_and_rate_correct() {
+        let f = FaultPlan::with_delay(0.25, 2.0, 13);
+        let a: Vec<f64> = (0..200).map(|i| f.delay_for(i, 0)).collect();
+        let b: Vec<f64> = (0..200).map(|i| f.delay_for(i, 0)).collect();
+        assert_eq!(a, b);
+        let hit = (0..10_000).filter(|&i| f.delay_for(i, 0) > 0.0).count();
+        assert!((hit as f64 / 10_000.0 - 0.25).abs() < 0.03, "{hit}");
+    }
+
+    #[test]
+    fn delay_stream_independent_of_crash_stream() {
+        // same seed + prob: the crash and delay decisions must not be
+        // the same bit for every task (different salts).
+        let f = FaultPlan {
+            fail_prob: 0.5,
+            delay_prob: 0.5,
+            delay_secs: 1.0,
+            seed: 21,
+            ..FaultPlan::none()
+        };
+        let diff = (0..200)
+            .filter(|&i| f.should_fail(i, 0) != (f.delay_for(i, 0) > 0.0))
+            .count();
+        assert!(diff > 50, "{diff}");
+    }
+
+    #[test]
+    fn node_slowdown_lookup() {
+        let f = FaultPlan { node_slow: vec![(1, 10.0)], ..FaultPlan::none() };
+        assert_eq!(f.node_slowdown(0), 1.0);
+        assert_eq!(f.node_slowdown(1), 10.0);
+        assert_eq!(f.node_slowdown(2), 1.0);
     }
 }

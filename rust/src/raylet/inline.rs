@@ -14,7 +14,7 @@ use std::time::Instant;
 
 use crate::error::{NexusError, Result};
 use crate::raylet::api::Metrics;
-use crate::raylet::core::{Dequeue, SchedCore};
+use crate::raylet::core::{Dequeue, SchedCore, SpecPolicy};
 use crate::raylet::fault::FaultPlan;
 use crate::raylet::payload::Payload;
 use crate::raylet::task::{ObjectRef, TaskFn, TaskStatus};
@@ -26,7 +26,23 @@ pub struct InlineExec {
 
 impl InlineExec {
     pub fn new(fault: FaultPlan, store_cap: Option<usize>) -> InlineExec {
-        InlineExec { core: Mutex::new(SchedCore::new(fault, store_cap)) }
+        InlineExec::with_policy(fault, store_cap, true, SpecPolicy::off())
+    }
+
+    /// Policy-threading constructor for API uniformity with the other
+    /// executors.  On a single caller thread stealing changes nothing
+    /// (there is no second queue to steal from) and speculation never
+    /// triggers (nothing runs concurrently with the median tracker),
+    /// but accepting the knobs keeps `ExecOpts` handling uniform.
+    /// Inline also ignores `delay` faults: the sequential baseline has
+    /// no straggler concept, and delays never change task values.
+    pub fn with_policy(
+        fault: FaultPlan,
+        store_cap: Option<usize>,
+        steal: bool,
+        spec: SpecPolicy,
+    ) -> InlineExec {
+        InlineExec { core: Mutex::new(SchedCore::with_policy(fault, store_cap, steal, spec)) }
     }
 
     /// Run every ready task to quiescence on the calling thread.

@@ -47,7 +47,7 @@ pub mod fault;
 pub mod actor;
 pub mod api;
 
-pub use api::{ExecOpts, Executor, Metrics, RayContext};
+pub use api::{ExecOpts, Executor, Metrics, RayContext, SpecPolicy};
 pub use fault::FaultPlan;
 pub use payload::Payload;
 pub use task::{ObjectRef, TaskFn};

@@ -24,27 +24,70 @@
 //! The dequeue-time argument check in [`SchedCore::begin`] makes
 //! reconstruction safe against counter drift: a task only runs when all
 //! its inputs are actually present.
+//!
+//! **Work stealing**: with the core's steal policy on (default), an
+//! idle worker whose window holds only tasks preferred by busier
+//! workers takes the cheapest-to-relocate one instead of idling —
+//! see [`SchedCore::pick_ready_for`].
+//!
+//! **Speculative re-execution**: every dispatched attempt registers in
+//! a running-task map; an idle worker that finds an attempt exceeding
+//! the [`SpecPolicy`] threshold (`factor ×` the stage's median
+//! runtime) re-executes a clone of it against the same pinned
+//! arguments.  The first finisher commits through the registry under
+//! the pool lock; the loser's result is discarded and only its busy
+//! seconds are charged — an object is never committed twice (the core's
+//! `Completion::Stale` guard backstops this).  Clones skip crash and
+//! delay injection: those model the sick original attempt.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{NexusError, Result};
 use crate::raylet::api::Metrics;
-use crate::raylet::core::{Completion, Dequeue, SchedCore};
+use crate::raylet::core::{Completion, Dequeue, SchedCore, SpecPolicy};
 use crate::raylet::fault::FaultPlan;
 use crate::raylet::payload::Payload;
-use crate::raylet::task::{ObjectRef, TaskFn, TaskStatus};
+use crate::raylet::task::{ObjectRef, TaskFn, TaskSpec, TaskStatus};
+
+/// A currently-executing attempt, registered so idle workers can spot
+/// stragglers and race a clone against them (first result wins).
+struct RunInfo {
+    spec: TaskSpec,
+    /// Argument values pinned at dispatch — a clone reuses them, so
+    /// speculation never waits on the store.
+    args: Vec<Arc<Payload>>,
+    /// Attempt number this entry belongs to; a stale finisher from an
+    /// earlier attempt must not commit over a newer one.
+    attempt: u32,
+    started: Instant,
+    /// A clone has been launched; at most one per attempt.
+    speculated: bool,
+}
+
+/// Core + the running-attempt registry, under ONE lock: the
+/// first-result-wins race is decided by whoever removes the registry
+/// entry while holding it.
+struct PoolState {
+    core: SchedCore,
+    running: HashMap<u64, RunInfo>,
+}
 
 struct Shared {
-    core: Mutex<SchedCore>,
+    state: Mutex<PoolState>,
     /// Wakes workers when ready tasks appear / shutdown flips.
     work_cv: Condvar,
     /// Wakes getters when objects complete or fail.
     done_cv: Condvar,
     shutdown: AtomicBool,
 }
+
+/// How long an idle worker sleeps between straggler scans when
+/// speculation is on (plain untimed wait when it is off).
+const SPEC_SCAN_INTERVAL: Duration = Duration::from_millis(5);
 
 /// The thread-pool executor.
 pub struct ThreadPool {
@@ -65,8 +108,23 @@ impl ThreadPool {
     /// Full-control constructor: fault plan + object-store byte cap
     /// (LRU spill-and-reconstruct; `None` = unbounded).
     pub fn with_opts(workers: usize, fault: FaultPlan, store_cap: Option<usize>) -> ThreadPool {
+        ThreadPool::with_policy(workers, fault, store_cap, true, SpecPolicy::off())
+    }
+
+    /// Constructor with scheduling policy: work stealing and straggler
+    /// speculation on top of [`ThreadPool::with_opts`].
+    pub fn with_policy(
+        workers: usize,
+        fault: FaultPlan,
+        store_cap: Option<usize>,
+        steal: bool,
+        spec: SpecPolicy,
+    ) -> ThreadPool {
         let shared = Arc::new(Shared {
-            core: Mutex::new(SchedCore::new(fault, store_cap)),
+            state: Mutex::new(PoolState {
+                core: SchedCore::with_policy(fault, store_cap, steal, spec),
+                running: HashMap::new(),
+            }),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
@@ -91,8 +149,8 @@ impl ThreadPool {
     }
 
     pub fn put_sized(&self, value: Payload, bytes: usize) -> ObjectRef {
-        let mut core = self.shared.core.lock().unwrap();
-        core.put(value, bytes, 0)
+        let mut st = self.shared.state.lock().unwrap();
+        st.core.put(value, bytes, 0)
     }
 
     /// Submit a task; returns the ref of its (future) output.
@@ -103,10 +161,10 @@ impl ThreadPool {
         cost_hint: f64,
         func: TaskFn,
     ) -> ObjectRef {
-        let mut core = self.shared.core.lock().unwrap();
-        let out = core.submit(label, args, cost_hint, func);
-        let ready = core.ready.contains(&out.0);
-        drop(core);
+        let mut st = self.shared.state.lock().unwrap();
+        let out = st.core.submit(label, args, cost_hint, func);
+        let ready = st.core.ready.contains(&out.0);
+        drop(st);
         if ready {
             self.shared.work_cv.notify_one();
         }
@@ -117,12 +175,12 @@ impl ThreadPool {
     /// failed).  An object that was produced once but lost (dropped or
     /// spilled) is reconstructed through lineage transparently.
     pub fn get(&self, r: &ObjectRef) -> Result<Arc<Payload>> {
-        let mut core = self.shared.core.lock().unwrap();
+        let mut st = self.shared.state.lock().unwrap();
         loop {
-            if let Some(v) = core.value(r.0) {
+            if let Some(v) = st.core.value(r.0) {
                 return Ok(v);
             }
-            let status = core.tasks.get(&r.0).map(|t| t.status.clone());
+            let status = st.core.tasks.get(&r.0).map(|t| t.status.clone());
             match status {
                 None => {
                     return Err(NexusError::Raylet(format!(
@@ -131,16 +189,16 @@ impl ThreadPool {
                     )))
                 }
                 Some(TaskStatus::Failed(_)) => {
-                    return Err(core.failure_error(r.0).unwrap());
+                    return Err(st.core.failure_error(r.0).unwrap());
                 }
                 Some(TaskStatus::Done) => {
                     // produced once but spilled/lost: rebuild via lineage
-                    core.reclaim_if_spilled(r.0)?;
+                    st.core.reclaim_if_spilled(r.0)?;
                     self.shared.work_cv.notify_all();
                 }
                 _ => {}
             }
-            core = self.shared.done_cv.wait(core).unwrap();
+            st = self.shared.done_cv.wait(st).unwrap();
         }
     }
 
@@ -156,16 +214,16 @@ impl ThreadPool {
     /// output).  The object is removed; its producer re-queues
     /// immediately and a future `get` sees the reconstructed value.
     pub fn drop_object(&self, r: &ObjectRef) -> Result<()> {
-        let mut core = self.shared.core.lock().unwrap();
-        let res = core.drop_object(r.0);
-        drop(core);
+        let mut st = self.shared.state.lock().unwrap();
+        let res = st.core.drop_object(r.0);
+        drop(st);
         self.shared.work_cv.notify_all();
         res
     }
 
     pub fn metrics(&self) -> Metrics {
-        let core = self.shared.core.lock().unwrap();
-        core.base_metrics(self.workers.len())
+        let st = self.shared.state.lock().unwrap();
+        st.core.base_metrics(self.workers.len())
     }
 
     pub fn workers(&self) -> usize {
@@ -183,71 +241,199 @@ impl Drop for ThreadPool {
     }
 }
 
+/// A speculative clone of a suspected-straggler attempt, lifted out of
+/// the registry by an idle worker.
+struct CloneJob {
+    id: u64,
+    attempt: u32,
+    spec: TaskSpec,
+    args: Vec<Arc<Payload>>,
+}
+
+enum Job {
+    /// A fresh ready task (normal dispatch).
+    Fresh(u64),
+    /// A speculative re-execution of a running attempt.
+    Clone(CloneJob),
+}
+
+/// Scan the running registry (lowest id first, deterministic) for an
+/// attempt that has outlived `factor ×` its stage's median runtime and
+/// has not been speculated yet; mark it and hand back a clone job.
+fn speculation_candidate(st: &mut PoolState) -> Option<CloneJob> {
+    let mut ids: Vec<u64> = st.running.keys().copied().collect();
+    ids.sort_unstable();
+    for id in ids {
+        let (label, elapsed, speculated) = {
+            let info = &st.running[&id];
+            (
+                info.spec.label.clone(),
+                info.started.elapsed().as_secs_f64(),
+                info.speculated,
+            )
+        };
+        if speculated || !st.core.should_speculate(&label, elapsed) {
+            continue;
+        }
+        st.core.metrics.spec_launched += 1;
+        let info = st.running.get_mut(&id).unwrap();
+        info.speculated = true;
+        return Some(CloneJob {
+            id,
+            attempt: info.attempt,
+            spec: info.spec.clone(),
+            args: info.args.clone(),
+        });
+    }
+    None
+}
+
+/// Commit one finished attempt (original or clone) under the
+/// first-result-wins rule: whoever still finds its registry entry owns
+/// the commit; the other side only charges its busy seconds.
+fn commit_attempt(
+    shared: &Shared,
+    worker: usize,
+    id: u64,
+    attempt: u32,
+    result: Result<Payload>,
+    elapsed: f64,
+    is_clone: bool,
+) {
+    let mut st = shared.state.lock().unwrap();
+    if st.core.spec.enabled() {
+        let owns = matches!(st.running.get(&id), Some(info) if info.attempt == attempt);
+        if !owns {
+            // the race is already decided (or the task moved to a newer
+            // attempt): this side lost — charge it, commit nothing.
+            st.core.metrics.busy_secs += elapsed;
+            if is_clone {
+                st.core.metrics.spec_losses += 1;
+            }
+            return;
+        }
+        st.running.remove(&id);
+        if is_clone {
+            st.core.metrics.spec_wins += 1;
+        }
+    }
+    match st.core.complete(id, worker, result, None, elapsed) {
+        Completion::Done { newly_ready } => {
+            drop(st);
+            if newly_ready > 0 {
+                shared.work_cv.notify_all();
+            }
+            shared.done_cv.notify_all();
+        }
+        Completion::Retry => {
+            drop(st);
+            shared.work_cv.notify_one();
+        }
+        Completion::Fail | Completion::Stale => {
+            drop(st);
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
 fn worker_loop(shared: Arc<Shared>, worker: usize) {
     loop {
-        // -------- dequeue (locality-aware) --------
-        let mut core = shared.core.lock().unwrap();
-        let id = loop {
-            if let Some(id) = core.pick_ready_for(worker) {
-                break id;
+        // -------- dequeue (locality-aware, steal-capable) --------
+        let mut st = shared.state.lock().unwrap();
+        let job = loop {
+            if let Some(id) = st.core.pick_ready_for(worker) {
+                break Job::Fresh(id);
             }
             if shared.shutdown.load(Ordering::SeqCst) {
                 return;
             }
-            core = shared.work_cv.wait(core).unwrap();
+            if st.core.spec.enabled() {
+                // idle + speculation on: look for a straggler to clone;
+                // otherwise nap briefly so elapsed times keep being
+                // re-checked (stragglers reveal themselves over time,
+                // not via notifications).
+                if let Some(clone) = speculation_candidate(&mut st) {
+                    break Job::Clone(clone);
+                }
+                let (guard, _timeout) = shared
+                    .work_cv
+                    .wait_timeout(st, SPEC_SCAN_INTERVAL)
+                    .unwrap();
+                st = guard;
+            } else {
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+
+        let id = match job {
+            Job::Clone(clone) => {
+                // -------- speculative re-execution (lock released) ----
+                // No begin(): the original already passed the dequeue
+                // gate; injected crashes and delays model the sick
+                // original attempt, so the clone skips both.
+                drop(st);
+                let borrowed: Vec<&Payload> = clone.args.iter().map(|a| a.as_ref()).collect();
+                let run_start = Instant::now();
+                let result = (clone.spec.func)(&borrowed);
+                let elapsed = run_start.elapsed().as_secs_f64();
+                commit_attempt(&shared, worker, clone.id, clone.attempt, result, elapsed, true);
+                continue;
+            }
+            Job::Fresh(id) => id,
         };
         let dispatch_start = Instant::now();
 
         // -------- the shared dequeue-time gate --------
-        match core.begin(id, worker) {
+        match st.core.begin(id, worker) {
             Err(e) => {
                 // reconstruction bottomed out (dropped put in the chain)
-                core.fail_task(id, e.to_string());
-                drop(core);
+                st.core.fail_task(id, e.to_string());
+                drop(st);
                 shared.done_cv.notify_all();
             }
             Ok(Dequeue::Repend) => {
                 // producers of lost args were re-queued
-                drop(core);
+                drop(st);
                 shared.work_cv.notify_all();
             }
             Ok(Dequeue::Retry) => {
-                drop(core);
+                drop(st);
                 shared.work_cv.notify_one();
             }
             Ok(Dequeue::Fail) => {
-                drop(core);
+                drop(st);
                 shared.done_cv.notify_all();
             }
             Ok(Dequeue::Run { spec, args }) => {
-                core.metrics.overhead_secs += dispatch_start.elapsed().as_secs_f64();
-                drop(core);
+                st.core.metrics.overhead_secs += dispatch_start.elapsed().as_secs_f64();
+                let attempt = st.core.tasks.get(&id).map(|t| t.attempts).unwrap_or(0);
+                let delay = st.core.fault.delay_for(id, attempt);
+                if st.core.spec.enabled() {
+                    st.running.insert(
+                        id,
+                        RunInfo {
+                            spec: spec.clone(),
+                            args: args.clone(),
+                            attempt,
+                            started: Instant::now(),
+                            speculated: false,
+                        },
+                    );
+                }
+                drop(st);
 
                 // -------- execute (lock released) --------
+                // injected straggler: this attempt stalls before its work
+                if delay > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(delay));
+                }
                 let borrowed: Vec<&Payload> = args.iter().map(|a| a.as_ref()).collect();
                 let run_start = Instant::now();
                 let result = (spec.func)(&borrowed);
-                let elapsed = run_start.elapsed().as_secs_f64();
+                let elapsed = delay + run_start.elapsed().as_secs_f64();
 
-                // -------- commit --------
-                let mut core = shared.core.lock().unwrap();
-                match core.complete(id, worker, result, None, elapsed) {
-                    Completion::Done { newly_ready } => {
-                        drop(core);
-                        if newly_ready > 0 {
-                            shared.work_cv.notify_all();
-                        }
-                        shared.done_cv.notify_all();
-                    }
-                    Completion::Retry => {
-                        drop(core);
-                        shared.work_cv.notify_one();
-                    }
-                    Completion::Fail => {
-                        drop(core);
-                        shared.done_cv.notify_all();
-                    }
-                }
+                // -------- commit (first result wins) --------
+                commit_attempt(&shared, worker, id, attempt, result, elapsed, false);
             }
         }
     }
@@ -495,6 +681,89 @@ mod tests {
         assert!(m.spills > 0, "cap never triggered");
         assert!(m.peak_store_bytes >= 400);
         assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn speculation_beats_injected_straggler_and_commits_once() {
+        // every task takes ~2ms; task attempts are delayed 300ms with
+        // probability ~0.3.  With speculation at 5x the median, clones
+        // must rescue the stragglers, each object committing exactly once.
+        let fault = FaultPlan::with_delay(0.3, 0.3, 11);
+        let pool = ThreadPool::with_policy(3, fault, None, true, SpecPolicy::with_factor(5.0));
+        let n = 24u64;
+        let refs: Vec<ObjectRef> = (0..n)
+            .map(|i| {
+                pool.submit(
+                    "spin",
+                    vec![],
+                    0.0,
+                    Arc::new(move |_: &[&Payload]| {
+                        std::thread::sleep(Duration::from_millis(2));
+                        Ok(Payload::Scalar(i as f64))
+                    }),
+                )
+            })
+            .collect();
+        for (i, r) in refs.iter().enumerate() {
+            assert_eq!(pool.get(r).unwrap().as_scalar().unwrap(), i as f64);
+        }
+        let m = pool.metrics();
+        // exactly one commit per task, no matter how many clones raced
+        assert_eq!(m.tasks_run, n);
+        assert!(m.spec_launched > 0, "no clones launched: {m:?}");
+        // (<=: a losing clone may still be mid-flight at metrics time)
+        assert!(
+            m.spec_wins + m.spec_losses <= m.spec_launched,
+            "clone outcomes exceed launches: {m:?}"
+        );
+        assert!(m.spec_wins > 0, "a 150x straggler must lose to its clone: {m:?}");
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn speculation_off_never_clones() {
+        let fault = FaultPlan::with_delay(0.3, 0.05, 11);
+        let pool = ThreadPool::with_policy(3, fault, None, true, SpecPolicy::off());
+        let refs: Vec<ObjectRef> =
+            (0..16).map(|i| pool.submit("t", vec![], 0.0, f(i as f64))).collect();
+        pool.wait_all(&refs).unwrap();
+        let m = pool.metrics();
+        assert_eq!(m.spec_launched, 0);
+        assert_eq!(m.spec_wins, 0);
+        assert_eq!(m.tasks_run, 16);
+    }
+
+    #[test]
+    fn stealing_counts_when_idle_workers_take_remote_work() {
+        // producer chain pins bytes to one worker; a wide fan-out of
+        // consumers forces the other workers to steal.
+        let pool = ThreadPool::new(4);
+        let src = pool.submit(
+            "make",
+            vec![],
+            0.0,
+            Arc::new(|_: &[&Payload]| Ok(Payload::Floats(vec![0.0f32; 50_000]))),
+        );
+        pool.get(&src).unwrap();
+        let refs: Vec<ObjectRef> = (0..64)
+            .map(|_| {
+                pool.submit(
+                    "consume",
+                    vec![src],
+                    0.0,
+                    Arc::new(|a: &[&Payload]| {
+                        std::thread::sleep(Duration::from_millis(1));
+                        Ok(Payload::Scalar(a[0].as_floats()?.len() as f64))
+                    }),
+                )
+            })
+            .collect();
+        pool.wait_all(&refs).unwrap();
+        let m = pool.metrics();
+        assert_eq!(m.tasks_run, 65);
+        assert!(m.steals > 0, "4 workers on one preferred node must steal: {m:?}");
+        // replica accounting: the stolen arg was copied store-to-store
+        assert!(m.bytes_transferred > 0, "{m:?}");
     }
 
     #[test]

@@ -19,6 +19,22 @@
 //!
 //! Locality-aware greedy scheduling (Ray's policy at this abstraction):
 //! a ready task goes to the free node holding the most argument bytes.
+//! When the core's steal policy is on, an assignment whose chosen node
+//! holds fewer argument bytes than some busy node is counted as a steal
+//! (the placement itself is unchanged — the greedy pick is already
+//! work-conserving).
+//!
+//! Straggler machinery: per-node slowdown multipliers and per-attempt
+//! delay faults (from [`FaultPlan`]) stretch an attempt's virtual
+//! duration.  With a [`SpecPolicy`] enabled, the drain loop launches a
+//! speculative clone of any attempt whose elapsed virtual time exceeds
+//! the policy's multiple of the stage's running median, whenever a slot
+//! is free and no ready task wants it.  First result wins: the winner
+//! commits through `SchedCore::complete`, the loser's slot is freed
+//! immediately, its burned virtual seconds are charged to busy, and its
+//! pending completion event goes stale.  Clones skip crash/delay
+//! injection (the original already drew its faults) but still pay the
+//! clone node's slowdown.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
@@ -27,7 +43,7 @@ use std::sync::{Arc, Mutex};
 use crate::config::ClusterConfig;
 use crate::error::{NexusError, Result};
 use crate::raylet::api::Metrics;
-use crate::raylet::core::{Dequeue, SchedCore};
+use crate::raylet::core::{Dequeue, SchedCore, SpecPolicy};
 use crate::raylet::fault::FaultPlan;
 use crate::raylet::payload::Payload;
 use crate::raylet::task::{ObjectRef, TaskFn, TaskStatus};
@@ -43,7 +59,7 @@ pub struct GanttEntry {
 
 #[derive(Clone, Debug)]
 enum EventKind {
-    TaskDone { id: u64, attempt: u32, node: usize },
+    TaskDone { id: u64, attempt: u32, node: usize, is_clone: bool },
     NodeFail { node: usize },
 }
 
@@ -79,6 +95,22 @@ struct Running {
     node: usize,
     attempt: u32,
     args: Vec<Arc<Payload>>,
+    /// Virtual time the attempt started (speculation watches elapsed).
+    start: f64,
+    /// Virtual execution seconds to charge to busy on commit
+    /// (cost × node slowdown + injected delay).
+    busy: f64,
+    /// A clone was already launched for this attempt (at most one).
+    speculated: bool,
+    /// The speculative twin, if one is in flight.
+    clone_run: Option<CloneRun>,
+}
+
+/// A speculative twin of a running attempt.
+struct CloneRun {
+    node: usize,
+    start: f64,
+    busy: f64,
 }
 
 struct SimInner {
@@ -127,6 +159,19 @@ impl SimCluster {
         fault: FaultPlan,
         store_cap: Option<usize>,
     ) -> SimCluster {
+        SimCluster::with_policy(cfg, execute, fault, store_cap, true, SpecPolicy::off())
+    }
+
+    /// [`Self::with_opts`] plus scheduler policy: work-steal accounting
+    /// and the speculative re-execution policy.
+    pub fn with_policy(
+        cfg: ClusterConfig,
+        execute: bool,
+        fault: FaultPlan,
+        store_cap: Option<usize>,
+        steal: bool,
+        spec: SpecPolicy,
+    ) -> SimCluster {
         assert!(cfg.nodes >= 1 && cfg.slots_per_node >= 1);
         for &(_, node) in &fault.node_failures {
             assert!(node != 0, "node 0 is the head node and cannot fail");
@@ -134,7 +179,7 @@ impl SimCluster {
         }
         let node_failures = fault.node_failures.clone();
         let mut inner = SimInner {
-            core: SchedCore::new(fault, store_cap),
+            core: SchedCore::with_policy(fault, store_cap, steal, spec),
             seq: 0,
             clock: 0.0,
             out_bytes: HashMap::new(),
@@ -196,8 +241,8 @@ impl SimCluster {
             };
             st.clock = ev.time.max(st.clock);
             match ev.kind {
-                EventKind::TaskDone { id, attempt, node } => {
-                    self.complete(&mut st, id, attempt, node)?;
+                EventKind::TaskDone { id, attempt, node, is_clone } => {
+                    self.complete(&mut st, id, attempt, node, is_clone)?;
                 }
                 EventKind::NodeFail { node } => {
                     self.fail_node(&mut st, node)?;
@@ -215,7 +260,10 @@ impl SimCluster {
         for id in stuck {
             st.core.fail_task(id, "stuck: dependencies unresolvable".into());
         }
-        st.makespan = st.clock;
+        // NOTE: makespan is advanced by *valid* completions (in
+        // `complete`), not here — a cancelled speculation loser's stale
+        // event still pops off the heap and advances the clock, but it
+        // must not stretch the reported schedule length.
         Ok(())
     }
 
@@ -226,6 +274,9 @@ impl SimCluster {
                 return Ok(());
             }
             let Some(id) = st.core.pop_ready() else {
+                // no ready work for the free slots: consider cloning a
+                // suspected straggler into them
+                self.launch_clones(st);
                 return Ok(());
             };
 
@@ -245,10 +296,22 @@ impl SimCluster {
                     }
                 }
             }
-            let Some((node, _)) = best else {
+            let Some((node, local)) = best else {
                 st.core.ready.insert(id); // no free slot: try again after next event
                 return Ok(());
             };
+            if st.core.steal {
+                // the free node took work whose data lives on a busy
+                // node: that is a steal at this abstraction level
+                let best_any = (0..self.cfg.nodes)
+                    .filter(|&n| st.node_alive[n])
+                    .map(|n| st.core.local_arg_bytes(id, n))
+                    .max()
+                    .unwrap_or(0);
+                if local < best_any {
+                    st.core.metrics.steals += 1;
+                }
+            }
 
             // transfer set must be read BEFORE begin() marks residency
             let remote = st.core.remote_args(id, node);
@@ -272,12 +335,28 @@ impl SimCluster {
                             self.cfg.net_latency + bytes as f64 / self.cfg.net_bandwidth;
                         st.bytes_transferred += bytes as u64;
                     }
-                    let duration = self.cfg.task_overhead + transfer + spec.cost_hint;
+                    let attempt = st.core.tasks[&id].attempts;
+                    // execution time = cost × node slowdown + injected
+                    // straggler delay (1.0 / 0.0 when no faults: the
+                    // unskewed schedule is unchanged)
+                    let busy = spec.cost_hint * st.core.fault.node_slowdown(node)
+                        + st.core.fault.delay_for(id, attempt);
+                    let duration = self.cfg.task_overhead + transfer + busy;
                     st.transfer_secs += transfer;
                     st.core.metrics.overhead_secs += self.cfg.task_overhead;
                     st.node_free[node] -= 1;
-                    let attempt = st.core.tasks[&id].attempts;
-                    st.running.insert(id, Running { node, attempt, args });
+                    st.running.insert(
+                        id,
+                        Running {
+                            node,
+                            attempt,
+                            args,
+                            start: st.clock,
+                            busy,
+                            speculated: false,
+                            clone_run: None,
+                        },
+                    );
                     if st.gantt.len() < self.gantt_cap {
                         let start = st.clock;
                         st.gantt.push(GanttEntry {
@@ -293,28 +372,144 @@ impl SimCluster {
                     st.events.push(Reverse(Event {
                         time,
                         seq,
-                        kind: EventKind::TaskDone { id, attempt, node },
+                        kind: EventKind::TaskDone { id, attempt, node, is_clone: false },
                     }));
                 }
             }
         }
     }
 
-    fn complete(&self, st: &mut SimInner, id: u64, attempt: u32, node: usize) -> Result<()> {
-        // stale event from a pre-failure attempt?
-        match st.running.get(&id) {
-            Some(r) if r.node == node && r.attempt == attempt => {}
-            _ => return Ok(()),
+    /// Launch speculative clones of suspected stragglers into free
+    /// slots.  Called only when the ready set is empty — real work
+    /// always outranks speculation.
+    fn launch_clones(&self, st: &mut SimInner) {
+        if !st.core.spec.enabled() {
+            return;
         }
+        let mut ids: Vec<u64> = st.running.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            if !st.node_free.iter().zip(&st.node_alive).any(|(&f, &a)| f > 0 && a) {
+                return;
+            }
+            let (orig_node, attempt, start, speculated) = {
+                let r = &st.running[&id];
+                (r.node, r.attempt, r.start, r.speculated)
+            };
+            if speculated {
+                continue;
+            }
+            let (label, cost) = {
+                let t = &st.core.tasks[&id];
+                (t.spec.label.clone(), t.spec.cost_hint)
+            };
+            if !st.core.should_speculate(&label, st.clock - start) {
+                continue;
+            }
+            // place the clone: prefer a node other than the straggler's,
+            // then most free slots, then lowest id
+            let mut best: Option<usize> = None;
+            for n in 0..self.cfg.nodes {
+                if !st.node_alive[n] || st.node_free[n] == 0 {
+                    continue;
+                }
+                best = match best {
+                    None => Some(n),
+                    Some(b) => {
+                        let better = ((n != orig_node) as u8, st.node_free[n])
+                            > ((b != orig_node) as u8, st.node_free[b]);
+                        Some(if better { n } else { b })
+                    }
+                };
+            }
+            let Some(node) = best else { return };
+            let remote = st.core.remote_args(id, node);
+            let mut transfer = 0.0;
+            for &(_, bytes) in &remote {
+                transfer += self.cfg.net_latency + bytes as f64 / self.cfg.net_bandwidth;
+                st.bytes_transferred += bytes as u64;
+            }
+            // clones skip crash/delay injection (the original already
+            // drew its faults) but pay the clone node's slowdown
+            let busy = cost * st.core.fault.node_slowdown(node);
+            let duration = self.cfg.task_overhead + transfer + busy;
+            st.transfer_secs += transfer;
+            st.core.metrics.overhead_secs += self.cfg.task_overhead;
+            st.core.metrics.spec_launched += 1;
+            st.node_free[node] -= 1;
+            if st.gantt.len() < self.gantt_cap {
+                st.gantt.push(GanttEntry {
+                    label: format!("spec:{label}"),
+                    node,
+                    start: st.clock,
+                    end: st.clock + duration,
+                });
+            }
+            let time = st.clock + duration;
+            let seq = st.seq;
+            st.seq += 1;
+            st.events.push(Reverse(Event {
+                time,
+                seq,
+                kind: EventKind::TaskDone { id, attempt, node, is_clone: true },
+            }));
+            let r = st.running.get_mut(&id).unwrap();
+            r.speculated = true;
+            r.clone_run = Some(CloneRun { node, start: st.clock, busy });
+        }
+    }
+
+    fn complete(
+        &self,
+        st: &mut SimInner,
+        id: u64,
+        attempt: u32,
+        node: usize,
+        is_clone: bool,
+    ) -> Result<()> {
+        // stale event: a pre-failure attempt, or the loser of a
+        // first-result-wins race whose entry is already gone
+        let valid = match st.running.get(&id) {
+            Some(r) if r.attempt == attempt => {
+                if is_clone {
+                    matches!(&r.clone_run, Some(c) if c.node == node)
+                } else {
+                    r.node == node
+                }
+            }
+            _ => false,
+        };
+        if !valid {
+            return Ok(());
+        }
+        st.makespan = st.makespan.max(st.clock);
         let running = st.running.remove(&id).unwrap();
         if st.node_alive[node] {
             st.node_free[node] += 1;
         }
-
-        let (cost_hint, func) = {
-            let t = &st.core.tasks[&id];
-            (t.spec.cost_hint, t.spec.func.clone())
+        // first result wins: free the losing twin's slot now, charge
+        // the virtual seconds it burned, and let its pending completion
+        // event go stale (the entry is gone)
+        let busy = if is_clone {
+            let c = running.clone_run.as_ref().unwrap();
+            if st.node_alive[running.node] {
+                st.node_free[running.node] += 1;
+            }
+            st.core.metrics.busy_secs += (st.clock - running.start).max(0.0);
+            st.core.metrics.spec_wins += 1;
+            c.busy
+        } else {
+            if let Some(c) = &running.clone_run {
+                if st.node_alive[c.node] {
+                    st.node_free[c.node] += 1;
+                }
+                st.core.metrics.busy_secs += (st.clock - c.start).max(0.0);
+                st.core.metrics.spec_losses += 1;
+            }
+            running.busy
         };
+
+        let func = st.core.tasks[&id].spec.func.clone();
         let result = if self.execute {
             let borrowed: Vec<&Payload> = running.args.iter().map(|a| a.as_ref()).collect();
             func(&borrowed)
@@ -326,7 +521,7 @@ impl SimCluster {
         } else {
             Some(st.out_bytes.get(&id).copied().unwrap_or(0))
         };
-        st.core.complete(id, node, result, bytes, cost_hint);
+        st.core.complete(id, node, result, bytes, busy);
         Ok(())
     }
 
@@ -337,16 +532,27 @@ impl SimCluster {
         st.node_alive[node] = false;
         st.node_free[node] = 0;
 
-        // re-queue tasks that were running there
-        let doomed: Vec<u64> = st
-            .running
-            .iter()
-            .filter(|(_, r)| r.node == node)
-            .map(|(&id, _)| id)
-            .collect();
-        for id in doomed {
-            st.running.remove(&id);
-            st.core.requeue_running(id);
+        // re-queue tasks that were running there; cancel orphaned clones
+        let ids: Vec<u64> = st.running.keys().copied().collect();
+        for id in ids {
+            let (orig_dead, clone_node) = {
+                let r = &st.running[&id];
+                (r.node == node, r.clone_run.as_ref().map(|c| c.node))
+            };
+            if orig_dead {
+                let running = st.running.remove(&id).unwrap();
+                // the twin (if any) ran elsewhere: free its slot and let
+                // its event go stale — the re-queued attempt supersedes it
+                if let Some(c) = running.clone_run {
+                    if st.node_alive[c.node] {
+                        st.node_free[c.node] += 1;
+                    }
+                }
+                st.core.requeue_running(id);
+            } else if clone_node == Some(node) {
+                // the clone died with the node; the original carries on
+                st.running.get_mut(&id).unwrap().clone_run = None;
+            }
         }
 
         // lose objects whose only copy lived there (lineage re-queues)
@@ -607,5 +813,71 @@ mod tests {
         let m = sim.metrics();
         assert!(m.retries > 0, "expected injected retries");
         assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn delay_fault_extends_virtual_time() {
+        let fault = FaultPlan::with_delay(1.0, 5.0, 1);
+        let sim = SimCluster::with_faults(cfg(1, 1), false, fault);
+        sim.submit("t", vec![], 1.0, 0, noop(0.0));
+        sim.drain().unwrap();
+        let m = sim.metrics();
+        assert!(m.makespan >= 6.0, "makespan={}", m.makespan);
+        assert_eq!(m.spec_launched, 0); // speculation off by default
+    }
+
+    #[test]
+    fn speculation_rescues_skewed_node() {
+        // node 1 runs everything 10x slower; the two tasks stranded
+        // there stretch the no-speculation makespan to ~10s, while
+        // speculation clones them onto node 0 once it drains.
+        let run = |spec: SpecPolicy| {
+            let fault = FaultPlan { node_slow: vec![(1, 10.0)], ..FaultPlan::none() };
+            let sim =
+                SimCluster::with_policy(cfg(2, 2), true, fault, None, true, spec);
+            let refs: Vec<ObjectRef> =
+                (0..8).map(|i| sim.submit("t", vec![], 1.0, 8, noop(i as f64))).collect();
+            sim.drain().unwrap();
+            for (i, r) in refs.iter().enumerate() {
+                assert_eq!(sim.get(r).unwrap().as_scalar().unwrap(), i as f64);
+            }
+            sim.metrics()
+        };
+        let off = run(SpecPolicy::off());
+        let on = run(SpecPolicy::with_factor(2.0));
+        assert_eq!(off.failed, 0);
+        assert_eq!(on.failed, 0);
+        assert_eq!(on.tasks_run, 8, "first-result-wins must commit each task once");
+        assert!(on.spec_launched > 0, "expected clones under 10x skew");
+        assert!(on.spec_wins > 0, "clones of 10x-slow tasks should win");
+        assert!(
+            on.makespan < off.makespan,
+            "speculation must beat the straggler: on={} off={}",
+            on.makespan,
+            off.makespan
+        );
+    }
+
+    #[test]
+    fn sim_counts_steals_when_free_node_lacks_the_data() {
+        // the big object lives on node 0; with node 0 saturated the
+        // second consumer runs on node 1 — a steal at this abstraction.
+        let build = |steal: bool| {
+            let sim = SimCluster::with_policy(
+                cfg(2, 1),
+                false,
+                FaultPlan::none(),
+                None,
+                steal,
+                SpecPolicy::off(),
+            );
+            let big = sim.put_sized(Payload::Empty, 1_000_000);
+            sim.submit("t0", vec![big], 1.0, 0, noop(0.0));
+            sim.submit("t1", vec![big], 1.0, 0, noop(0.0));
+            sim.drain().unwrap();
+            sim.metrics()
+        };
+        assert!(build(true).steals >= 1);
+        assert_eq!(build(false).steals, 0);
     }
 }

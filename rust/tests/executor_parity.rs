@@ -15,7 +15,7 @@ use nexus::data::dataset::{IngestOpts, ShardedDataset};
 use nexus::data::synth::{generate, SynthConfig};
 use nexus::models::cost::CostModel;
 use nexus::models::crossfit::{self, CrossfitConfig};
-use nexus::raylet::api::{ExecOpts, RayContext};
+use nexus::raylet::api::{ExecOpts, RayContext, SpecPolicy};
 use nexus::raylet::fault::FaultPlan;
 use nexus::raylet::payload::Payload;
 use nexus::raylet::task::{ObjectRef, TaskFn};
@@ -60,7 +60,7 @@ fn crossfit_parity_under_kills_and_drops() {
 
     let opts = ExecOpts {
         fault: FaultPlan::with_prob(0.25, 60, 2024),
-        store_cap: None,
+        ..ExecOpts::default()
     };
     for ctx in contexts(&opts) {
         let mode = ctx.mode();
@@ -119,7 +119,7 @@ fn sharded_ingest_dml_parity_under_kills_and_drops() {
 
     let opts = ExecOpts {
         fault: FaultPlan::with_prob(0.2, 60, 99),
-        store_cap: None,
+        ..ExecOpts::default()
     };
     for ctx in contexts(&opts) {
         let mode = ctx.mode();
@@ -163,6 +163,56 @@ fn sharded_ingest_dml_parity_under_kills_and_drops() {
         assert!(m.retries > 0, "{mode}: crash injection never fired");
         assert!(m.reconstructions >= 2 * cfg.cv as u64, "{mode}: no reconstructions");
         assert_eq!(m.failed, 0, "{mode}: permanent failures");
+    }
+}
+
+/// Injected `delay` stragglers with speculation armed: the full DML fit
+/// must stay bit-identical to the clean baseline on every executor, and
+/// first-result-wins must never double-commit an object — with no
+/// crashes injected, the commit count must exactly match a clean run of
+/// the same DAG on the same executor, clones or not.
+#[test]
+fn dml_parity_under_stragglers_with_speculation() {
+    let ds = generate(&SynthConfig { n: 600, d: 5, seed: 7, ..Default::default() });
+    let cfg = ccfg();
+    let cost = CostModel::default();
+    let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+
+    let clean =
+        dml::fit_with(&RayContext::inline(), kx.clone(), &cost, &ds, &cfg, 1, 2).unwrap();
+    let clean_runs: Vec<u64> = contexts(&ExecOpts::default())
+        .into_iter()
+        .map(|ctx| {
+            dml::fit_with(&ctx, kx.clone(), &cost, &ds, &cfg, 1, 2).unwrap();
+            ctx.metrics().tasks_run
+        })
+        .collect();
+
+    let opts = ExecOpts {
+        fault: FaultPlan::with_delay(0.2, 0.02, 4242),
+        spec: SpecPolicy::with_factor(3.0),
+        ..ExecOpts::default()
+    };
+    for (i, ctx) in contexts(&opts).into_iter().enumerate() {
+        let mode = ctx.mode();
+        let fit = dml::fit_with(&ctx, kx.clone(), &cost, &ds, &cfg, 1, 2).unwrap();
+        assert_eq!(clean.theta, fit.theta, "{mode}: theta diverged under stragglers");
+        assert_eq!(clean.ate.value, fit.ate.value, "{mode}: ATE diverged");
+        assert_eq!(
+            clean.crossfit.y_res, fit.crossfit.y_res,
+            "{mode}: residuals diverged under stragglers"
+        );
+        let m = ctx.metrics();
+        assert_eq!(m.failed, 0, "{mode}: permanent failures");
+        assert_eq!(m.retries, 0, "{mode}: delays must not look like crashes");
+        assert_eq!(
+            m.tasks_run, clean_runs[i],
+            "{mode}: first-result-wins double-committed (or dropped) a task"
+        );
+        assert!(
+            m.spec_wins + m.spec_losses <= m.spec_launched,
+            "{mode}: speculation accounting out of balance"
+        );
     }
 }
 
@@ -223,7 +273,7 @@ fn prop_random_dags_agree_under_faults() {
 
         let opts = ExecOpts {
             fault: FaultPlan::with_prob(0.2, 60, seed),
-            store_cap: None,
+            ..ExecOpts::default()
         };
         let ctxs = contexts(&opts);
         let baseline = run(&RayContext::inline());

@@ -1,0 +1,190 @@
+//! Shuffle bit-identity properties: the store-to-store all-to-all
+//! exchange (`ShuffleSpec`) behind `repartition` / `split_by_fold` must
+//! produce blocks bit-identical to the driver-side `make_blocks` path,
+//! at awkward shapes (0 / 1 / prime block counts, blocks > workers) and
+//! invariantly across executors and thread counts — while routing zero
+//! block bytes through the driver.
+
+use std::sync::Arc;
+
+use nexus::config::ClusterConfig;
+use nexus::data::dataset::{pad_covariates, ShardedDataset};
+use nexus::data::folds::FoldPlan;
+use nexus::data::partition::{make_blocks, RowBlock};
+use nexus::data::pipeline::Pipeline;
+use nexus::data::synth::{generate, SynthConfig};
+use nexus::raylet::api::RayContext;
+use nexus::util::prop::forall;
+
+const D_PAD: usize = 8;
+
+fn contexts() -> Vec<(String, RayContext)> {
+    vec![
+        ("inline".into(), RayContext::inline()),
+        ("threads(1)".into(), RayContext::threads(1)),
+        ("threads(3)".into(), RayContext::threads(3)),
+        ("threads(5)".into(), RayContext::threads(5)),
+        ("sim".into(), RayContext::sim(ClusterConfig::default(), true)),
+    ]
+}
+
+fn assert_block_eq(tag: &str, got: &RowBlock, want: &RowBlock) {
+    assert_eq!(got.valid, want.valid, "{tag}: valid");
+    assert_eq!(got.mask, want.mask, "{tag}: mask");
+    assert_eq!(got.y, want.y, "{tag}: y");
+    assert_eq!(got.t, want.t, "{tag}: t");
+    assert_eq!(got.x.rows(), want.x.rows(), "{tag}: x height");
+    assert_eq!(got.x.cols(), want.x.cols(), "{tag}: x width");
+    for r in 0..want.x.rows() {
+        assert_eq!(got.x.row(r), want.x.row(r), "{tag}: x row {r}");
+    }
+}
+
+/// split_by_fold over a prime row count with more source blocks than
+/// workers: every fold's blocks match a driver-side `make_blocks` of
+/// that fold's rows bit-for-bit, with zero block bytes fetched to the
+/// driver by the exchange itself.
+#[test]
+fn split_by_fold_matches_driver_blocks_everywhere() {
+    let scfg = SynthConfig { n: 97, d: 4, seed: 31, ..Default::default() };
+    let ds = generate(&scfg);
+    let x_pad = pad_covariates(&ds.x, D_PAD).unwrap();
+    let plan = FoldPlan::random(97, 3, 7).unwrap();
+    for (tag, ctx) in contexts() {
+        let sds = ShardedDataset::from_materialized(&ctx, &ds, D_PAD, 10).unwrap();
+        let (refs, metas) = sds.split_by_fold(&ctx, &plan, 7, 0.0).unwrap();
+        ctx.drain().unwrap();
+        assert_eq!(
+            ctx.metrics().driver_block_bytes,
+            0,
+            "{tag}: shuffle routed block bytes through the driver"
+        );
+        for f in 0..plan.k as u32 {
+            let rows = plan.fold_rows(f);
+            let want = make_blocks(&x_pad, &ds.y, &ds.t, &rows, 7);
+            let k = f as usize;
+            assert_eq!(refs[k].len(), want.len(), "{tag} fold{f}: block count");
+            for (bi, r) in refs[k].iter().enumerate() {
+                let p = ctx.get(r).unwrap();
+                let got = p.as_block().unwrap();
+                let t = format!("{tag} fold{f} block{bi}");
+                assert_block_eq(&t, got, &want[bi]);
+                assert_eq!(got.rows, want[bi].rows, "{t}: row ids");
+                assert_eq!(got.rows, metas[k][bi], "{t}: driver meta");
+            }
+        }
+    }
+}
+
+/// Plain repartition (identity row set): bit-identical to driver-side
+/// make_blocks, densely renumbered, and zero driver block bytes.
+#[test]
+fn repartition_matches_driver_blocks_and_stays_off_driver() {
+    let ds = generate(&SynthConfig { n: 89, d: 3, seed: 11, ..Default::default() });
+    let x_pad = pad_covariates(&ds.x, D_PAD).unwrap();
+    let all: Vec<usize> = (0..89).collect();
+    let want = make_blocks(&x_pad, &ds.y, &ds.t, &all, 11);
+    for (tag, ctx) in contexts() {
+        let sds = ShardedDataset::from_materialized(&ctx, &ds, D_PAD, 13).unwrap();
+        let out = Pipeline::new(sds).repartition(11).execute(&ctx).unwrap();
+        ctx.drain().unwrap();
+        assert_eq!(
+            ctx.metrics().driver_block_bytes,
+            0,
+            "{tag}: repartition routed block bytes through the driver"
+        );
+        assert_eq!(out.blocks.len(), want.len(), "{tag}: block count");
+        for (bi, r) in out.blocks.iter().enumerate() {
+            let p = ctx.get(r).unwrap();
+            let got = p.as_block().unwrap();
+            let t = format!("{tag} block{bi}");
+            assert_block_eq(&t, got, &want[bi]);
+            let lo = bi * 11;
+            assert_eq!(
+                got.rows,
+                (lo..lo + got.valid).collect::<Vec<_>>(),
+                "{t}: dense renumber"
+            );
+        }
+    }
+}
+
+/// Repartition after a filter (a genuinely scattered row selection):
+/// values match a driver-side make_blocks over the survivor rows.
+#[test]
+fn filtered_repartition_matches_driver_gather() {
+    let ds = generate(&SynthConfig { n: 101, d: 3, seed: 5, ..Default::default() });
+    let x_pad = pad_covariates(&ds.x, D_PAD).unwrap();
+    let survivors: Vec<usize> = (0..101).filter(|&i| ds.t[i] > 0.5).collect();
+    let want = make_blocks(&x_pad, &ds.y, &ds.t, &survivors, 7);
+    for (tag, ctx) in contexts() {
+        let sds = ShardedDataset::from_materialized(&ctx, &ds, D_PAD, 13).unwrap();
+        let out = Pipeline::new(sds)
+            .filter_rows("treated", Arc::new(|_x: &[f32], _y: f32, t: f32| t > 0.5))
+            .repartition(7)
+            .execute(&ctx)
+            .unwrap();
+        assert_eq!(out.n_rows, survivors.len(), "{tag}: survivor count");
+        assert_eq!(out.blocks.len(), want.len(), "{tag}: block count");
+        for (bi, r) in out.blocks.iter().enumerate() {
+            let p = ctx.get(r).unwrap();
+            let got = p.as_block().unwrap();
+            let t = format!("{tag} block{bi}");
+            assert_block_eq(&t, got, &want[bi]);
+            let lo = bi * 7;
+            assert_eq!(
+                got.rows,
+                (lo..lo + got.valid).collect::<Vec<_>>(),
+                "{t}: dense renumber"
+            );
+        }
+    }
+}
+
+/// Gathering an empty row set plans zero output blocks (the 0-block
+/// edge), and a row set smaller than one block plans exactly one.
+#[test]
+fn degenerate_block_counts() {
+    let ds = generate(&SynthConfig { n: 10, d: 3, seed: 2, ..Default::default() });
+    let ctx = RayContext::inline();
+    let sds = ShardedDataset::from_materialized(&ctx, &ds, D_PAD, 4).unwrap();
+    let (refs, metas) = sds.gather(&ctx, &[], None, 4, "gather:none", 0.0).unwrap();
+    assert!(refs.is_empty() && metas.is_empty(), "empty gather must plan nothing");
+
+    let x_pad = pad_covariates(&ds.x, D_PAD).unwrap();
+    let rows = vec![7usize, 1, 4];
+    let want = make_blocks(&x_pad, &ds.y, &ds.t, &rows, 64);
+    let (refs, _) = sds.gather(&ctx, &rows, None, 64, "gather:one", 0.0).unwrap();
+    assert_eq!(refs.len(), 1, "sub-block gather must produce one block");
+    let p = ctx.get(&refs[0]).unwrap();
+    assert_block_eq("single", p.as_block().unwrap(), &want[0]);
+}
+
+/// Property: random shapes (n, source block, output block — including
+/// 1-row datasets, single-block outputs, and prime counts) repartition
+/// bit-identically to the driver-side path on inline and threads.
+#[test]
+fn prop_random_shapes_match_driver_path() {
+    forall("shuffle repartition matches driver gather", 10, |g| {
+        let n = g.usize_in(1..120);
+        let src_block = g.usize_in(1..20);
+        let out_block = g.usize_in(1..20);
+        let seed = g.usize_in(0..10_000) as u64;
+        let ds = generate(&SynthConfig { n, d: 3, seed, ..Default::default() });
+        let x_pad = pad_covariates(&ds.x, D_PAD).unwrap();
+        let all: Vec<usize> = (0..n).collect();
+        let want = make_blocks(&x_pad, &ds.y, &ds.t, &all, out_block);
+        for ctx in [RayContext::inline(), RayContext::threads(3)] {
+            let mode = ctx.mode();
+            let sds =
+                ShardedDataset::from_materialized(&ctx, &ds, D_PAD, src_block).unwrap();
+            let out = Pipeline::new(sds).repartition(out_block).execute(&ctx).unwrap();
+            assert_eq!(out.blocks.len(), want.len(), "{mode}: block count");
+            for (bi, r) in out.blocks.iter().enumerate() {
+                let p = ctx.get(r).unwrap();
+                let tag = format!("{mode} n={n} src={src_block} out={out_block} b{bi}");
+                assert_block_eq(&tag, p.as_block().unwrap(), &want[bi]);
+            }
+        }
+    });
+}
