@@ -3,10 +3,19 @@
 //! The paper's Fig 5 is a stock Ray Tune illustration; the reproducible
 //! content is the workflow claim — distributed trials + early stopping
 //! find the best config in ~max(trial) instead of ~sum(trial).  This
-//! bench sweeps a 16-config grid for `model_t` three ways and reports
-//! time-to-best (virtual makespan) and total compute.
+//! bench sweeps a 16-config logistic grid for `model_t` across the
+//! scheduler policies (serial grid, distributed grid, synchronous SHA,
+//! actor-based ASHA with and without the median rule / injected kills)
+//! and reports time-to-best (virtual makespan), total compute, and the
+//! checkpoint/kill counters.
+//!
+//! Every run is appended to `BENCH_fig5_tune.json` (machine-readable;
+//! schema in EXPERIMENTS.md): one record per trials x workers x policy
+//! combination.
 //!
 //!     cargo bench --offline --bench fig5_tune
+//!     NEXUS_BENCH_QUICK=1 ... (smaller sweep for CI)
+//!     NEXUS_PERF_SMOKE=1  ... (fail unless ASHA beats the distributed grid)
 
 use std::sync::Arc;
 
@@ -17,14 +26,34 @@ use nexus::models::cost::CostModel;
 use nexus::models::registry::ModelSpec;
 use nexus::raylet::api::RayContext;
 use nexus::runtime::backend::HostBackend;
-use nexus::tune::runner::TuneRunner;
+use nexus::tune::runner::{AshaOpts, TuneOutcome, TuneRunner};
 use nexus::tune::sched::ShaSchedule;
-use nexus::tune::space::{ParamSpec, SearchSpace};
+use nexus::tune::space::{ParamSpec, SearchSpace, TrialConfig};
+use nexus::util::json::Json;
 use nexus::util::rng::Pcg32;
 
+fn record(policy: &str, trials: usize, workers: usize, o: &TuneOutcome) -> Json {
+    Json::obj()
+        .set("policy", policy)
+        .set("trials", trials)
+        .set("workers", workers)
+        .set("time_to_best_secs", o.time_to_best)
+        .set("makespan_secs", o.makespan)
+        .set("busy_secs", o.busy_secs)
+        .set("tasks", o.tasks_run as i64)
+        .set("rows_trained", o.rows_trained as i64)
+        .set("killed", o.killed as i64)
+        .set("resumed", o.resumed as i64)
+        .set("best_loss", o.best.loss)
+        .set("best_lam", o.best.config.get("lam"))
+        .set("best_iters", o.best.config.get_usize("iters"))
+}
+
 fn main() -> nexus::Result<()> {
+    let quick = std::env::var("NEXUS_BENCH_QUICK").is_ok();
+    let smoke = std::env::var("NEXUS_PERF_SMOKE").is_ok();
     let mut rng = Pcg32::new(11);
-    let (n, d) = (8000usize, 16usize);
+    let (n, d) = (if quick { 4000usize } else { 8000 }, 16usize);
     let make = |n: usize, rng: &mut Pcg32| {
         let x = Matrix::from_fn(n, d, |_, j| if j == 0 { 1.0 } else { rng.normal_f32() });
         let t: Vec<f32> = (0..n)
@@ -47,39 +76,134 @@ fn main() -> nexus::Result<()> {
         to_spec: |c| ModelSpec::Logistic { lam: c.get("lam") as f32, iters: c.get_usize("iters") },
         block: 256,
     };
-    let configs = SearchSpace::new()
+    let configs: Vec<TrialConfig> = SearchSpace::new()
         .with("lam", ParamSpec::Grid(vec![1e-5, 1e-3, 1e-1, 10.0]))
         .with("iters", ParamSpec::Grid(vec![2.0, 4.0, 6.0, 8.0]))
         .grid(0);
+    let trials = configs.len();
+    let workers = 16usize; // 4 nodes x 4 slots
     let cluster = ClusterConfig { nodes: 4, slots_per_node: 4, ..Default::default() };
-    let sched = ShaSchedule::geometric(1, 4, 2);
+    let sched = ShaSchedule::geometric(1, 4, 2)?;
+    let asha_opts = |median_stop: bool, kill_at: Vec<(usize, usize)>| AshaOpts {
+        workers,
+        median_stop,
+        kill_at,
+        ..AshaOpts::default()
+    };
 
-    let mut tbl = Table::new(
-        "Figure 5 — tuning strategies (16-config grid, model_t)",
-        &["strategy", "time-to-best", "total cpu", "tasks", "best loss"],
-    );
     let serial = runner.run_grid(
         &RayContext::sim(ClusterConfig { nodes: 1, slots_per_node: 1, ..cluster.clone() }, true),
         &configs,
     )?;
     let dist = runner.run_grid(&RayContext::sim(cluster.clone(), true), &configs)?;
     let sha = runner.run_sha(&RayContext::sim(cluster.clone(), true), &configs, &sched)?;
-    for (name, o) in [("serial grid", &serial), ("distributed grid", &dist), ("dist + SHA", &sha)]
-    {
+    let asha =
+        runner.run_asha(&RayContext::inline(), &configs, &sched, &asha_opts(false, vec![]))?;
+    let median =
+        runner.run_asha(&RayContext::inline(), &configs, &sched, &asha_opts(true, vec![]))?;
+    // kill the eventual winner as its mid-ladder rungs dispatch: it must
+    // resume from its object-store checkpoint instead of retraining rung 0
+    let winner = configs.iter().position(|c| *c == asha.best.config).unwrap();
+    let kills = runner.run_asha(
+        &RayContext::inline(),
+        &configs,
+        &sched,
+        &asha_opts(false, vec![(winner, 1), (winner, 2)]),
+    )?;
+
+    // the workers dimension: a narrower ASHA sweep for the same trials
+    let asha_w4 = if quick {
+        None
+    } else {
+        Some(runner.run_asha(
+            &RayContext::inline(),
+            &configs,
+            &sched,
+            &AshaOpts { workers: 4, ..AshaOpts::default() },
+        )?)
+    };
+
+    let mut rows: Vec<(&str, usize, &TuneOutcome)> = vec![
+        ("grid-serial", 1, &serial),
+        ("grid-dist", workers, &dist),
+        ("sha-sync", workers, &sha),
+        ("asha", workers, &asha),
+        ("asha-median", workers, &median),
+        ("asha-kills", workers, &kills),
+    ];
+    if let Some(o) = &asha_w4 {
+        rows.push(("asha", 4, o));
+    }
+
+    let mut tbl = Table::new(
+        "Figure 5 — tuning policies (16-config logistic grid, model_t)",
+        &["policy", "workers", "time-to-best", "total cpu", "tasks", "rows", "killed", "best loss"],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for &(name, w, o) in &rows {
         tbl.row(vec![
             name.into(),
-            fmt_secs(o.makespan),
+            format!("{w}"),
+            fmt_secs(o.time_to_best),
             fmt_secs(o.busy_secs),
             format!("{}", o.tasks_run),
+            format!("{}", o.rows_trained),
+            format!("{}", o.killed),
             format!("{:.4}", o.best.loss),
         ]);
+        records.push(record(name, trials, w, o));
     }
     tbl.print();
     println!(
-        "\nspeedups vs serial: distributed {:.1}x, dist+SHA {:.1}x (time-to-best)",
+        "\nspeedups vs serial grid (time-to-best): dist {:.1}x, sync SHA {:.1}x, ASHA {:.1}x",
         serial.makespan / dist.makespan,
-        serial.makespan / sha.makespan
+        serial.makespan / sha.makespan,
+        serial.makespan / asha.time_to_best
     );
-    assert_eq!(serial.best.config, dist.best.config, "winners must agree");
+    println!(
+        "asha checkpoints under kills: killed={} resumed={} (winner loss {:.4})",
+        kills.killed, kills.resumed, kills.best.loss
+    );
+
+    assert_eq!(serial.best.config, dist.best.config, "grid winners must agree");
+    assert!(asha.best.budget >= sha.best.budget, "asha winner must train at full budget");
+    assert!(
+        asha.time_to_best < sha.makespan,
+        "asha time-to-best {} must beat synchronous SHA makespan {}",
+        asha.time_to_best,
+        sha.makespan
+    );
+    assert!(kills.resumed > 0, "injected kills must exercise checkpoint resume");
+    if smoke {
+        assert!(
+            asha.time_to_best < dist.makespan,
+            "perf smoke: asha time-to-best {} must beat distributed grid {}",
+            asha.time_to_best,
+            dist.makespan
+        );
+    }
+
+    // append this invocation as one session so the trajectory across
+    // PRs/invocations accumulates instead of being overwritten
+    let path = std::path::Path::new("BENCH_fig5_tune.json");
+    let mut sessions: Vec<Json> = nexus::util::json::parse_file(path)
+        .ok()
+        .and_then(|old| old.get("sessions").and_then(|s| s.as_arr().ok().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    let n_runs = records.len();
+    sessions.push(
+        Json::obj()
+            .set("backend", "host")
+            .set("quick", quick)
+            .set("n", n)
+            .set("d", d)
+            .set("runs", Json::Arr(records)),
+    );
+    let n_sessions = sessions.len();
+    let out = Json::obj().set("bench", "fig5_tune").set("sessions", Json::Arr(sessions));
+    std::fs::write(path, out.to_string())?;
+    println!(
+        "\nwrote BENCH_fig5_tune.json ({n_runs} runs this session, {n_sessions} sessions total)"
+    );
     Ok(())
 }

@@ -184,6 +184,97 @@ impl ServeConfig {
     }
 }
 
+/// Tuning-plane configuration (`nexus tune` and the Fig 5 bench):
+/// trial count, scheduling policy, and the successive-halving ladder.
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    /// Hyper-parameter configs to evaluate (`--trials`).
+    pub trials: usize,
+    /// Scheduling policy: `grid`, `sha`, or `asha` (`--tune-policy`).
+    pub policy: String,
+    /// Successive-halving reduction factor (`--eta`).
+    pub eta: usize,
+    /// Number of rungs in the budget ladder (`--rungs`).
+    pub rungs: usize,
+    /// Grace budget `r_min` in ladder units (`--grace`); the top rung is
+    /// `grace * eta^(rungs-1)` and maps to the full training set.
+    pub grace: usize,
+    /// Wire the median-stopping rule into ASHA (`--median-stop`).
+    pub median_stop: bool,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            trials: 16,
+            policy: "asha".into(),
+            eta: 2,
+            rungs: 3,
+            grace: 1,
+            median_stop: false,
+        }
+    }
+}
+
+impl TuneConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.trials == 0 {
+            return Err(NexusError::Config("tune.trials must be positive".into()));
+        }
+        if !matches!(self.policy.as_str(), "grid" | "sha" | "asha") {
+            return Err(NexusError::Config(format!(
+                "tune.policy must be grid|sha|asha, got '{}'",
+                self.policy
+            )));
+        }
+        if self.eta < 2 {
+            return Err(NexusError::Config("tune.eta must be >= 2".into()));
+        }
+        if self.rungs == 0 || self.grace == 0 {
+            return Err(NexusError::Config("tune.rungs and tune.grace must be positive".into()));
+        }
+        Ok(())
+    }
+
+    /// Top-rung budget `grace * eta^(rungs-1)` in ladder units.
+    pub fn r_max(&self) -> usize {
+        self.grace * self.eta.pow(self.rungs.saturating_sub(1) as u32)
+    }
+
+    pub fn from_json(v: &Json) -> Result<TuneConfig> {
+        let mut cfg = TuneConfig::default();
+        if let Some(x) = v.get("trials") {
+            cfg.trials = x.as_usize()?;
+        }
+        if let Some(x) = v.get("policy") {
+            cfg.policy = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.get("eta") {
+            cfg.eta = x.as_usize()?;
+        }
+        if let Some(x) = v.get("rungs") {
+            cfg.rungs = x.as_usize()?;
+        }
+        if let Some(x) = v.get("grace") {
+            cfg.grace = x.as_usize()?;
+        }
+        if let Some(x) = v.get("median_stop") {
+            cfg.median_stop = x.as_bool()?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("trials", self.trials)
+            .set("policy", self.policy.as_str())
+            .set("eta", self.eta)
+            .set("rungs", self.rungs)
+            .set("grace", self.grace)
+            .set("median_stop", self.median_stop)
+    }
+}
+
 /// Full estimation-run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -209,6 +300,8 @@ pub struct RunConfig {
     pub cluster: ClusterConfig,
     /// Serving-plane knobs for `nexus serve`.
     pub serve: ServeConfig,
+    /// Tuning-plane knobs for `nexus tune`.
+    pub tune: TuneConfig,
     /// Route `nexus fit` through streaming sharded ingest (`--sharded`):
     /// the dataset is generated chunk by chunk straight into the object
     /// store instead of being materialized on the driver.
@@ -250,6 +343,7 @@ impl Default for RunConfig {
             backend: "pjrt".into(),
             cluster: ClusterConfig::default(),
             serve: ServeConfig::default(),
+            tune: TuneConfig::default(),
             sharded: false,
             ingest_chunk: 65_536,
             shard_block: 4096,
@@ -295,6 +389,7 @@ impl RunConfig {
             ));
         }
         self.serve.validate()?;
+        self.tune.validate()?;
         Ok(())
     }
 
@@ -383,6 +478,9 @@ impl RunConfig {
         if let Some(s) = v.get("serve") {
             cfg.serve = ServeConfig::from_json(s)?;
         }
+        if let Some(t) = v.get("tune") {
+            cfg.tune = TuneConfig::from_json(t)?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -418,6 +516,7 @@ impl RunConfig {
                     .set("store_cap_bytes", self.cluster.store_cap_bytes),
             )
             .set("serve", self.serve.to_json())
+            .set("tune", self.tune.to_json())
     }
 }
 
@@ -445,6 +544,12 @@ mod tests {
         cfg.kernel_threads = 3;
         cfg.steal = false;
         cfg.speculate_factor = 2.5;
+        cfg.tune.trials = 32;
+        cfg.tune.policy = "sha".into();
+        cfg.tune.eta = 3;
+        cfg.tune.rungs = 4;
+        cfg.tune.grace = 2;
+        cfg.tune.median_stop = true;
         let v = cfg.to_json();
         let back = RunConfig::from_json(&v).unwrap();
         assert_eq!(back.n, 77_000);
@@ -459,6 +564,13 @@ mod tests {
         assert_eq!(back.kernel_threads, 3);
         assert!(!back.steal);
         assert_eq!(back.speculate_factor, 2.5);
+        assert_eq!(back.tune.trials, 32);
+        assert_eq!(back.tune.policy, "sha");
+        assert_eq!(back.tune.eta, 3);
+        assert_eq!(back.tune.rungs, 4);
+        assert_eq!(back.tune.grace, 2);
+        assert!(back.tune.median_stop);
+        assert_eq!(back.tune.r_max(), 2 * 27);
     }
 
     #[test]
@@ -492,6 +604,18 @@ mod tests {
         assert!(bad_serve.validate().is_err());
         assert!(ServeConfig { max_batch: 0, ..Default::default() }.validate().is_err());
         assert!(ServeConfig { rate: -1.0, ..Default::default() }.validate().is_err());
+        assert!(TuneConfig { trials: 0, ..Default::default() }.validate().is_err());
+        assert!(TuneConfig { policy: "hyperband".into(), ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(TuneConfig { eta: 1, ..Default::default() }.validate().is_err());
+        assert!(TuneConfig { rungs: 0, ..Default::default() }.validate().is_err());
+        assert!(TuneConfig { grace: 0, ..Default::default() }.validate().is_err());
+        let bad_tune = RunConfig {
+            tune: TuneConfig { eta: 0, ..Default::default() },
+            ..Default::default()
+        };
+        assert!(bad_tune.validate().is_err());
     }
 
     #[test]

@@ -22,9 +22,9 @@ use nexus::raylet::api::RayContext;
 use nexus::runtime::artifacts::Manifest;
 use nexus::runtime::backend::backend_by_name;
 use nexus::serve::{BatchPolicy, CateModel, Router, RoutingPolicy};
+use nexus::tune::runner::{AshaOpts, TuneRunner};
 use nexus::tune::sched::ShaSchedule;
 use nexus::tune::space::{ParamSpec, SearchSpace};
-use nexus::tune::runner::TuneRunner;
 use nexus::util::cli::Args;
 use nexus::util::rng::Pcg32;
 use nexus::Result;
@@ -52,7 +52,7 @@ fn run() -> Result<()> {
                  \x20 nexus fit --n 20000 --d 50 --cv 5 --exec ray --workers 4\n\
                  \x20 nexus fit --n 200000 --d 50 --sharded --ingest-chunk 16384 --exec ray\n\
                  \x20 nexus fit --n 100000 --d 200 --backend host --kernel-threads 8\n\
-                 \x20 nexus tune --trials 16 --strategy sha\n\
+                 \x20 nexus tune --trials 16 --tune-policy asha --eta 2 --rungs 3 --grace 1\n\
                  \x20 nexus simulate --n 1000000 --d 500 --nodes 5\n\
                  \x20 nexus serve --replicas 4 --policy p2c --rate 2000\n\
                  \x20 nexus serve --requests 20000 --autoscale --replicas 8"
@@ -204,8 +204,20 @@ fn cmd_fit_sharded(args: &Args, cfg: &RunConfig) -> Result<()> {
 
 fn cmd_tune(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
-    let trials = args.usize_or("trials", 16)?;
-    let strategy = args.opt_or("strategy", "grid");
+    // CLI overrides on top of the config file's tune section
+    // (`--strategy` kept as a legacy alias for `--tune-policy`)
+    let mut tc = cfg.tune.clone();
+    tc.trials = args.usize_or("trials", tc.trials)?;
+    if let Some(p) = args.opt("tune-policy").or_else(|| args.opt("strategy")) {
+        tc.policy = p.to_string();
+    }
+    tc.eta = args.usize_or("eta", tc.eta)?;
+    tc.rungs = args.usize_or("rungs", tc.rungs)?;
+    tc.grace = args.usize_or("grace", tc.grace)?;
+    if args.flag("median-stop") {
+        tc.median_stop = true;
+    }
+    tc.validate()?;
     let kx = backend_by_name(&cfg.backend)?;
 
     let n = cfg.n.min(20_000);
@@ -242,20 +254,34 @@ fn cmd_tune(args: &Args) -> Result<()> {
         block: 256,
     };
     let space = SearchSpace::new().with("lam", ParamSpec::LogUniform(1e-6, 1e3));
-    let configs = space.grid(trials);
+    let configs = space.grid(tc.trials);
+    let sched = ShaSchedule::geometric(tc.grace, tc.r_max(), tc.eta)?;
     let ctx = dml::executor_for(&cfg);
-    let out = match strategy.as_str() {
-        "sha" => runner.run_sha(&ctx, &configs, &ShaSchedule::geometric(1, 8, 2))?,
+    let out = match tc.policy.as_str() {
+        "sha" => runner.run_sha(&ctx, &configs, &sched)?,
+        "asha" => {
+            let opts = AshaOpts {
+                workers: cfg.workers,
+                median_stop: tc.median_stop,
+                ..AshaOpts::default()
+            };
+            runner.run_asha(&ctx, &configs, &sched, &opts)?
+        }
         _ => runner.run_grid(&ctx, &configs)?,
     };
     println!(
-        "tune[{strategy}]: best {} loss={:.5} | trials={} tasks={} makespan={:.3}s busy={:.3}s",
+        "tune[{}]: best {} loss={:.5} | trials={} tasks={} makespan={:.3}s busy={:.3}s",
+        out.policy,
         out.best.config.describe(),
         out.best.loss,
         out.trials.len(),
         out.tasks_run,
         out.makespan,
         out.busy_secs
+    );
+    println!(
+        "  time-to-best={:.3}s rows-trained={} killed={} resumed={}",
+        out.time_to_best, out.rows_trained, out.killed, out.resumed
     );
     Ok(())
 }

@@ -8,9 +8,11 @@
 use std::sync::Arc;
 
 use crate::data::matrix::Matrix;
-use crate::error::Result;
+use crate::error::{NexusError, Result};
 use crate::raylet::api::RayContext;
+use crate::raylet::payload::Payload;
 use crate::runtime::backend::KernelExec;
+use crate::runtime::tensor::Tensor;
 
 /// A nuisance model family + hyper-parameters.
 #[derive(Clone, Debug, PartialEq)]
@@ -90,6 +92,189 @@ impl ModelSpec {
     }
 }
 
+/// Resumable training state — what a tune trial checkpoints between
+/// rungs so a killed trial continues instead of restarting.
+///
+/// The two families carry different sufficient state:
+/// * Ridge streams exact normal equations, so the gram/xty accumulators
+///   make advancing pay only for rows not yet seen.
+/// * Logistic is an iterative Newton solve, so the state is the current
+///   iterate; advancing re-runs `iters` IRLS steps over the (larger)
+///   prefix warm-started from the stored beta.
+///
+/// Determinism contract: advancing through the same sequence of budgets
+/// visits the same block chunks in the same order, so a state restored
+/// from a checkpoint and advanced through the remaining rungs produces
+/// coefficients (and losses) bit-identical to an uninterrupted run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FitState {
+    Ridge { gram: Matrix, xty: Vec<f32>, rows: usize },
+    Logistic { beta: Vec<f32>, rows: usize },
+}
+
+impl FitState {
+    /// Training rows covered so far.
+    pub fn rows(&self) -> usize {
+        match self {
+            FitState::Ridge { rows, .. } | FitState::Logistic { rows, .. } => *rows,
+        }
+    }
+
+    /// Pack (state, rung) for the object store / actor checkpoint
+    /// channel.  Layout: `Tensors[meta, ...state]` with
+    /// `meta = [kind, rung, rows]` as f32 (exact for counts < 2^24,
+    /// far beyond any tune sweep here).
+    pub fn to_payload(&self, rung: usize) -> Payload {
+        match self {
+            FitState::Ridge { gram, xty, rows } => Payload::Tensors(vec![
+                Tensor::vector(vec![0.0, rung as f32, *rows as f32]),
+                Tensor::from_matrix(gram),
+                Tensor::vector(xty.clone()),
+            ]),
+            FitState::Logistic { beta, rows } => Payload::Tensors(vec![
+                Tensor::vector(vec![1.0, rung as f32, *rows as f32]),
+                Tensor::vector(beta.clone()),
+            ]),
+        }
+    }
+
+    /// Inverse of [`to_payload`](FitState::to_payload): (state, rung).
+    pub fn from_payload(p: &Payload) -> Result<(FitState, usize)> {
+        let ts = p.as_tensors()?;
+        let meta = ts
+            .first()
+            .ok_or_else(|| NexusError::Tune("checkpoint: empty payload".into()))?
+            .as_vector()?;
+        if meta.len() != 3 {
+            return Err(NexusError::Tune(format!(
+                "checkpoint: bad meta length {}",
+                meta.len()
+            )));
+        }
+        let rung = meta[1] as usize;
+        let rows = meta[2] as usize;
+        match meta[0] as u32 {
+            0 if ts.len() == 3 => Ok((
+                FitState::Ridge {
+                    gram: ts[1].to_matrix()?,
+                    xty: ts[2].as_vector()?.to_vec(),
+                    rows,
+                },
+                rung,
+            )),
+            1 if ts.len() == 2 => Ok((
+                FitState::Logistic { beta: ts[1].as_vector()?.to_vec(), rows },
+                rung,
+            )),
+            k => Err(NexusError::Tune(format!(
+                "checkpoint: bad kind/arity ({k}, {})",
+                ts.len()
+            ))),
+        }
+    }
+}
+
+impl ModelSpec {
+    /// Fresh training state for a `d`-column design.
+    pub fn warm_start(&self, d: usize) -> FitState {
+        match self {
+            ModelSpec::Ridge { .. } => {
+                FitState::Ridge { gram: Matrix::zeros(d, d), xty: vec![0.0; d], rows: 0 }
+            }
+            ModelSpec::Logistic { .. } => FitState::Logistic { beta: vec![0.0; d], rows: 0 },
+        }
+    }
+
+    /// Extend `state` to cover the first `budget` training rows and
+    /// return the refitted coefficients.  Rows stream through the
+    /// kernel in padded `block`-sized chunks; accumulation is
+    /// sequential in chunk order, so the f32 result is a deterministic
+    /// function of the budget sequence (see [`FitState`]).
+    pub fn advance(
+        &self,
+        kx: &dyn KernelExec,
+        state: &mut FitState,
+        x: &Matrix,
+        target: &[f32],
+        budget: usize,
+        block: usize,
+    ) -> Result<Vec<f32>> {
+        let budget = budget.min(x.rows());
+        let d = x.cols();
+        let lamv = match self {
+            ModelSpec::Ridge { lam } | ModelSpec::Logistic { lam, .. } => {
+                crate::models::ridge::lam_diag(d, d, *lam)
+            }
+        };
+        match (self, state) {
+            (ModelSpec::Ridge { .. }, FitState::Ridge { gram, xty, rows }) => {
+                let mut start = *rows;
+                while start < budget {
+                    let end = (start + block).min(budget);
+                    let (xp, tp, mask) = padded_chunk(x, target, start, end, block);
+                    let (g, b, _n) = kx.gram_block(&xp, &tp, &mask)?;
+                    for (a, v) in gram.data_mut().iter_mut().zip(g.data()) {
+                        *a += v;
+                    }
+                    for (a, v) in xty.iter_mut().zip(&b) {
+                        *a += v;
+                    }
+                    start = end;
+                }
+                *rows = budget.max(*rows);
+                kx.ridge_solve(gram, xty, &lamv)
+            }
+            (ModelSpec::Logistic { iters, .. }, FitState::Logistic { beta, rows }) => {
+                for _ in 0..*iters {
+                    let mut h = Matrix::zeros(d, d);
+                    let mut c = vec![0.0f32; d];
+                    let mut start = 0;
+                    while start < budget {
+                        let end = (start + block).min(budget);
+                        let (xp, tp, mask) = padded_chunk(x, target, start, end, block);
+                        let (hb, cb, _nll) = kx.irls_block(&xp, &tp, &mask, beta)?;
+                        for (a, v) in h.data_mut().iter_mut().zip(hb.data()) {
+                            *a += v;
+                        }
+                        for (a, v) in c.iter_mut().zip(&cb) {
+                            *a += v;
+                        }
+                        start = end;
+                    }
+                    *beta = kx.ridge_solve(&h, &c, &lamv)?;
+                }
+                *rows = budget.max(*rows);
+                Ok(beta.clone())
+            }
+            _ => Err(NexusError::Tune(format!(
+                "fit state does not match model spec {}",
+                self.describe()
+            ))),
+        }
+    }
+}
+
+/// Slice rows `[start, end)` and pad to `block` rows with a 0/1 row
+/// mask, matching the shipped-artifact chunk shape the kernels expect.
+fn padded_chunk(
+    x: &Matrix,
+    target: &[f32],
+    start: usize,
+    end: usize,
+    block: usize,
+) -> (Matrix, Vec<f32>, Vec<f32>) {
+    let m = end - start;
+    let chunk = x.slice_rows(start, end);
+    let xp = if m == block { chunk } else { chunk.pad_rows(block) };
+    let mut tp = vec![0.0f32; block];
+    tp[..m].copy_from_slice(&target[start..end]);
+    let mut mask = vec![0.0f32; block];
+    for v in mask.iter_mut().take(m) {
+        *v = 1.0;
+    }
+    (xp, tp, mask)
+}
+
 /// Predict over arbitrary row counts by padding each chunk to `block`
 /// rows (the shipped artifact shape under PJRT).
 pub fn predict_blocked(
@@ -166,5 +351,82 @@ mod tests {
     fn describe_strings() {
         assert!(ModelSpec::Ridge { lam: 0.1 }.describe().contains("ridge"));
         assert!(ModelSpec::Logistic { lam: 0.1, iters: 3 }.describe().contains("iters=3"));
+    }
+
+    fn ridge_data(n: usize) -> (Matrix, Vec<f32>) {
+        let mut rng = Pcg32::new(7);
+        let x = Matrix::from_fn(n, 4, |_, j| if j == 0 { 1.0 } else { rng.normal_f32() });
+        let y: Vec<f32> = (0..n)
+            .map(|i| 1.5 * x.get(i, 1) - 0.5 * x.get(i, 2) + 0.1 * rng.normal_f32())
+            .collect();
+        (x, y)
+    }
+
+    /// Rung-by-rung advancing is exact: visiting budgets 128 then 256
+    /// accumulates the same chunks in the same order as one 256-row
+    /// advance, so the coefficients are bit-identical.
+    #[test]
+    fn ridge_incremental_advance_bit_identical_to_one_shot() {
+        let (x, y) = ridge_data(256);
+        let spec = ModelSpec::Ridge { lam: 1e-3 };
+        let mut two_step = spec.warm_start(x.cols());
+        spec.advance(&HostBackend, &mut two_step, &x, &y, 128, 64).unwrap();
+        let b2 = spec.advance(&HostBackend, &mut two_step, &x, &y, 256, 64).unwrap();
+        let mut one_shot = spec.warm_start(x.cols());
+        let b1 = spec.advance(&HostBackend, &mut one_shot, &x, &y, 256, 64).unwrap();
+        assert_eq!(b1, b2);
+        assert_eq!(two_step.rows(), 256);
+    }
+
+    /// Logistic advancing warm-starts Newton from the stored beta and
+    /// keeps improving as the budget grows.
+    #[test]
+    fn logistic_advance_tracks_budget() {
+        let mut rng = Pcg32::new(9);
+        let x = Matrix::from_fn(400, 3, |_, j| if j == 0 { 1.0 } else { rng.normal_f32() });
+        let t: Vec<f32> = (0..400)
+            .map(|i| {
+                if rng.bernoulli(crate::data::synth::sigmoid(2.0 * x.get(i, 1)) as f64) {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let spec = ModelSpec::Logistic { lam: 1e-3, iters: 3 };
+        let mut st = spec.warm_start(x.cols());
+        let b_small = spec.advance(&HostBackend, &mut st, &x, &t, 100, 64).unwrap();
+        let small_loss = spec.loss(&HostBackend, &x, &t, &b_small, 64).unwrap();
+        let b_full = spec.advance(&HostBackend, &mut st, &x, &t, 400, 64).unwrap();
+        let full_loss = spec.loss(&HostBackend, &x, &t, &b_full, 64).unwrap();
+        assert!(full_loss < 0.65, "full_loss={full_loss}");
+        assert!(full_loss <= small_loss + 0.05, "{full_loss} vs {small_loss}");
+    }
+
+    #[test]
+    fn fit_state_payload_round_trips() {
+        let (x, y) = ridge_data(128);
+        for spec in [ModelSpec::Ridge { lam: 0.1 }, ModelSpec::Logistic { lam: 0.1, iters: 2 }] {
+            let mut st = spec.warm_start(x.cols());
+            let t: Vec<f32> = y.iter().map(|v| if *v > 0.0 { 1.0 } else { 0.0 }).collect();
+            let target = if matches!(spec, ModelSpec::Ridge { .. }) { &y } else { &t };
+            spec.advance(&HostBackend, &mut st, &x, target, 128, 64).unwrap();
+            let p = st.to_payload(3);
+            let (back, rung) = FitState::from_payload(&p).unwrap();
+            assert_eq!(back, st);
+            assert_eq!(rung, 3);
+            assert_eq!(back.rows(), 128);
+        }
+        assert!(FitState::from_payload(&Payload::Empty).is_err());
+        assert!(FitState::from_payload(&Payload::Tensors(vec![])).is_err());
+    }
+
+    #[test]
+    fn advance_rejects_mismatched_state() {
+        let (x, y) = ridge_data(64);
+        let ridge = ModelSpec::Ridge { lam: 0.1 };
+        let mut st = ModelSpec::Logistic { lam: 0.1, iters: 2 }.warm_start(x.cols());
+        let err = ridge.advance(&HostBackend, &mut st, &x, &y, 64, 64).unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{err}");
     }
 }

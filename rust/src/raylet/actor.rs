@@ -27,11 +27,32 @@ use crate::error::{NexusError, Result};
 use crate::raylet::fault::FaultPlan;
 use crate::raylet::payload::Payload;
 
+/// Built-in method name routed to [`Actor::checkpoint`] by the spawn
+/// loop (double-underscored so it can't collide with user methods).
+pub const CHECKPOINT: &str = "__checkpoint__";
+/// Built-in method name routed to [`Actor::restore`].
+pub const RESTORE: &str = "__restore__";
+
 /// An actor's behaviour: state + message handler.
 pub trait Actor: Send + 'static {
     /// Handle one message, mutating state; the return value is stored
     /// under the call's result id.
     fn handle(&mut self, method: &str, arg: Payload) -> Result<Payload>;
+
+    /// Serialize the actor's state so a replacement actor can pick up
+    /// where this one died.  Invoked through the built-in
+    /// [`CHECKPOINT`] method; the tune plane parks each trial's
+    /// checkpoint in the object store between rungs.  Default:
+    /// unsupported.
+    fn checkpoint(&self) -> Result<Payload> {
+        Err(NexusError::Raylet("actor does not support checkpointing".into()))
+    }
+
+    /// Rebuild state from a [`checkpoint`](Actor::checkpoint) payload
+    /// (built-in [`RESTORE`] method).  Default: unsupported.
+    fn restore(&mut self, _ckpt: Payload) -> Result<()> {
+        Err(NexusError::Raylet("actor does not support restore".into()))
+    }
 }
 
 /// Result handle for an actor call.
@@ -105,7 +126,14 @@ pub fn spawn_with_faults(name: &str, mut actor: impl Actor, fault: FaultPlan) ->
                             }
                             continue;
                         }
-                        break actor.handle(&method, arg);
+                        // Built-in lifecycle methods are intercepted
+                        // here so every Actor gets them without wiring
+                        // them through its own `handle` match.
+                        break match method.as_str() {
+                            CHECKPOINT => actor.checkpoint(),
+                            RESTORE => actor.restore(arg).map(|_| Payload::Empty),
+                            _ => actor.handle(&method, arg),
+                        };
                     };
                     let mut r = rs.results.lock().unwrap();
                     r.insert(id, out);
@@ -250,6 +278,17 @@ mod tests {
                 other => Err(NexusError::Raylet(format!("no method '{other}'"))),
             }
         }
+
+        fn checkpoint(&self) -> Result<Payload> {
+            Ok(Payload::Floats(vec![self.sum as f32, self.n as f32]))
+        }
+
+        fn restore(&mut self, ckpt: Payload) -> Result<()> {
+            let v = ckpt.as_floats()?;
+            self.sum = v[0] as f64;
+            self.n = v[1] as u64;
+            Ok(())
+        }
     }
 
     #[test]
@@ -345,6 +384,30 @@ mod tests {
         // calls fired after the kill also error out cleanly
         let post = a.call("echo", Payload::Scalar(9.0));
         assert!(a.get(&post).is_err());
+    }
+
+    /// The built-in lifecycle methods round-trip state: a fresh actor
+    /// restored from a killed one's checkpoint continues identically.
+    #[test]
+    fn checkpoint_restore_round_trips_state() {
+        let a = spawn("mean", MeanActor { sum: 0.0, n: 0 });
+        for i in 1..=4 {
+            a.call("add", Payload::Scalar(i as f64));
+        }
+        let ckpt = a.ask(CHECKPOINT, Payload::Empty).unwrap();
+        a.kill();
+
+        let b = spawn("mean2", MeanActor { sum: 0.0, n: 0 });
+        b.ask(RESTORE, ckpt).unwrap();
+        let mean = b.ask("mean", Payload::Empty).unwrap().as_scalar().unwrap();
+        assert_eq!(mean, 2.5);
+    }
+
+    #[test]
+    fn checkpoint_unsupported_by_default() {
+        let a = spawn("slow", SlowActor);
+        assert!(a.ask(CHECKPOINT, Payload::Empty).is_err());
+        assert!(a.ask(RESTORE, Payload::Empty).is_err());
     }
 
     #[test]

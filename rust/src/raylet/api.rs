@@ -106,6 +106,10 @@ pub trait Executor: Send + Sync {
     fn get(&self, r: &ObjectRef) -> Result<Arc<Payload>>;
     /// Simulate object loss; lineage reconstruction rebuilds on demand.
     fn drop_object(&self, r: &ObjectRef) -> Result<()>;
+    /// Permanently release an object the driver no longer needs: bytes
+    /// are reclaimed and nothing is reconstructed (unlike
+    /// [`drop_object`](Executor::drop_object), which simulates a loss).
+    fn free_object(&self, r: &ObjectRef) -> Result<()>;
     /// Finish all outstanding work (no-op for eager executors).
     fn drain(&self) -> Result<()> {
         Ok(())
@@ -143,6 +147,9 @@ impl Executor for InlineExec {
     fn drop_object(&self, r: &ObjectRef) -> Result<()> {
         InlineExec::drop_object(self, r)
     }
+    fn free_object(&self, r: &ObjectRef) -> Result<()> {
+        InlineExec::free_object(self, r)
+    }
     fn drain(&self) -> Result<()> {
         InlineExec::drain(self)
     }
@@ -174,6 +181,9 @@ impl Executor for ThreadPool {
     fn drop_object(&self, r: &ObjectRef) -> Result<()> {
         ThreadPool::drop_object(self, r)
     }
+    fn free_object(&self, r: &ObjectRef) -> Result<()> {
+        ThreadPool::free_object(self, r)
+    }
     fn metrics(&self) -> Metrics {
         ThreadPool::metrics(self)
     }
@@ -201,6 +211,9 @@ impl Executor for SimCluster {
     }
     fn drop_object(&self, r: &ObjectRef) -> Result<()> {
         SimCluster::drop_object(self, r)
+    }
+    fn free_object(&self, r: &ObjectRef) -> Result<()> {
+        SimCluster::free_object(self, r)
     }
     fn drain(&self) -> Result<()> {
         SimCluster::drain(self)
@@ -323,6 +336,14 @@ impl RayContext {
         self.exec.drop_object(r)
     }
 
+    /// Permanently release a driver-owned object: bytes leave the store
+    /// and `peak_store_bytes` stops charging for it.  Use for large puts
+    /// (datasets, checkpoints) the run no longer needs; unlike
+    /// [`drop_object`](RayContext::drop_object) nothing is reconstructed.
+    pub fn free_object(&self, r: &ObjectRef) -> Result<()> {
+        self.exec.free_object(r)
+    }
+
     /// Finish all outstanding work (no-op for inline/threads-get patterns).
     pub fn drain(&self) -> Result<()> {
         self.exec.drain()
@@ -418,6 +439,28 @@ mod tests {
         check(RayContext::inline());
         check(RayContext::threads(2));
         check(RayContext::sim(ClusterConfig::default(), true));
+    }
+
+    /// `free_object` is a permanent release: bytes are reclaimed (so
+    /// repeated put/free cycles don't ratchet the resident footprint)
+    /// and nothing is reconstructed.
+    #[test]
+    fn free_object_reclaims_bytes_on_every_executor() {
+        let run = |ctx: RayContext| {
+            let baseline = ctx.metrics().peak_store_bytes;
+            for _ in 0..4 {
+                let r = ctx.put(Payload::Floats(vec![0.0f32; 4096]));
+                ctx.free_object(&r).unwrap();
+            }
+            // Without freeing, four 16 KiB puts would peak at 64 KiB;
+            // freeing between puts keeps the high-water mark at one.
+            let peak = ctx.metrics().peak_store_bytes - baseline;
+            assert!(peak < 2 * 4096 * 4, "{}: peak {}", ctx.mode(), peak);
+            assert_eq!(ctx.metrics().reconstructions, 0);
+        };
+        run(RayContext::inline());
+        run(RayContext::threads(2));
+        run(RayContext::sim(ClusterConfig::default(), true));
     }
 
     #[test]

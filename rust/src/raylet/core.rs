@@ -856,6 +856,24 @@ impl SchedCore {
         }
     }
 
+    /// Permanently release an object the driver no longer needs: every
+    /// replica leaves the store and its bytes are reclaimed.  Unlike
+    /// [`drop_object`](SchedCore::drop_object) this is NOT a simulated
+    /// loss — no reconstruction is counted and no producer re-queued, so
+    /// freeing a `put` (which has no lineage) is the intended use: the
+    /// caller promises nothing will read the ref again.  A later `get`
+    /// of a freed put fails; a freed task *output* would silently
+    /// rebuild through lineage, so prefer freeing driver-owned puts.
+    /// The tune plane frees its train/val dataset and stale trial
+    /// checkpoints this way, keeping repeated runs on one context from
+    /// ratcheting `peak_store_bytes`.
+    pub fn free_object(&mut self, id: u64) {
+        if let Some(e) = self.store.remove(&id) {
+            self.store_bytes -= e.bytes;
+            self.replica_extra_bytes -= (e.nodes.len() - 1) * e.bytes;
+        }
+    }
+
     /// A node died: remove its replicas; objects whose only copy lived
     /// there are lost and re-queued through lineage.
     pub fn drop_node_replicas(&mut self, node: usize) -> Result<()> {

@@ -118,6 +118,13 @@ impl InlineExec {
         Self::run_ready(&mut core)
     }
 
+    /// Permanently release an object (no reconstruction; see
+    /// [`crate::raylet::core::SchedCore::free_object`]).
+    pub fn free_object(&self, r: &ObjectRef) -> Result<()> {
+        self.core.lock().unwrap().free_object(r.0);
+        Ok(())
+    }
+
     pub fn drain(&self) -> Result<()> {
         let mut core = self.core.lock().unwrap();
         Self::run_ready(&mut core)

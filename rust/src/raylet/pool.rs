@@ -221,6 +221,13 @@ impl ThreadPool {
         res
     }
 
+    /// Permanently release an object (no reconstruction; see
+    /// [`crate::raylet::core::SchedCore::free_object`]).
+    pub fn free_object(&self, r: &ObjectRef) -> Result<()> {
+        self.shared.state.lock().unwrap().core.free_object(r.0);
+        Ok(())
+    }
+
     pub fn metrics(&self) -> Metrics {
         let st = self.shared.state.lock().unwrap();
         st.core.base_metrics(self.workers.len())

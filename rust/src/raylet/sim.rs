@@ -599,6 +599,13 @@ impl SimCluster {
         st.core.drop_object(r.0)
     }
 
+    /// Permanently release an object (no reconstruction; see
+    /// [`crate::raylet::core::SchedCore::free_object`]).
+    pub fn free_object(&self, r: &ObjectRef) -> Result<()> {
+        self.inner.lock().unwrap().core.free_object(r.0);
+        Ok(())
+    }
+
     pub fn metrics(&self) -> Metrics {
         let st = self.inner.lock().unwrap();
         let mut m = st.core.base_metrics(self.cfg.nodes);

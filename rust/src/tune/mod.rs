@@ -2,17 +2,26 @@
 //! drop-in for sklearn's grid search inside DML).
 //!
 //! [`space`] declares search spaces, [`search`] generates candidate
-//! configs (grid / random), [`sched`] implements synchronous successive
-//! halving (the ASHA family member that fits a DAG executor), and
-//! [`runner`] executes trials as raylet tasks — serially, on threads, or
-//! on the simulated cluster, which is how Fig 5's serial-vs-distributed
-//! comparison is produced.
+//! configs (grid / random), [`sched`] implements successive-halving
+//! ladders (synchronous SHA and asynchronous ASHA bookkeeping) plus the
+//! median-stopping rule, [`trial`] is the long-lived trial actor that
+//! trains incrementally rung-by-rung with object-store checkpoints, and
+//! [`runner`] executes the policies — grid and SHA as raylet task
+//! batches, ASHA as an actor sweep with virtual-time scheduling — which
+//! is how Fig 5's serial-vs-distributed comparison is produced.
+//! [`sweep`] closes the loop: tune both nuisance models concurrently
+//! and feed the winning specs straight into `models::crossfit`.
 
 pub mod space;
 pub mod search;
 pub mod sched;
+pub mod trial;
 pub mod runner;
+pub mod sweep;
 
-pub use runner::{TuneOutcome, TuneRunner, TrialResult};
+pub use runner::{select_best, AshaOpts, TuneOutcome, TuneRunner, TrialResult};
+pub use sched::{AshaState, MedianRule, ShaSchedule};
 pub use search::{GridSearch, RandomSearch, Searcher};
 pub use space::{ParamSpec, SearchSpace, TrialConfig};
+pub use sweep::{NuisanceSweep, SweepOutcome};
+pub use trial::TrialActor;

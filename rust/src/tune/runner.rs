@@ -1,29 +1,42 @@
 //! Trial execution over the raylet substrate.
 //!
-//! Each trial is one remote task (Ray Tune's model: a trial owns its own
-//! training loop), evaluated at a budget measured in *training rows*:
-//! successive-halving rungs give a trial more rows.  Strategies:
+//! Three policies produce the Fig 5 comparison rows:
 //!
-//! * `run_grid`  — every config at full budget (sklearn GridSearchCV)
-//! * `run_sha`   — synchronous successive halving over the budget ladder
+//! * `run_grid` — every config at full budget (sklearn GridSearchCV);
+//!   each trial is one remote task on whatever [`RayContext`] is handed
+//!   in (serial inline, threads, or the simulated cluster).
+//! * `run_sha`  — synchronous successive halving: rung batches with a
+//!   `drain` barrier between rungs.
+//! * `run_asha` — asynchronous successive halving over long-lived
+//!   *trial actors* ([`TrialActor`]): each trial trains incrementally
+//!   rung-by-rung, promotions happen per-trial as soon as rung quorums
+//!   fill (no barrier), lagging trials are killed, and per-rung
+//!   checkpoints parked in the object store let a killed trial resume
+//!   instead of restarting.
 //!
-//! Both run on whatever [`RayContext`] they're handed — serial inline,
-//! threads, or the simulated cluster — which produces the Fig 5
-//! comparison rows.
+//! ASHA's scheduling decisions run in *virtual time*: dispatches are
+//! list-scheduled onto `workers` virtual slots and completions are
+//! processed in virtual-finish order, so promotion/kill decisions are a
+//! deterministic function of (configs, schedule, costs) — the real
+//! actor threads only supply the arithmetic.  That is what makes the
+//! cross-executor parity and checkpoint-resume bit-identity tests in
+//! `tests/tune_props.rs` possible.
 
 use std::sync::Arc;
 
 use crate::data::matrix::Matrix;
-use crate::error::Result;
+use crate::error::{NexusError, Result};
 use crate::models::cost::CostModel;
 use crate::models::registry::ModelSpec;
+use crate::raylet::actor::{self, ActorHandle, CHECKPOINT, RESTORE};
 use crate::raylet::api::RayContext;
 use crate::raylet::payload::Payload;
 use crate::raylet::task::{ObjectRef, TaskFn};
 use crate::runtime::backend::KernelExec;
 use crate::runtime::tensor::Tensor;
-use crate::tune::sched::ShaSchedule;
+use crate::tune::sched::{AshaState, MedianRule, ShaSchedule};
 use crate::tune::space::TrialConfig;
+use crate::tune::trial::{TrialActor, TRAIN};
 
 /// One finished trial.
 #[derive(Clone, Debug)]
@@ -39,13 +52,110 @@ pub struct TrialResult {
 pub struct TuneOutcome {
     pub best: TrialResult,
     pub trials: Vec<TrialResult>,
-    /// Executor metrics snapshot (virtual time under sim).
+    /// Which policy produced this outcome ("grid" / "sha" / "asha").
+    pub policy: &'static str,
+    /// Executor metrics snapshot (virtual time under sim and asha).
     pub makespan: f64,
+    /// Virtual time at which the eventual winner finished its top rung
+    /// (== makespan for the barrier policies).
+    pub time_to_best: f64,
     pub busy_secs: f64,
     pub tasks_run: u64,
     /// Memory-capped-store activity during the run (0 when uncapped).
     pub spills: u64,
     pub peak_store_bytes: u64,
+    /// Trials killed (ASHA culls, median stops, injected faults).
+    pub killed: u64,
+    /// Trials revived from an object-store checkpoint after a kill.
+    pub resumed: u64,
+    /// Training rows newly covered across all trials and rungs — the
+    /// budget-accounting figure SHA/ASHA keep below the grid's
+    /// `n_trials * n_train`.
+    pub rows_trained: u64,
+}
+
+/// Pick the winner: among the trials evaluated at the deepest budget,
+/// lowest validation loss (ties keep the earliest trial).  Selecting on
+/// loss alone would let a trial culled at a low rung — scored on a
+/// fraction of the data — beat the full-budget winner.
+pub fn select_best(trials: &[TrialResult]) -> Result<TrialResult> {
+    select_best_idx(trials)
+        .map(|i| trials[i].clone())
+        .ok_or_else(|| NexusError::Tune("no trials".into()))
+}
+
+/// Index form of [`select_best`].
+pub fn select_best_idx(trials: &[TrialResult]) -> Option<usize> {
+    let max_budget = trials.iter().map(|t| t.budget).max()?;
+    trials
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.budget == max_budget)
+        .min_by(|(_, a), (_, b)| a.loss.total_cmp(&b.loss))
+        .map(|(i, _)| i)
+}
+
+/// ASHA execution knobs.
+#[derive(Clone, Debug)]
+pub struct AshaOpts {
+    /// Virtual scheduling slots (concurrently running trials).
+    pub workers: usize,
+    /// Fixed virtual overhead added to every rung dispatch (models the
+    /// per-task submit/fetch cost the paper's Sec. 4 measures).
+    pub task_overhead: f64,
+    /// Wire in [`MedianRule`]: kill a trial whose rung loss is worse
+    /// than the median of completed trials at the same rung.
+    pub median_stop: bool,
+    /// Injected worker kills: `(trial, rung)` pairs whose actor dies as
+    /// that rung is dispatched.  The partial rung's work is lost (the
+    /// slot is still charged) and the trial resumes from its last
+    /// object-store checkpoint.
+    pub kill_at: Vec<(usize, usize)>,
+}
+
+impl Default for AshaOpts {
+    fn default() -> AshaOpts {
+        AshaOpts { workers: 4, task_overhead: 0.0, median_stop: false, kill_at: Vec::new() }
+    }
+}
+
+/// Per-trial lifecycle in the ASHA loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum TrialStatus {
+    /// Waiting to start or to be promoted out of `next_level`.
+    Idle,
+    /// A rung is in flight.
+    Running,
+    /// Finished the top rung.
+    Done,
+    /// Culled (unpromotable, median-stopped, or injected kill without
+    /// a later resume).
+    Killed,
+}
+
+/// Driver-side record for one ASHA trial.
+struct TrialSlot {
+    actor: Option<ActorHandle>,
+    status: TrialStatus,
+    /// Rungs completed == next rung index to train.
+    next_level: usize,
+    /// Last object-store checkpoint (state after `next_level` rungs).
+    ckpt: Option<ObjectRef>,
+    /// Training rows covered so far.
+    rows: usize,
+    loss: f64,
+    budget: usize,
+    /// Virtual completion time of the top rung.
+    done_at: f64,
+}
+
+/// One in-flight rung: virtual finish time + the real actor call.
+struct Flight {
+    trial: usize,
+    level: usize,
+    vfinish: f64,
+    seq: u64,
+    call: crate::raylet::actor::CallRef,
 }
 
 /// Tuning problem definition: data + how a config maps to a model.
@@ -95,18 +205,40 @@ impl TuneRunner {
         })
     }
 
+    /// Virtual cost of a from-scratch fit at `budget` rows.
     fn trial_cost(&self, spec: &ModelSpec, budget: usize) -> f64 {
+        self.trial_cost_incremental(spec, 0, budget)
+    }
+
+    /// Virtual cost of extending a fit from `prev_rows` to `budget`
+    /// rows.  Ridge streams normal equations, so only the new rows'
+    /// gram blocks are charged; logistic re-runs its Newton steps over
+    /// the whole prefix (warm-started, same iteration count).
+    fn trial_cost_incremental(&self, spec: &ModelSpec, prev_rows: usize, budget: usize) -> f64 {
         let d = self.x_train.cols();
-        let blocks = budget.div_ceil(self.block);
         match spec {
             ModelSpec::Ridge { .. } => {
+                let blocks = budget.saturating_sub(prev_rows).div_ceil(self.block);
                 blocks as f64 * self.cost.gram(self.block, d) + self.cost.solve(d)
             }
             ModelSpec::Logistic { iters, .. } => {
+                let blocks = budget.div_ceil(self.block);
                 *iters as f64
                     * (blocks as f64 * self.cost.irls(self.block, d) + self.cost.solve(d))
             }
         }
+    }
+
+    /// Row budget for each rung of `sched`, scaled so the top rung
+    /// trains on the full set.
+    fn rung_rows(&self, sched: &ShaSchedule) -> Vec<usize> {
+        let n_train = self.x_train.rows();
+        let r_max = *sched.rungs.last().unwrap();
+        sched
+            .rungs
+            .iter()
+            .map(|&r| (r * n_train / r_max).max(self.block).min(n_train))
+            .collect()
     }
 
     /// Full-budget evaluation of every config (GridSearchCV semantics).
@@ -134,7 +266,13 @@ impl TuneRunner {
             let loss = ctx.get(&r)?.as_scalar()?;
             trials.push(TrialResult { config, loss, budget });
         }
-        self.finish(ctx, trials)
+        // the packed dataset is dead once every trial has read it —
+        // freeing it keeps repeated runs on one context from ratcheting
+        // peak_store_bytes (and forcing spurious spills under a cap)
+        ctx.free_object(&data)?;
+        let mut out = self.finish(ctx, trials, "grid")?;
+        out.rows_trained = (configs.len() * budget) as u64;
+        Ok(out)
     }
 
     /// Synchronous successive halving over a budget ladder measured in
@@ -146,15 +284,15 @@ impl TuneRunner {
         sched: &ShaSchedule,
     ) -> Result<TuneOutcome> {
         let data = self.dataset_ref(ctx);
-        let n_train = self.x_train.rows();
+        let rung_rows = self.rung_rows(sched);
         let mut alive: Vec<usize> = (0..configs.len()).collect();
         let mut trials: Vec<TrialResult> = configs
             .iter()
             .map(|c| TrialResult { config: c.clone(), loss: f64::INFINITY, budget: 0 })
             .collect();
+        let mut rows_trained = 0u64;
 
-        for (level, &rung) in sched.rungs.iter().enumerate() {
-            let budget = (rung * n_train / sched.rungs.last().unwrap()).max(self.block);
+        for (level, &budget) in rung_rows.iter().enumerate() {
             let round: Vec<(usize, ObjectRef)> = alive
                 .iter()
                 .map(|&i| {
@@ -170,6 +308,7 @@ impl TuneRunner {
                     (i, r)
                 })
                 .collect();
+            rows_trained += (round.len() * budget) as u64;
             ctx.drain()?;
             let mut losses = Vec::with_capacity(round.len());
             for (i, r) in round {
@@ -178,30 +317,283 @@ impl TuneRunner {
                 trials[i].budget = budget;
                 losses.push((i, loss));
             }
-            if level + 1 < sched.rungs.len() {
+            if level + 1 < rung_rows.len() {
                 alive = sched.promote(&losses);
             }
         }
-        self.finish(ctx, trials)
+        ctx.free_object(&data)?;
+        let mut out = self.finish(ctx, trials, "sha")?;
+        out.rows_trained = rows_trained;
+        Ok(out)
     }
 
-    fn finish(&self, ctx: &RayContext, trials: Vec<TrialResult>) -> Result<TuneOutcome> {
-        let best = trials
+    /// Asynchronous successive halving over trial actors.
+    ///
+    /// Every config gets a long-lived [`TrialActor`]; rungs are
+    /// dispatched onto `opts.workers` virtual slots and completions
+    /// processed in virtual-finish order.  A trial is promoted out of
+    /// rung `k` as soon as it ranks in the top `1/eta` of the results
+    /// recorded there so far (no barrier); when nothing is promotable
+    /// and nothing is in flight, drain-mode promotions (top
+    /// `max(m/eta, 1)`) guarantee at least one trial reaches the top
+    /// rung.  Trials that end the sweep unpromoted are killed.  After
+    /// each rung the driver parks the actor's checkpoint in the object
+    /// store (freeing the previous one); an injected kill
+    /// (`opts.kill_at`) loses only the rung in flight — the replacement
+    /// actor restores the checkpoint and the final loss is
+    /// bit-identical to an unkilled run.
+    pub fn run_asha(
+        &self,
+        ctx: &RayContext,
+        configs: &[TrialConfig],
+        sched: &ShaSchedule,
+        opts: &AshaOpts,
+    ) -> Result<TuneOutcome> {
+        let l_max = sched.rungs.len();
+        let rung_rows = self.rung_rows(sched);
+        let data_ref = self.dataset_ref(ctx);
+        let data = ctx.get(&data_ref)?;
+
+        let mut trs: Vec<TrialSlot> = (0..configs.len())
+            .map(|_| TrialSlot {
+                actor: None,
+                status: TrialStatus::Idle,
+                next_level: 0,
+                ckpt: None,
+                rows: 0,
+                loss: f64::INFINITY,
+                budget: 0,
+                done_at: 0.0,
+            })
+            .collect();
+        let mut asha = AshaState::new(sched);
+        let mut rule = MedianRule::new();
+        let mut free = vec![0.0f64; opts.workers.max(1)];
+        let mut in_flight: Vec<Flight> = Vec::new();
+        let mut kill_at = opts.kill_at.clone();
+        let (mut killed, mut resumed) = (0u64, 0u64);
+        let (mut rows_trained, mut dispatches) = (0u64, 0u64);
+        let (mut busy, mut vtime) = (0.0f64, 0.0f64);
+        let mut seq = 0u64;
+
+        loop {
+            // 1) pick work: async promotions while anything is in
+            // flight; drain-mode promotions once the cluster is idle.
+            let job = next_job(&trs, &asha, l_max, false).or_else(|| {
+                if in_flight.is_empty() { next_job(&trs, &asha, l_max, true) } else { None }
+            });
+            let slot_open = free.iter().any(|&f| f <= vtime);
+            match job {
+                Some((i, level)) if slot_open || in_flight.is_empty() => {
+                    let s = (0..free.len())
+                        .min_by(|&a, &b| free[a].total_cmp(&free[b]))
+                        .unwrap();
+                    let spec = (self.to_spec)(&configs[i]);
+                    let vcost = self.trial_cost_incremental(&spec, trs[i].rows, rung_rows[level])
+                        + opts.task_overhead;
+                    let start = free[s].max(vtime);
+                    if let Some(p) = kill_at.iter().position(|&(t, l)| t == i && l == level) {
+                        // the worker dies mid-rung: partial work is
+                        // lost (the slot stays charged) and the trial
+                        // falls back to its last checkpoint
+                        kill_at.swap_remove(p);
+                        if let Some(a) = trs[i].actor.take() {
+                            a.kill();
+                        }
+                        free[s] = start + vcost;
+                        busy += vcost;
+                        killed += 1;
+                        continue;
+                    }
+                    if trs[i].actor.is_none() {
+                        let h = actor::spawn(
+                            &format!("trial{i}"),
+                            TrialActor::from_dataset(
+                                spec.clone(),
+                                self.kx.clone(),
+                                &data,
+                                self.block,
+                            )?,
+                        );
+                        if let Some(ck) = &trs[i].ckpt {
+                            h.ask(RESTORE, (*ctx.get(ck)?).clone())?;
+                            resumed += 1;
+                        }
+                        trs[i].actor = Some(h);
+                    }
+                    if level > 0 {
+                        asha.mark_promoted(level - 1, i);
+                    }
+                    let call = trs[i]
+                        .actor
+                        .as_ref()
+                        .unwrap()
+                        .call(TRAIN, Payload::Scalar(rung_rows[level] as f64));
+                    free[s] = start + vcost;
+                    busy += vcost;
+                    seq += 1;
+                    dispatches += 1;
+                    trs[i].status = TrialStatus::Running;
+                    in_flight.push(Flight { trial: i, level, vfinish: free[s], seq, call });
+                }
+                _ => {
+                    if in_flight.is_empty() {
+                        break;
+                    }
+                    // 2) advance virtual time to the next completion
+                    let k = (0..in_flight.len())
+                        .min_by(|&a, &b| {
+                            in_flight[a]
+                                .vfinish
+                                .total_cmp(&in_flight[b].vfinish)
+                                .then(in_flight[a].seq.cmp(&in_flight[b].seq))
+                        })
+                        .unwrap();
+                    let fl = in_flight.remove(k);
+                    vtime = fl.vfinish;
+                    let i = fl.trial;
+                    let loss = {
+                        let h = trs[i].actor.as_ref().expect("running trial has an actor");
+                        h.get(&fl.call)?.as_scalar()?
+                    };
+                    trs[i].loss = loss;
+                    rows_trained += (rung_rows[fl.level].saturating_sub(trs[i].rows)) as u64;
+                    trs[i].rows = rung_rows[fl.level];
+                    trs[i].budget = rung_rows[fl.level];
+                    asha.record(fl.level, i, loss);
+                    if fl.level + 1 == l_max {
+                        trs[i].status = TrialStatus::Done;
+                        trs[i].done_at = vtime;
+                        if let Some(ck) = trs[i].ckpt.take() {
+                            ctx.free_object(&ck)?;
+                        }
+                    } else {
+                        trs[i].status = TrialStatus::Idle;
+                        trs[i].next_level = fl.level + 1;
+                        // park this rung's checkpoint in the object
+                        // store; the previous rung's is now dead weight
+                        let ck = {
+                            let h = trs[i].actor.as_ref().unwrap();
+                            h.ask(CHECKPOINT, Payload::Empty)?
+                        };
+                        let r = ctx.put(ck);
+                        if let Some(old) = trs[i].ckpt.replace(r) {
+                            ctx.free_object(&old)?;
+                        }
+                        if opts.median_stop {
+                            rule.record(fl.level, loss);
+                            if rule.should_stop(fl.level, loss) {
+                                if let Some(a) = trs[i].actor.take() {
+                                    a.kill();
+                                }
+                                trs[i].status = TrialStatus::Killed;
+                                killed += 1;
+                                if let Some(ck) = trs[i].ckpt.take() {
+                                    ctx.free_object(&ck)?;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // cull: whatever is still parked never earned a final promotion
+        for t in trs.iter_mut() {
+            if t.status == TrialStatus::Idle && t.rows > 0 {
+                if let Some(a) = t.actor.take() {
+                    a.kill();
+                }
+                t.status = TrialStatus::Killed;
+                killed += 1;
+            }
+            if let Some(ck) = t.ckpt.take() {
+                ctx.free_object(&ck)?;
+            }
+            if let Some(a) = t.actor.take() {
+                a.stop();
+            }
+        }
+        ctx.free_object(&data_ref)?;
+
+        let trials: Vec<TrialResult> = configs
             .iter()
-            .min_by(|a, b| a.loss.total_cmp(&b.loss))
-            .cloned()
-            .ok_or_else(|| crate::error::NexusError::Tune("no trials".into()))?;
+            .zip(&trs)
+            .map(|(c, t)| TrialResult { config: c.clone(), loss: t.loss, budget: t.budget })
+            .collect();
+        let best_idx = select_best_idx(&trials)
+            .ok_or_else(|| NexusError::Tune("no trials".into()))?;
+        let m = ctx.metrics();
+        Ok(TuneOutcome {
+            best: trials[best_idx].clone(),
+            time_to_best: trs[best_idx].done_at,
+            trials,
+            policy: "asha",
+            makespan: free.iter().fold(0.0f64, |a, &b| a.max(b)),
+            busy_secs: busy,
+            tasks_run: dispatches,
+            spills: m.spills,
+            peak_store_bytes: m.peak_store_bytes,
+            killed,
+            resumed,
+            rows_trained,
+        })
+    }
+
+    fn finish(
+        &self,
+        ctx: &RayContext,
+        trials: Vec<TrialResult>,
+        policy: &'static str,
+    ) -> Result<TuneOutcome> {
+        let best = select_best(&trials)?;
         let m = ctx.metrics();
         Ok(TuneOutcome {
             best,
             trials,
+            policy,
             makespan: m.makespan,
+            time_to_best: m.makespan,
             busy_secs: m.busy_secs,
             tasks_run: m.tasks_run,
             spills: m.spills,
             peak_store_bytes: m.peak_store_bytes,
+            killed: 0,
+            resumed: 0,
+            rows_trained: 0,
         })
     }
+}
+
+/// Deterministic job selection: the deepest promotable parked trial
+/// (winners climb first, ties to the lowest trial id), else the first
+/// not-yet-started trial at the base rung.
+fn next_job(
+    trs: &[TrialSlot],
+    asha: &AshaState,
+    l_max: usize,
+    final_rule: bool,
+) -> Option<(usize, usize)> {
+    let mut best: Option<(usize, usize)> = None; // (level, trial)
+    for (i, t) in trs.iter().enumerate() {
+        if t.status != TrialStatus::Idle || t.next_level == 0 || t.next_level >= l_max {
+            continue;
+        }
+        let ok = if final_rule {
+            asha.promotable_final(t.next_level - 1, i)
+        } else {
+            asha.promotable(t.next_level - 1, i)
+        };
+        if ok && best.is_none_or(|(bl, _)| t.next_level > bl) {
+            best = Some((t.next_level, i));
+        }
+    }
+    if let Some((l, i)) = best {
+        return Some((i, l));
+    }
+    trs.iter()
+        .position(|t| t.status == TrialStatus::Idle && t.next_level == 0 && t.rows == 0)
+        .map(|i| (i, 0))
 }
 
 #[cfg(test)]
@@ -250,6 +642,7 @@ mod tests {
         // point is that the crushing penalties (1e3, 1e5) lose.
         assert!(out.best.config.get("lam") <= 10.0, "best={:?}", out.best);
         assert_eq!(out.trials.len(), 6);
+        assert_eq!(out.policy, "grid");
         // losses are monotone-ish: the huge penalty is much worse
         let worst = out.trials.iter().map(|t| t.loss).fold(0.0, f64::max);
         assert!(worst > 2.0 * out.best.loss);
@@ -258,7 +651,7 @@ mod tests {
     #[test]
     fn sha_matches_grid_winner_with_less_budget() {
         let runner = ridge_problem(2000);
-        let sched = ShaSchedule::geometric(1, 4, 2);
+        let sched = ShaSchedule::geometric(1, 4, 2).unwrap();
         let grid_out = runner.run_grid(&RayContext::inline(), &lam_space()).unwrap();
         let sha_out = runner
             .run_sha(&RayContext::inline(), &lam_space(), &sched)
@@ -271,6 +664,7 @@ mod tests {
             sha_out.busy_secs,
             grid_out.busy_secs
         );
+        assert!(sha_out.rows_trained <= grid_out.rows_trained);
     }
 
     #[test]
@@ -295,6 +689,109 @@ mod tests {
         let out = runner.run_grid(&sim, &cfgs).unwrap();
         // with 6 equal-cost trials on 6 slots, makespan ~ max trial cost,
         // far below the sum of costs
-        assert!(out.makespan < out.busy_secs * 0.5, "makespan={} busy={}", out.makespan, out.busy_secs);
+        let (ms, busy) = (out.makespan, out.busy_secs);
+        assert!(ms < busy * 0.5, "makespan={ms} busy={busy}");
+    }
+
+    /// Regression (seed bug): `finish` picked the global min loss, so a
+    /// low-budget trial with a lucky validation score beat the
+    /// full-budget winner.
+    #[test]
+    fn select_best_prefers_max_budget_over_lucky_low_rung() {
+        let mk = |lam: f64, loss: f64, budget: usize| TrialResult {
+            config: SearchSpace::new()
+                .with("lam", ParamSpec::Grid(vec![lam]))
+                .grid(0)
+                .pop()
+                .unwrap(),
+            loss,
+            budget,
+        };
+        let trials = vec![
+            mk(1.0, 0.05, 250),  // culled early, lucky low-budget loss
+            mk(2.0, 0.20, 1000), // full-budget winner
+            mk(3.0, 0.30, 1000),
+            mk(4.0, 0.90, 250),
+        ];
+        let best = select_best(&trials).unwrap();
+        assert_eq!(best.config.get("lam"), 2.0, "must not pick the 250-row trial");
+        assert_eq!(best.budget, 1000);
+        // ties at max budget keep the earlier trial
+        let tied = vec![mk(1.0, 0.2, 500), mk(2.0, 0.2, 500)];
+        assert_eq!(select_best(&tied).unwrap().config.get("lam"), 1.0);
+        assert!(select_best(&[]).is_err());
+    }
+
+    #[test]
+    fn asha_finds_the_same_winner_class() {
+        let runner = ridge_problem(1000);
+        let sched = ShaSchedule::geometric(1, 4, 2).unwrap();
+        let out = runner
+            .run_asha(&RayContext::inline(), &lam_space(), &sched, &AshaOpts::default())
+            .unwrap();
+        assert_eq!(out.policy, "asha");
+        assert!(out.best.config.get("lam") <= 10.0, "best={:?}", out.best);
+        // the winner trained at full budget
+        assert_eq!(out.best.budget, 1000);
+        // culled trials were killed, and time-to-best never exceeds the
+        // sweep's makespan
+        assert!(out.killed > 0, "killed={}", out.killed);
+        assert!(out.time_to_best <= out.makespan + 1e-12);
+        assert!(out.time_to_best > 0.0);
+    }
+
+    #[test]
+    fn asha_is_deterministic_across_runs() {
+        let runner = ridge_problem(600);
+        let sched = ShaSchedule::geometric(1, 4, 2).unwrap();
+        let opts = AshaOpts { workers: 3, ..AshaOpts::default() };
+        let a = runner
+            .run_asha(&RayContext::inline(), &lam_space(), &sched, &opts)
+            .unwrap();
+        let b = runner
+            .run_asha(&RayContext::inline(), &lam_space(), &sched, &opts)
+            .unwrap();
+        assert_eq!(a.best.config, b.best.config);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        for (x, y) in a.trials.iter().zip(&b.trials) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+            assert_eq!(x.budget, y.budget);
+        }
+    }
+
+    #[test]
+    fn asha_time_to_best_beats_synchronous_sha() {
+        let runner = ridge_problem(2000);
+        let sched = ShaSchedule::geometric(1, 8, 2).unwrap();
+        let opts = AshaOpts { workers: 4, ..AshaOpts::default() };
+        let asha = runner
+            .run_asha(&RayContext::inline(), &lam_space(), &sched, &opts)
+            .unwrap();
+        // synchronous SHA through the sim cluster with matching slots
+        let sim = RayContext::sim(
+            ClusterConfig { nodes: 4, slots_per_node: 1, ..Default::default() },
+            true,
+        );
+        let sha = runner.run_sha(&sim, &lam_space(), &sched).unwrap();
+        assert!(
+            asha.time_to_best < sha.makespan,
+            "asha time-to-best {} >= sha makespan {}",
+            asha.time_to_best,
+            sha.makespan
+        );
+    }
+
+    #[test]
+    fn asha_median_stop_kills_stragglers() {
+        let runner = ridge_problem(1000);
+        let sched = ShaSchedule::geometric(1, 4, 2).unwrap();
+        let with_stop = AshaOpts { median_stop: true, ..AshaOpts::default() };
+        let out = runner
+            .run_asha(&RayContext::inline(), &lam_space(), &sched, &with_stop)
+            .unwrap();
+        // the crushing penalties lose at rung 0 and get median-stopped
+        // (or culled); either way the winner is unaffected
+        assert!(out.best.config.get("lam") <= 10.0);
+        assert!(out.killed > 0);
     }
 }

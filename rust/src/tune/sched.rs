@@ -1,10 +1,15 @@
-//! Early-stopping schedulers: synchronous successive halving (SHA, the
-//! synchronous member of the ASHA family) and a median-stopping rule.
+//! Early-stopping schedulers: successive halving ladders (SHA and its
+//! asynchronous variant ASHA) and a median-stopping rule.
 //!
 //! SHA with reduction factor eta: all trials run at the smallest budget;
 //! the top 1/eta advance to an eta-times-larger budget, repeating until
 //! one rung remains.  Total work ~ n_trials * r_min * log_eta levels —
 //! far less than n_trials * r_max, which is the Fig 5 efficiency claim.
+//! ASHA drops SHA's per-rung barrier: [`AshaState`] promotes a trial the
+//! moment it ranks in the top 1/eta of the results recorded *so far* at
+//! its rung, so fast trials climb while slow ones are still training.
+
+use crate::error::{NexusError, Result};
 
 /// Budget ladder for successive halving.
 #[derive(Clone, Debug)]
@@ -16,15 +21,34 @@ pub struct ShaSchedule {
 
 impl ShaSchedule {
     /// Geometric ladder from `r_min` to `r_max` with factor `eta`.
-    pub fn geometric(r_min: usize, r_max: usize, eta: usize) -> ShaSchedule {
-        assert!(eta >= 2 && r_min >= 1 && r_max >= r_min);
+    ///
+    /// When the geometric progression overshoots `r_max` (e.g.
+    /// `geometric(1, 4, 3)`), `r_max` is appended as the final rung so
+    /// the ladder always trains its survivors at full budget — the
+    /// invariant `rungs.last() == r_max` that budget rescaling in the
+    /// runner depends on.
+    pub fn geometric(r_min: usize, r_max: usize, eta: usize) -> Result<ShaSchedule> {
+        if eta < 2 {
+            return Err(NexusError::Tune(format!("eta must be >= 2, got {eta}")));
+        }
+        if r_min < 1 {
+            return Err(NexusError::Tune("r_min must be >= 1".into()));
+        }
+        if r_max < r_min {
+            return Err(NexusError::Tune(format!(
+                "r_max ({r_max}) must be >= r_min ({r_min})"
+            )));
+        }
         let mut rungs = vec![r_min];
         let mut r = r_min;
         while r * eta <= r_max {
             r *= eta;
             rungs.push(r);
         }
-        ShaSchedule { eta, rungs }
+        if *rungs.last().unwrap() < r_max {
+            rungs.push(r_max);
+        }
+        Ok(ShaSchedule { eta, rungs })
     }
 
     /// How many of `n` trials survive into rung `level+1`.
@@ -35,7 +59,7 @@ impl ShaSchedule {
     /// Indices of the trials (by ascending loss) promoted to the next rung.
     pub fn promote(&self, losses: &[(usize, f64)]) -> Vec<usize> {
         let mut sorted = losses.to_vec();
-        sorted.sort_by(|a, b| a.1.total_cmp(&b.1));
+        sorted.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
         sorted.truncate(self.survivors(losses.len()));
         sorted.into_iter().map(|(i, _)| i).collect()
     }
@@ -50,6 +74,91 @@ impl ShaSchedule {
             alive = self.survivors(alive);
         }
         total
+    }
+}
+
+/// Driver-side ASHA bookkeeping: which trials reported what at each
+/// rung, and which have already been promoted out of it.
+///
+/// Decisions are deterministic: rankings sort by (loss, trial id), so
+/// ties never depend on arrival order.
+#[derive(Clone, Debug)]
+pub struct AshaState {
+    eta: usize,
+    /// (trial, loss) results recorded per rung.
+    recorded: Vec<Vec<(usize, f64)>>,
+    /// Trials already promoted out of each rung.
+    promoted: Vec<Vec<usize>>,
+}
+
+impl AshaState {
+    pub fn new(sched: &ShaSchedule) -> AshaState {
+        AshaState {
+            eta: sched.eta,
+            recorded: vec![Vec::new(); sched.rungs.len()],
+            promoted: vec![Vec::new(); sched.rungs.len()],
+        }
+    }
+
+    /// Record a trial's validation loss at `level`.
+    pub fn record(&mut self, level: usize, trial: usize, loss: f64) {
+        self.recorded[level].push((trial, loss));
+    }
+
+    /// Results recorded so far at `level`.
+    pub fn recorded_at(&self, level: usize) -> usize {
+        self.recorded[level].len()
+    }
+
+    /// Trial ids at `level` ranked by (loss, id), best first.
+    fn ranked(&self, level: usize) -> Vec<usize> {
+        let mut v = self.recorded[level].clone();
+        v.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        v.into_iter().map(|(i, _)| i).collect()
+    }
+
+    /// Asynchronous promotion check: with m results recorded at
+    /// `level`, the top floor(m/eta) not yet promoted are eligible.
+    /// Requires m >= eta so an early finisher can't ride an empty rung
+    /// straight to full budget.
+    pub fn promotable(&self, level: usize, trial: usize) -> bool {
+        let m = self.recorded[level].len();
+        if m < self.eta {
+            return false;
+        }
+        self.in_top(level, trial, m / self.eta)
+    }
+
+    /// Drain-time promotion check (nothing left in flight): top
+    /// max(m/eta, 1), which guarantees at least one trial climbs out of
+    /// every non-empty rung and the sweep terminates.
+    pub fn promotable_final(&self, level: usize, trial: usize) -> bool {
+        let m = self.recorded[level].len();
+        if m == 0 {
+            return false;
+        }
+        self.in_top(level, trial, (m / self.eta).max(1))
+    }
+
+    fn in_top(&self, level: usize, trial: usize, k: usize) -> bool {
+        self.ranked(level)
+            .iter()
+            .take(k)
+            .any(|&t| t == trial && !self.promoted[level].contains(&t))
+    }
+
+    /// Mark a trial as promoted out of `level` (it stops occupying a
+    /// promotable slot there).
+    pub fn mark_promoted(&mut self, level: usize, trial: usize) {
+        self.promoted[level].push(trial);
+    }
+
+    /// A trial is doomed at `level` once every result is in (`total`
+    /// trials reached the rung) and it still doesn't rank in the final
+    /// top-k — ASHA kills it rather than letting it idle.
+    pub fn doomed(&self, level: usize, trial: usize, total: usize) -> bool {
+        let m = self.recorded[level].len();
+        m == total && !self.in_top(level, trial, (m / self.eta).max(1))
     }
 }
 
@@ -92,26 +201,85 @@ mod tests {
 
     #[test]
     fn geometric_ladder() {
-        let s = ShaSchedule::geometric(1, 9, 3);
+        let s = ShaSchedule::geometric(1, 9, 3).unwrap();
         assert_eq!(s.rungs, vec![1, 3, 9]);
-        assert_eq!(ShaSchedule::geometric(2, 16, 2).rungs, vec![2, 4, 8, 16]);
+        assert_eq!(ShaSchedule::geometric(2, 16, 2).unwrap().rungs, vec![2, 4, 8, 16]);
+    }
+
+    /// The ladder always tops out at exactly `r_max`, even when the
+    /// geometric progression overshoots it.
+    #[test]
+    fn geometric_ladder_always_reaches_r_max() {
+        assert_eq!(ShaSchedule::geometric(1, 4, 3).unwrap().rungs, vec![1, 3, 4]);
+        assert_eq!(ShaSchedule::geometric(2, 7, 2).unwrap().rungs, vec![2, 4, 7]);
+        assert_eq!(ShaSchedule::geometric(5, 5, 2).unwrap().rungs, vec![5]);
+        for (r_min, r_max, eta) in [(1, 100, 3), (3, 17, 2), (1, 2, 4)] {
+            let s = ShaSchedule::geometric(r_min, r_max, eta).unwrap();
+            assert_eq!(*s.rungs.last().unwrap(), r_max, "{s:?}");
+            assert_eq!(s.rungs[0], r_min);
+            assert!(s.rungs.windows(2).all(|w| w[0] < w[1]), "{s:?}");
+        }
+    }
+
+    #[test]
+    fn geometric_bad_input_is_error_not_panic() {
+        assert!(ShaSchedule::geometric(1, 9, 1).is_err());
+        assert!(ShaSchedule::geometric(0, 9, 2).is_err());
+        assert!(ShaSchedule::geometric(9, 3, 2).is_err());
+        let err = ShaSchedule::geometric(9, 3, 2).unwrap_err();
+        assert!(err.to_string().contains("r_max"), "{err}");
     }
 
     #[test]
     fn promote_keeps_best() {
-        let s = ShaSchedule::geometric(1, 9, 3);
+        let s = ShaSchedule::geometric(1, 9, 3).unwrap();
         let losses = vec![(0, 0.9), (1, 0.1), (2, 0.5), (3, 0.2), (4, 0.8), (5, 0.3)];
         let keep = s.promote(&losses);
         assert_eq!(keep, vec![1, 3]); // top 6/3 = 2
     }
 
+    /// Exact loss ties resolve by trial id, not input order.
+    #[test]
+    fn promote_breaks_ties_by_trial_id() {
+        let s = ShaSchedule::geometric(1, 9, 3).unwrap();
+        let losses = vec![(5, 0.2), (2, 0.2), (0, 0.9), (1, 0.2), (4, 0.8), (3, 0.9)];
+        assert_eq!(s.promote(&losses), vec![1, 2]);
+    }
+
     #[test]
     fn sha_budget_beats_full_grid() {
-        let s = ShaSchedule::geometric(1, 9, 3);
+        let s = ShaSchedule::geometric(1, 9, 3).unwrap();
         let n = 27;
         let sha = s.total_budget(n);
         let full = n * 9;
         assert!(sha < full / 2, "sha={sha} full={full}");
+    }
+
+    #[test]
+    fn asha_promotes_on_partial_quorum() {
+        let s = ShaSchedule::geometric(1, 9, 3).unwrap();
+        let mut a = AshaState::new(&s);
+        a.record(0, 0, 0.5);
+        a.record(0, 1, 0.2);
+        // only 2 of 9 trials reported: below the eta quorum, nobody moves
+        assert!(!a.promotable(0, 1));
+        a.record(0, 2, 0.8);
+        // 3 recorded, k = 3/3 = 1: the best (trial 1) is promotable now,
+        // long before the other 6 trials reach the rung
+        assert!(a.promotable(0, 1));
+        assert!(!a.promotable(0, 0));
+        a.mark_promoted(0, 1);
+        assert!(!a.promotable(0, 1), "promotion is consumed");
+        // drain-time: k = max(3/3,1) = 1 — next best is NOT in top-1
+        assert!(!a.promotable_final(0, 0));
+        for i in 3..9 {
+            a.record(0, i, 0.9 + i as f64 * 0.01);
+        }
+        // all 9 in: k = 3; trials 0 (0.5) and 2 (0.8) now rank 2nd/3rd
+        assert!(a.promotable(0, 0));
+        assert!(a.promotable(0, 2));
+        assert!(a.doomed(0, 5, 9));
+        assert!(!a.doomed(0, 0, 9));
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Nuisance-model sweep: tune both DML nuisance models concurrently and
+//! feed the winners straight into cross-fitting.
+//!
+//! The paper's §5.2 workflow — `tune_grid_search_reg` for `model_y`
+//! and `tune_grid_search_clf` for `model_t`, then DML with the selected
+//! hyper-parameters — collapsed into one entry point: two ASHA sweeps
+//! run on parallel driver threads over the same [`RayContext`], and the
+//! winning specs are written into a [`CrossfitConfig`] that goes
+//! directly to [`crossfit::run`].
+
+use std::sync::Arc;
+
+use crate::data::synth::CausalDataset;
+use crate::error::{NexusError, Result};
+use crate::models::cost::CostModel;
+use crate::models::crossfit::{self, pad_covariates, CrossfitConfig, CrossfitOutput};
+use crate::models::registry::ModelSpec;
+use crate::raylet::api::RayContext;
+use crate::runtime::backend::KernelExec;
+use crate::tune::runner::{AshaOpts, TuneOutcome, TuneRunner};
+use crate::tune::sched::ShaSchedule;
+use crate::tune::space::{ParamSpec, SearchSpace, TrialConfig};
+
+/// What to sweep and how to schedule it.
+#[derive(Clone, Debug)]
+pub struct NuisanceSweep {
+    /// Ridge/logistic penalty grid (shared by both models).
+    pub lam_grid: Vec<f64>,
+    /// Newton-step grid for the logistic treatment model.
+    pub iters_grid: Vec<f64>,
+    pub sched: ShaSchedule,
+    pub opts: AshaOpts,
+    /// Fraction of rows held out as the tuning validation split.
+    pub val_frac: f64,
+}
+
+impl Default for NuisanceSweep {
+    fn default() -> NuisanceSweep {
+        NuisanceSweep {
+            lam_grid: vec![1e-5, 1e-3, 1e-1, 10.0],
+            iters_grid: vec![2.0, 4.0, 6.0, 8.0],
+            sched: ShaSchedule::geometric(1, 4, 2).expect("static ladder"),
+            opts: AshaOpts::default(),
+            val_frac: 0.2,
+        }
+    }
+}
+
+/// Everything the sweep produced: both tune outcomes plus the
+/// cross-fitting run they selected.
+pub struct SweepOutcome {
+    pub y_outcome: TuneOutcome,
+    pub t_outcome: TuneOutcome,
+    /// The config cross-fitting actually ran with (winners filled in).
+    pub cfg: CrossfitConfig,
+    pub crossfit: CrossfitOutput,
+}
+
+/// Tune `model_y` (ridge) and `model_t` (logistic) concurrently with
+/// ASHA, then cross-fit with the winning hyper-parameters.
+pub fn tune_then_crossfit(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    cost: &CostModel,
+    ds: &CausalDataset,
+    base: &CrossfitConfig,
+    sweep: &NuisanceSweep,
+) -> Result<SweepOutcome> {
+    let xp = pad_covariates(&ds.x, base.d_pad)?;
+    let n = xp.rows();
+    let n_val = ((n as f64 * sweep.val_frac) as usize).clamp(1, n - 1);
+    let n_train = n - n_val;
+
+    let runner = |target: &[f32], to_spec: fn(&TrialConfig) -> ModelSpec| TuneRunner {
+        kx: kx.clone(),
+        cost: cost.clone(),
+        x_train: xp.slice_rows(0, n_train),
+        target_train: target[..n_train].to_vec(),
+        x_val: xp.slice_rows(n_train, n),
+        target_val: target[n_train..].to_vec(),
+        to_spec,
+        block: base.block,
+    };
+    let runner_y = runner(&ds.y, |c| ModelSpec::Ridge { lam: c.get("lam") as f32 });
+    let runner_t = runner(&ds.t, |c| ModelSpec::Logistic {
+        lam: c.get("lam") as f32,
+        iters: c.get_usize("iters"),
+    });
+    let cfgs_y =
+        SearchSpace::new().with("lam", ParamSpec::Grid(sweep.lam_grid.clone())).grid(0);
+    let cfgs_t = SearchSpace::new()
+        .with("lam", ParamSpec::Grid(sweep.lam_grid.clone()))
+        .with("iters", ParamSpec::Grid(sweep.iters_grid.clone()))
+        .grid(0);
+
+    // both sweeps share the context (and its object store); each drives
+    // its own virtual-time ASHA loop on its own driver thread
+    let (y_outcome, t_outcome) = std::thread::scope(|s| {
+        let hy = s.spawn(|| runner_y.run_asha(ctx, &cfgs_y, &sweep.sched, &sweep.opts));
+        let ht = s.spawn(|| runner_t.run_asha(ctx, &cfgs_t, &sweep.sched, &sweep.opts));
+        let y = hy.join().map_err(|_| NexusError::Tune("model_y sweep panicked".into()));
+        let t = ht.join().map_err(|_| NexusError::Tune("model_t sweep panicked".into()));
+        (y, t)
+    });
+    let (y_outcome, t_outcome) = (y_outcome??, t_outcome??);
+
+    let cfg = CrossfitConfig {
+        lam_y: y_outcome.best.config.get("lam") as f32,
+        lam_t: t_outcome.best.config.get("lam") as f32,
+        irls_iters: t_outcome.best.config.get_usize("iters"),
+        ..base.clone()
+    };
+    let crossfit = crossfit::run(ctx, kx, cost, ds, &cfg)?;
+    Ok(SweepOutcome { y_outcome, t_outcome, cfg, crossfit })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::runtime::backend::HostBackend;
+
+    #[test]
+    fn sweep_selects_sane_winners_and_crossfits() {
+        let ds = generate(&SynthConfig { n: 1200, d: 6, ..Default::default() });
+        let base =
+            CrossfitConfig { cv: 3, block: 128, d_pad: 8, d_real: 6, ..Default::default() };
+        let sweep = NuisanceSweep {
+            lam_grid: vec![1e-4, 1e-2, 1.0, 1e4],
+            iters_grid: vec![2.0, 4.0],
+            ..Default::default()
+        };
+        let ctx = RayContext::inline();
+        let out = tune_then_crossfit(
+            &ctx,
+            Arc::new(HostBackend),
+            &CostModel::default(),
+            &ds,
+            &base,
+            &sweep,
+        )
+        .unwrap();
+        // winners come from the grids, and the crushing penalty loses
+        assert!(sweep.lam_grid.contains(&(out.cfg.lam_y as f64)));
+        assert!(sweep.lam_grid.contains(&(out.cfg.lam_t as f64)));
+        assert!(out.cfg.lam_y < 1e4);
+        assert!([2usize, 4].contains(&out.cfg.irls_iters));
+        // the selected config went straight into cross-fitting
+        assert_eq!(out.crossfit.cfg.lam_y, out.cfg.lam_y);
+        assert!(!out.crossfit.dry);
+        assert_eq!(out.crossfit.y_res.len(), ds.n());
+        // both sweeps ran their full ladders at the top budget
+        assert!(out.y_outcome.best.budget > 0);
+        assert!(out.t_outcome.best.budget > 0);
+    }
+}

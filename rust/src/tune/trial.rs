@@ -1,0 +1,208 @@
+//! The trial actor: one long-lived stateful worker per hyper-parameter
+//! configuration.
+//!
+//! Ray Tune's model, mapped onto the raylet actor layer: a trial owns
+//! its training loop and survives across rungs.  Each `train` call
+//! extends the fit to a larger row budget (warm-started from the
+//! previous rung via [`FitState`]) and reports the held-out validation
+//! loss; the built-in actor [`CHECKPOINT`]/[`RESTORE`] hooks serialize
+//! (state, rung) so the driver can park a snapshot in the object store
+//! and revive a killed trial without retraining completed rungs.
+//!
+//! [`CHECKPOINT`]: crate::raylet::actor::CHECKPOINT
+//! [`RESTORE`]: crate::raylet::actor::RESTORE
+
+use std::sync::Arc;
+
+use crate::data::matrix::Matrix;
+use crate::error::{NexusError, Result};
+use crate::models::registry::{FitState, ModelSpec};
+use crate::raylet::actor::Actor;
+use crate::raylet::payload::Payload;
+use crate::runtime::backend::KernelExec;
+
+/// Method name for the rung-training call (`arg` = row budget as a
+/// scalar, returns the validation loss as a scalar).
+pub const TRAIN: &str = "train";
+
+/// A hyper-parameter trial running as an actor.
+pub struct TrialActor {
+    spec: ModelSpec,
+    kx: Arc<dyn KernelExec>,
+    x_train: Matrix,
+    target_train: Vec<f32>,
+    x_val: Matrix,
+    target_val: Vec<f32>,
+    block: usize,
+    state: FitState,
+    /// Rungs completed so far (== the next rung index to train).
+    rung: usize,
+}
+
+impl TrialActor {
+    /// Build a trial from the packed dataset payload
+    /// (`Tensors[x_train, y_train, x_val, y_val]`, the layout
+    /// `TuneRunner::dataset_ref` puts in the object store).
+    pub fn from_dataset(
+        spec: ModelSpec,
+        kx: Arc<dyn KernelExec>,
+        data: &Payload,
+        block: usize,
+    ) -> Result<TrialActor> {
+        let ts = data.as_tensors()?;
+        if ts.len() != 4 {
+            return Err(NexusError::Tune(format!(
+                "trial dataset: expected 4 tensors, got {}",
+                ts.len()
+            )));
+        }
+        let x_train = ts[0].to_matrix()?;
+        let state = spec.warm_start(x_train.cols());
+        Ok(TrialActor {
+            spec,
+            kx,
+            x_train,
+            target_train: ts[1].data.clone(),
+            x_val: ts[2].to_matrix()?,
+            target_val: ts[3].data.clone(),
+            block,
+            state,
+            rung: 0,
+        })
+    }
+
+    /// Rungs completed (exposed for tests).
+    pub fn rung(&self) -> usize {
+        self.rung
+    }
+}
+
+impl Actor for TrialActor {
+    fn handle(&mut self, method: &str, arg: Payload) -> Result<Payload> {
+        match method {
+            TRAIN => {
+                let budget = arg.as_scalar()? as usize;
+                let beta = self.spec.advance(
+                    self.kx.as_ref(),
+                    &mut self.state,
+                    &self.x_train,
+                    &self.target_train,
+                    budget,
+                    self.block,
+                )?;
+                let loss = self.spec.loss(
+                    self.kx.as_ref(),
+                    &self.x_val,
+                    &self.target_val,
+                    &beta,
+                    self.block,
+                )?;
+                self.rung += 1;
+                Ok(Payload::Scalar(loss))
+            }
+            other => Err(NexusError::Tune(format!("trial actor: no method '{other}'"))),
+        }
+    }
+
+    fn checkpoint(&self) -> Result<Payload> {
+        Ok(self.state.to_payload(self.rung))
+    }
+
+    fn restore(&mut self, ckpt: Payload) -> Result<()> {
+        let (state, rung) = FitState::from_payload(&ckpt)?;
+        self.state = state;
+        self.rung = rung;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::raylet::actor::{spawn, CHECKPOINT, RESTORE};
+    use crate::runtime::backend::HostBackend;
+    use crate::runtime::tensor::Tensor;
+    use crate::util::rng::Pcg32;
+
+    fn dataset(n: usize) -> Payload {
+        let mut rng = Pcg32::new(21);
+        let mut make = |n: usize, rng: &mut Pcg32| {
+            let x = Matrix::from_fn(n, 4, |_, j| if j == 0 { 1.0 } else { rng.normal_f32() });
+            let y: Vec<f32> = (0..n)
+                .map(|i| 1.2 * x.get(i, 1) - 0.4 * x.get(i, 3) + 0.2 * rng.normal_f32())
+                .collect();
+            (x, y)
+        };
+        let (xt, yt) = make(n, &mut rng);
+        let (xv, yv) = make(n / 4, &mut rng);
+        Payload::Tensors(vec![
+            Tensor::from_matrix(&xt),
+            Tensor::vector(yt),
+            Tensor::from_matrix(&xv),
+            Tensor::vector(yv),
+        ])
+    }
+
+    fn trial(data: &Payload) -> TrialActor {
+        TrialActor::from_dataset(
+            ModelSpec::Ridge { lam: 1e-3 },
+            Arc::new(HostBackend),
+            data,
+            64,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn trains_rung_by_rung_and_improves() {
+        let data = dataset(512);
+        let a = spawn("trial", trial(&data));
+        let l1 = a.ask(TRAIN, Payload::Scalar(128.0)).unwrap().as_scalar().unwrap();
+        let l2 = a.ask(TRAIN, Payload::Scalar(512.0)).unwrap().as_scalar().unwrap();
+        assert!(l1.is_finite() && l2.is_finite());
+        assert!(l2 <= l1 + 0.05, "more rows should not hurt much: {l1} -> {l2}");
+    }
+
+    /// Kill a trial after rung 1, revive a replacement from its
+    /// checkpoint, and finish the ladder: the final loss is
+    /// bit-identical to a never-killed trial's.
+    #[test]
+    fn checkpoint_resume_is_bit_identical() {
+        let data = dataset(512);
+        let rungs = [128.0, 256.0, 512.0];
+
+        let unkilled = spawn("trial-a", trial(&data));
+        let mut want = 0.0;
+        for r in rungs {
+            want = unkilled.ask(TRAIN, Payload::Scalar(r)).unwrap().as_scalar().unwrap();
+        }
+
+        let doomed = spawn("trial-b", trial(&data));
+        doomed.ask(TRAIN, Payload::Scalar(rungs[0])).unwrap();
+        let ckpt = doomed.ask(CHECKPOINT, Payload::Empty).unwrap();
+        doomed.kill();
+
+        let revived = spawn("trial-b2", trial(&data));
+        revived.ask(RESTORE, ckpt).unwrap();
+        let mut got = 0.0;
+        for r in &rungs[1..] {
+            got = revived.ask(TRAIN, Payload::Scalar(*r)).unwrap().as_scalar().unwrap();
+        }
+        assert_eq!(got.to_bits(), want.to_bits(), "{got} vs {want}");
+    }
+
+    #[test]
+    fn bad_dataset_rejected() {
+        let bad = Payload::Tensors(vec![Tensor::scalar(1.0)]);
+        assert!(TrialActor::from_dataset(
+            ModelSpec::Ridge { lam: 0.1 },
+            Arc::new(HostBackend),
+            &bad,
+            64,
+        )
+        .is_err());
+        let data = dataset(64);
+        let a = spawn("trial", trial(&data));
+        assert!(a.ask("nope", Payload::Empty).is_err());
+    }
+}

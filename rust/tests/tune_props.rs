@@ -1,0 +1,261 @@
+//! Tune-plane properties: ladder invariants, winner selection,
+//! SHA/ASHA budget accounting, checkpoint-resume parity under injected
+//! kills, and cross-executor ASHA parity.
+//!
+//! The load-bearing claims: (1) ASHA's virtual-time loop makes every
+//! scheduling decision a deterministic function of (configs, schedule,
+//! costs), so the same sweep on any executor produces bit-identical
+//! losses; (2) a trial killed mid-ladder resumes from its object-store
+//! checkpoint and finishes with a final loss bit-identical to a
+//! never-killed run, because the resumed fit replays the identical
+//! budget/chunk sequence.
+
+use std::sync::Arc;
+
+use nexus::config::ClusterConfig;
+use nexus::data::matrix::Matrix;
+use nexus::models::cost::CostModel;
+use nexus::models::registry::ModelSpec;
+use nexus::raylet::api::RayContext;
+use nexus::runtime::backend::HostBackend;
+use nexus::tune::runner::{select_best, AshaOpts, TrialResult, TuneRunner};
+use nexus::tune::sched::ShaSchedule;
+use nexus::tune::space::{ParamSpec, SearchSpace, TrialConfig};
+use nexus::util::prop::forall;
+use nexus::util::rng::Pcg32;
+
+fn ridge_problem(n: usize, seed: u64) -> TuneRunner {
+    let mut rng = Pcg32::new(seed);
+    let d = 6;
+    let make = |n: usize, rng: &mut Pcg32| {
+        let x = Matrix::from_fn(n, d, |_, j| if j == 0 { 1.0 } else { rng.normal_f32() });
+        let y: Vec<f32> = (0..n)
+            .map(|i| 2.0 * x.get(i, 1) - x.get(i, 2) + 0.5 * rng.normal_f32())
+            .collect();
+        (x, y)
+    };
+    let (x_train, y_train) = make(n, &mut rng);
+    let (x_val, y_val) = make(n / 4, &mut rng);
+    TuneRunner {
+        kx: Arc::new(HostBackend),
+        cost: CostModel::default(),
+        x_train,
+        target_train: y_train,
+        x_val,
+        target_val: y_val,
+        to_spec: |c| ModelSpec::Ridge { lam: c.get("lam") as f32 },
+        block: 128,
+    }
+}
+
+fn lam_space() -> Vec<TrialConfig> {
+    SearchSpace::new()
+        .with("lam", ParamSpec::Grid(vec![1e-5, 1e-3, 1e-1, 10.0, 1e3, 1e5]))
+        .grid(0)
+}
+
+/// Geometric ladders: strictly increasing, start at r_min, always top
+/// out at exactly r_max; invalid shapes are errors, never panics.
+#[test]
+fn prop_geometric_ladder_invariants() {
+    forall("geometric ladder", 200, |g| {
+        let r_min = g.usize_in(1..50);
+        let r_max = r_min + g.usize_in(0..200);
+        let eta = g.usize_in(2..6);
+        let s = ShaSchedule::geometric(r_min, r_max, eta).unwrap();
+        assert_eq!(s.rungs[0], r_min);
+        assert_eq!(*s.rungs.last().unwrap(), r_max);
+        assert!(s.rungs.windows(2).all(|w| w[0] < w[1]), "{:?}", s.rungs);
+        // every interior step is exactly x eta (only the appended final
+        // rung may be a shorter step)
+        for w in s.rungs.windows(2).rev().skip(1) {
+            assert_eq!(w[1], w[0] * eta, "{:?}", s.rungs);
+        }
+    });
+    assert!(ShaSchedule::geometric(1, 9, 1).is_err());
+    assert!(ShaSchedule::geometric(0, 9, 2).is_err());
+    assert!(ShaSchedule::geometric(9, 3, 2).is_err());
+}
+
+/// Promotion keeps exactly the (loss, id)-smallest survivors: no
+/// duplicates, deterministic under ties regardless of input order.
+#[test]
+fn prop_promote_keeps_best_under_ties() {
+    forall("promote keeps best", 100, |g| {
+        let s = ShaSchedule::geometric(1, 9, 3).unwrap();
+        let n = g.usize_in(1..40);
+        // coarse losses so exact ties are common
+        let losses: Vec<(usize, f64)> =
+            (0..n).map(|i| (i, g.usize_in(0..5) as f64 * 0.25)).collect();
+        let mut shuffled = losses.clone();
+        if n > 1 {
+            for i in (1..n).rev() {
+                shuffled.swap(i, g.usize_in(0..i + 1));
+            }
+        }
+        let keep = s.promote(&shuffled);
+        assert_eq!(keep.len(), s.survivors(n));
+        let mut want = losses.clone();
+        want.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        let want: Vec<usize> = want.iter().take(keep.len()).map(|&(i, _)| i).collect();
+        assert_eq!(keep, want, "input order must not matter");
+    });
+}
+
+/// Regression (seed bug): the winner is selected among max-budget
+/// trials first; a lucky low-rung loss must not win.
+#[test]
+fn select_best_ignores_low_budget_losses() {
+    let mk = |lam: f64, loss: f64, budget: usize| TrialResult {
+        config: SearchSpace::new().with("lam", ParamSpec::Grid(vec![lam])).grid(0).pop().unwrap(),
+        loss,
+        budget,
+    };
+    let best = select_best(&[
+        mk(1.0, 0.01, 125),
+        mk(2.0, 0.02, 500),
+        mk(3.0, 0.40, 1000),
+        mk(4.0, 0.35, 1000),
+    ])
+    .unwrap();
+    assert_eq!(best.config.get("lam"), 4.0);
+    assert_eq!(best.budget, 1000);
+}
+
+/// Budget accounting: the halving policies train strictly fewer rows
+/// than the full grid, and the grid's count is exact.
+#[test]
+fn sha_and_asha_budgets_stay_below_grid() {
+    let runner = ridge_problem(1200, 17);
+    let cfgs = lam_space();
+    let sched = ShaSchedule::geometric(1, 4, 2).unwrap();
+    let grid = runner.run_grid(&RayContext::inline(), &cfgs).unwrap();
+    let sha = runner.run_sha(&RayContext::inline(), &cfgs, &sched).unwrap();
+    let asha = runner
+        .run_asha(&RayContext::inline(), &cfgs, &sched, &AshaOpts::default())
+        .unwrap();
+    assert_eq!(grid.rows_trained, (cfgs.len() * 1200) as u64);
+    assert!(sha.rows_trained < grid.rows_trained, "sha={sha:?} grid={grid:?}");
+    assert!(asha.rows_trained < grid.rows_trained, "asha={asha:?} grid={grid:?}");
+    // every policy's winner trained on the full set
+    for o in [&grid, &sha, &asha] {
+        assert_eq!(o.best.budget, 1200, "{}", o.policy);
+    }
+}
+
+/// A trial killed mid-ladder resumes from its object-store checkpoint
+/// and finishes with a bit-identical final loss: the warm-started fit
+/// replays the same budget sequence, hence the same chunk boundaries.
+#[test]
+fn checkpoint_resume_final_loss_is_bit_identical() {
+    let runner = ridge_problem(800, 5);
+    let cfgs = lam_space();
+    let sched = ShaSchedule::geometric(1, 4, 2).unwrap();
+    let clean = runner
+        .run_asha(&RayContext::inline(), &cfgs, &sched, &AshaOpts::default())
+        .unwrap();
+    let winner = cfgs.iter().position(|c| *c == clean.best.config).unwrap();
+    assert_eq!(clean.trials[winner].budget, 800);
+
+    // kill the winner's actor as rungs 1 and 2 dispatch: both times it
+    // must revive from the checkpoint parked after its previous rung
+    let opts = AshaOpts { kill_at: vec![(winner, 1), (winner, 2)], ..AshaOpts::default() };
+    let faulted = runner
+        .run_asha(&RayContext::inline(), &cfgs, &sched, &opts)
+        .unwrap();
+    assert!(faulted.resumed >= 1, "kills must exercise checkpoint resume");
+    assert!(faulted.killed >= 2, "both injected kills must fire");
+    assert_eq!(faulted.trials[winner].budget, 800, "killed trial still finishes");
+    assert_eq!(
+        faulted.trials[winner].loss.to_bits(),
+        clean.trials[winner].loss.to_bits(),
+        "resume parity: {} vs {}",
+        faulted.trials[winner].loss,
+        clean.trials[winner].loss
+    );
+}
+
+/// The same ASHA sweep (same injected kills) is bit-identical across
+/// executors: scheduling runs in virtual time, so the backing executor
+/// only stores and fetches payloads.
+#[test]
+fn cross_executor_asha_parity_under_kills() {
+    let runner = ridge_problem(600, 9);
+    let cfgs = lam_space();
+    let sched = ShaSchedule::geometric(1, 4, 2).unwrap();
+    let opts = AshaOpts { workers: 3, kill_at: vec![(1, 1)], ..AshaOpts::default() };
+    let inline = runner
+        .run_asha(&RayContext::inline(), &cfgs, &sched, &opts)
+        .unwrap();
+    let threads = runner
+        .run_asha(&RayContext::threads(4), &cfgs, &sched, &opts)
+        .unwrap();
+    let sim = runner
+        .run_asha(
+            &RayContext::sim(
+                ClusterConfig { nodes: 2, slots_per_node: 2, ..Default::default() },
+                true,
+            ),
+            &cfgs,
+            &sched,
+            &opts,
+        )
+        .unwrap();
+    for other in [&threads, &sim] {
+        assert_eq!(inline.best.config, other.best.config);
+        assert_eq!(inline.makespan.to_bits(), other.makespan.to_bits());
+        assert_eq!(inline.time_to_best.to_bits(), other.time_to_best.to_bits());
+        assert_eq!(inline.killed, other.killed);
+        assert_eq!(inline.resumed, other.resumed);
+        assert_eq!(inline.rows_trained, other.rows_trained);
+        for (a, b) in inline.trials.iter().zip(&other.trials) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.budget, b.budget);
+        }
+    }
+}
+
+/// Regression (seed bug): `dataset_ref` used to leak the packed
+/// train+val tensors into the object store on every run.  Repeated
+/// sweeps on one context must not ratchet peak store bytes.
+#[test]
+fn repeated_sweeps_do_not_leak_store_bytes() {
+    let runner = ridge_problem(600, 3);
+    let cfgs = lam_space();
+    let sched = ShaSchedule::geometric(1, 4, 2).unwrap();
+    let ctx = RayContext::inline();
+    let opts = AshaOpts::default();
+    runner.run_grid(&ctx, &cfgs).unwrap();
+    let after_one = ctx.metrics().peak_store_bytes;
+    for _ in 0..4 {
+        runner.run_grid(&ctx, &cfgs).unwrap();
+        runner.run_asha(&ctx, &cfgs, &sched, &opts).unwrap();
+    }
+    let after_many = ctx.metrics().peak_store_bytes;
+    // the dataset dominates the footprint; without the free, 9 runs
+    // would hold 9 live copies and peak would scale with run count
+    assert!(
+        after_many < 2 * after_one,
+        "store leak: peak after 9 runs = {after_many}, after 1 = {after_one}"
+    );
+}
+
+/// The median rule only prunes: the surviving winner still comes from
+/// the mild-penalty class and still trains at full budget.
+#[test]
+fn median_stop_prunes_without_changing_winner_class() {
+    let runner = ridge_problem(1000, 13);
+    let cfgs = lam_space();
+    let sched = ShaSchedule::geometric(1, 4, 2).unwrap();
+    let out = runner
+        .run_asha(
+            &RayContext::inline(),
+            &cfgs,
+            &sched,
+            &AshaOpts { median_stop: true, ..AshaOpts::default() },
+        )
+        .unwrap();
+    assert!(out.best.config.get("lam") <= 10.0, "best={:?}", out.best);
+    assert_eq!(out.best.budget, 1000);
+    assert!(out.killed > 0);
+}
