@@ -23,6 +23,7 @@ use nexus::bench_support::{fmt_secs, Table};
 use nexus::causal::dml;
 use nexus::config::ClusterConfig;
 use nexus::data::synth::{generate, SynthConfig};
+use nexus::linalg::simd::{self, SimdMode};
 use nexus::models::cost::CostModel;
 use nexus::models::crossfit::CrossfitConfig;
 use nexus::raylet::api::{ExecOpts, Metrics, RayContext, SpecPolicy};
@@ -94,9 +95,21 @@ fn main() -> nexus::Result<()> {
     let blocked_cal = CostModel::calibrate(backend_by_name("host")?.as_ref(), cb, cd);
     let naive_cal = CostModel::calibrate(backend_by_name("host-naive")?.as_ref(), cb, cd);
     let kernel_speedup = blocked_cal.gflops / naive_cal.gflops;
+    // re-calibrate with SIMD dispatch forced off so the session record
+    // separates the tiling/threading win from the microkernel win; the
+    // global mode is restored to auto (env-respecting) right after
+    simd::set_simd_mode(SimdMode::Off);
+    let scalar_cal = CostModel::calibrate(backend_by_name("host")?.as_ref(), cb, cd);
+    simd::set_simd_mode(SimdMode::Auto);
+    let simd_dispatch = simd::current_dispatch();
+    let simd_speedup = blocked_cal.gflops / scalar_cal.gflops;
     println!(
-        "kernel core at ({cb} x {cd}): blocked {:.2} GFLOP/s vs naive {:.2} GFLOP/s => {kernel_speedup:.1}x",
-        blocked_cal.gflops, naive_cal.gflops
+        "kernel core at ({cb} x {cd}): blocked[{}] {:.2} GFLOP/s vs scalar-blocked {:.2} GFLOP/s \
+         ({simd_speedup:.2}x) vs naive {:.2} GFLOP/s => {kernel_speedup:.1}x",
+        simd_dispatch.name(),
+        blocked_cal.gflops,
+        scalar_cal.gflops,
+        naive_cal.gflops
     );
 
     // ---- Part A: simulator validation at 10k x 500 (real vs virtual) ----
@@ -281,8 +294,11 @@ fn main() -> nexus::Result<()> {
             .set("backend", kx.name())
             .set("quick", quick)
             .set("gflops_effective", blocked_cal.gflops)
+            .set("gflops_blocked_scalar", scalar_cal.gflops)
             .set("gflops_naive", naive_cal.gflops)
             .set("kernel_speedup", kernel_speedup)
+            .set("simd_dispatch", simd_dispatch.name())
+            .set("simd_speedup", simd_speedup)
             .set("gflops_cost_model", cost.gflops)
             .set("runs", Json::Arr(records)),
     );

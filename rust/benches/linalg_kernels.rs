@@ -1,18 +1,28 @@
-//! Kernel-core microbench: blocked/threaded gram vs the naive oracle.
+//! Kernel-core microbench: SIMD vs scalar-blocked vs the naive oracle.
 //!
-//! Sweeps block shape (n x d) x tile width x thread count over the fused
-//! masked-gram kernel (`linalg::blocked::gram_block`) — the op the DML
-//! hot loop spends its time in — and records GFLOP/s plus the speedup
-//! over the single-threaded naive loops (`linalg::graphs::gram_block`).
-//! Every timed configuration is also checked bit-identical to the
-//! oracle, so a perf run doubles as a determinism check.
+//! Three layers are timed on the fused masked-gram kernel — the op the
+//! DML hot loop spends its time in:
+//!
+//! * `naive`  — single-threaded oracle loops (`linalg::graphs`)
+//! * `blocked` — cache-tiled + threaded core, **scalar** dispatch
+//! * `simd`   — the same core with this machine's SIMD dispatch
+//!   (`linalg::simd`, AVX2+FMA / NEON; equals `blocked` when the CPU
+//!   has neither)
+//!
+//! The sweep covers block shape (n x d) x tile width x thread count;
+//! a dedicated large shape (65536 x 256) gates the SIMD speedup, and
+//! the row-dot kernels (`mat_vec`, `xt_v`) get per-kernel scalar-vs-simd
+//! rows so the dispatch win is visible beyond gram.  Every timed
+//! configuration is also checked bit-identical to the oracle, so a perf
+//! run doubles as a determinism check.
 //!
 //! Results append to `BENCH_linalg_kernels.json` (one session per
 //! invocation) so the perf trajectory is tracked across PRs.
 //!
 //!     cargo bench --offline --bench linalg_kernels
 //!     NEXUS_BENCH_QUICK=1 ...   (smaller shapes, fewer reps — CI)
-//!     NEXUS_PERF_SMOKE=1 ...    (exit 1 if blocked is slower than naive)
+//!     NEXUS_PERF_SMOKE=1 ...    (exit 1 if blocked <= naive, or SIMD
+//!                                < 1.5x scalar-blocked at d >= 256)
 
 use std::time::Instant;
 
@@ -20,6 +30,7 @@ use nexus::bench_support::Table;
 use nexus::data::matrix::Matrix;
 use nexus::linalg;
 use nexus::linalg::blocked::KernelOpts;
+use nexus::linalg::simd::{self, Dispatch, SimdMode};
 use nexus::models::cost::CostModel;
 use nexus::util::json::Json;
 use nexus::util::rng::Pcg32;
@@ -47,21 +58,28 @@ fn main() -> nexus::Result<()> {
     let quick = std::env::var("NEXUS_BENCH_QUICK").is_ok();
     let smoke = std::env::var("NEXUS_PERF_SMOKE").is_ok();
     let reps = if quick { 3 } else { 5 };
-    let shapes: &[(usize, usize)] =
-        if quick { &[(1024, 128), (1024, 256)] } else { &[(4096, 128), (4096, 256), (4096, 512)] };
+    let shapes: &[(usize, usize)] = if quick {
+        &[(1024, 128), (1024, 256)]
+    } else {
+        &[(4096, 128), (4096, 256), (4096, 512)]
+    };
     let tiles: &[usize] = if quick { &[32, 64] } else { &[32, 64, 128] };
     let max_threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
     let threads: Vec<usize> =
         [1usize, 2, 4, 8].iter().copied().filter(|&t| t == 1 || t <= max_threads).collect();
+    let auto_dsp = simd::dispatch_for(SimdMode::Auto);
 
     let mut tbl = Table::new(
-        "Blocked kernel core — fused masked gram, GFLOP/s (speedup vs naive)",
-        &["n", "d", "tile", "threads", "naive", "blocked", "speedup"],
+        "Blocked kernel core — fused masked gram, GFLOP/s (speedup vs naive / simd vs scalar)",
+        &["n", "d", "tile", "threads", "naive", "blocked", "simd", "speedup", "simd_x", "disp"],
     );
     let mut records: Vec<Json> = Vec::new();
-    // speedup of the best blocked config vs naive, per shape — the
-    // perf-smoke gate uses the worst shape
+    // speedup of the best scalar-blocked config vs naive, per shape —
+    // the original perf-smoke gate uses the worst shape
     let mut smoke_worst = f64::INFINITY;
+    // best-simd vs best-scalar-blocked per shape with d >= 256 — the
+    // SIMD gate uses the worst such shape (plus the large shape below)
+    let mut simd_gate_worst = f64::INFINITY;
 
     for &(n, d) in shapes {
         let (x, y, mask) = block(n as u64 * 31 + d as u64, n, d);
@@ -73,26 +91,52 @@ fn main() -> nexus::Result<()> {
         let naive_gflops = flops / naive_secs / 1e9;
 
         // determinism spot-check once per shape: blocked output at an
-        // awkward tile must equal the oracle bitwise
+        // awkward tile must equal the oracle bitwise, at BOTH dispatches
         {
             let (g0, b0, n0) = linalg::graphs::gram_block(&x, &y, &mask)?;
-            let opts = KernelOpts { threads: max_threads, tile_cols: 48, tile_rows: 1000 };
-            let st = linalg::blocked::gram_block_with(&x, &y, &mask, &opts)?;
-            assert_eq!(st.g.data(), g0.data(), "blocked gram differs from oracle at {n}x{d}");
-            assert_eq!(st.xty, b0);
-            assert_eq!(st.n, n0);
+            for dsp in [Dispatch::Scalar, auto_dsp] {
+                let opts =
+                    KernelOpts { threads: max_threads, tile_cols: 48, tile_rows: 1000, simd: dsp };
+                let st = linalg::blocked::gram_block_with(&x, &y, &mask, &opts)?;
+                assert_eq!(
+                    st.g.data(),
+                    g0.data(),
+                    "blocked({dsp:?}) gram differs from oracle at {n}x{d}"
+                );
+                assert_eq!(st.xty, b0);
+                assert_eq!(st.n, n0);
+            }
         }
 
         let mut best_speedup = 0.0f64;
+        let mut best_scalar = 0.0f64;
+        let mut best_simd = 0.0f64;
         for &tile in tiles {
             for &t in &threads {
-                let opts = KernelOpts { threads: t, tile_cols: tile, tile_rows: 2048 };
+                let opts = KernelOpts {
+                    threads: t,
+                    tile_cols: tile,
+                    tile_rows: 2048,
+                    simd: Dispatch::Scalar,
+                };
                 let secs = time_min(reps, || {
                     let _ = linalg::blocked::gram_block_with(&x, &y, &mask, &opts).unwrap();
                 });
+                let sopts = KernelOpts { simd: auto_dsp, ..opts };
+                let simd_secs = if auto_dsp == Dispatch::Scalar {
+                    secs
+                } else {
+                    time_min(reps, || {
+                        let _ = linalg::blocked::gram_block_with(&x, &y, &mask, &sopts).unwrap();
+                    })
+                };
                 let gflops = flops / secs / 1e9;
+                let simd_gflops = flops / simd_secs / 1e9;
                 let speedup = naive_secs / secs;
+                let simd_speedup = secs / simd_secs;
                 best_speedup = best_speedup.max(speedup);
+                best_scalar = best_scalar.max(gflops);
+                best_simd = best_simd.max(simd_gflops);
                 tbl.row(vec![
                     format!("{n}"),
                     format!("{d}"),
@@ -100,23 +144,121 @@ fn main() -> nexus::Result<()> {
                     format!("{t}"),
                     format!("{naive_gflops:.2}"),
                     format!("{gflops:.2}"),
+                    format!("{simd_gflops:.2}"),
                     format!("{speedup:.2}x"),
+                    format!("{simd_speedup:.2}x"),
+                    auto_dsp.name().to_string(),
                 ]);
                 records.push(
                     Json::obj()
+                        .set("kernel", "gram")
                         .set("n", n)
                         .set("d", d)
                         .set("tile", tile)
                         .set("threads", t)
                         .set("naive_gflops", naive_gflops)
                         .set("blocked_gflops", gflops)
-                        .set("speedup", speedup),
+                        .set("simd_gflops", simd_gflops)
+                        .set("speedup", speedup)
+                        .set("simd_speedup", simd_speedup)
+                        .set("dispatch", auto_dsp.name()),
                 );
             }
         }
         smoke_worst = smoke_worst.min(best_speedup);
+        if d >= 256 && best_scalar > 0.0 {
+            simd_gate_worst = simd_gate_worst.min(best_simd / best_scalar);
+        }
     }
     tbl.print();
+
+    // ---- large-shape SIMD gate + per-kernel dispatch rows ----
+    // The acceptance shape (65536 x 256) is timed in every mode, but
+    // only scalar-blocked vs simd (the naive oracle would dominate CI
+    // time); mat_vec / xt_v get one row each so the row-dot and
+    // column-axpy microkernels are tracked per kernel too.
+    let (gn, gd) = (65_536usize, 256usize);
+    let gate_reps = if quick { 2 } else { 3 };
+    let (gx, gy, gmask) = block(991, gn, gd);
+    let gopts =
+        KernelOpts { threads: max_threads, tile_cols: 64, tile_rows: 2048, simd: Dispatch::Scalar };
+    let gsopts = KernelOpts { simd: auto_dsp, ..gopts };
+    let beta: Vec<f32> = (0..gd).map(|j| ((j as f32) * 0.1).sin()).collect();
+
+    let mut kernel_rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    let gate_speedup = {
+        let scalar_secs = time_min(gate_reps, || {
+            let _ = linalg::blocked::gram_block_with(&gx, &gy, &gmask, &gopts).unwrap();
+        });
+        let simd_secs = if auto_dsp == Dispatch::Scalar {
+            scalar_secs
+        } else {
+            time_min(gate_reps, || {
+                let _ = linalg::blocked::gram_block_with(&gx, &gy, &gmask, &gsopts).unwrap();
+            })
+        };
+        let flops = CostModel::gram_flops(gn, gd);
+        kernel_rows.push((
+            "gram".into(),
+            flops / scalar_secs / 1e9,
+            flops / simd_secs / 1e9,
+            scalar_secs / simd_secs,
+        ));
+        // bitwise parity on the gate shape
+        let a = linalg::blocked::gram_block_with(&gx, &gy, &gmask, &gopts)?;
+        let b = linalg::blocked::gram_block_with(&gx, &gy, &gmask, &gsopts)?;
+        assert_eq!(a.g.data(), b.g.data(), "simd gram differs from scalar at {gn}x{gd}");
+        scalar_secs / simd_secs
+    };
+    {
+        let flops = 2.0 * gn as f64 * gd as f64;
+        let scalar_secs = time_min(gate_reps, || {
+            let _ = linalg::blocked::mat_vec_with(&gx, &beta, &gopts).unwrap();
+        });
+        let simd_secs = time_min(gate_reps, || {
+            let _ = linalg::blocked::mat_vec_with(&gx, &beta, &gsopts).unwrap();
+        });
+        kernel_rows.push((
+            "mat_vec".into(),
+            flops / scalar_secs / 1e9,
+            flops / simd_secs / 1e9,
+            scalar_secs / simd_secs,
+        ));
+        let scalar_secs = time_min(gate_reps, || {
+            let _ = linalg::blocked::xt_v_with(&gx, &gy, &gopts).unwrap();
+        });
+        let simd_secs = time_min(gate_reps, || {
+            let _ = linalg::blocked::xt_v_with(&gx, &gy, &gsopts).unwrap();
+        });
+        kernel_rows.push((
+            "xt_v".into(),
+            flops / scalar_secs / 1e9,
+            flops / simd_secs / 1e9,
+            scalar_secs / simd_secs,
+        ));
+    }
+    println!(
+        "\nper-kernel dispatch at {gn}x{gd} (threads={max_threads}, dispatch={}):",
+        auto_dsp.name()
+    );
+    for (kernel, scalar_gflops, simd_gflops, simd_speedup) in &kernel_rows {
+        println!(
+            "  {kernel:>8}: scalar {scalar_gflops:6.2} GFLOP/s | simd {simd_gflops:6.2} GFLOP/s | {simd_speedup:.2}x"
+        );
+        records.push(
+            Json::obj()
+                .set("kernel", kernel.as_str())
+                .set("n", gn)
+                .set("d", gd)
+                .set("tile", 64usize)
+                .set("threads", max_threads)
+                .set("scalar_gflops", *scalar_gflops)
+                .set("simd_gflops", *simd_gflops)
+                .set("simd_speedup", *simd_speedup)
+                .set("dispatch", auto_dsp.name()),
+        );
+    }
+    simd_gate_worst = simd_gate_worst.min(gate_speedup);
 
     let path = std::path::Path::new("BENCH_linalg_kernels.json");
     let mut sessions: Vec<Json> = nexus::util::json::parse_file(path)
@@ -127,7 +269,9 @@ fn main() -> nexus::Result<()> {
         Json::obj()
             .set("quick", quick)
             .set("machine_threads", max_threads)
+            .set("dispatch", auto_dsp.name())
             .set("worst_shape_best_speedup", smoke_worst)
+            .set("simd_gate_speedup", simd_gate_worst)
             .set("runs", Json::Arr(records)),
     );
     let n_sessions = sessions.len();
@@ -138,8 +282,8 @@ fn main() -> nexus::Result<()> {
     println!("\nwrote BENCH_linalg_kernels.json ({n_sessions} sessions total)");
 
     if smoke {
-        // perf gate: at every shape the best blocked config must beat the
-        // naive loops outright (5% slack for timer noise on tiny shapes)
+        // perf gate 1: at every shape the best blocked config must beat
+        // the naive loops outright (5% slack for timer noise)
         if smoke_worst < 1.05 {
             eprintln!(
                 "PERF SMOKE FAILED: best blocked speedup {smoke_worst:.2}x < 1.05x — \
@@ -148,6 +292,24 @@ fn main() -> nexus::Result<()> {
             std::process::exit(1);
         }
         println!("perf smoke passed: worst-shape best speedup {smoke_worst:.2}x");
+        // perf gate 2: SIMD must beat scalar-blocked by >= 1.5x at
+        // d >= 256 (skipped when this machine has no SIMD dispatch)
+        if auto_dsp == Dispatch::Scalar {
+            eprintln!(
+                "perf smoke: no SIMD dispatch on this machine — skipping the 1.5x SIMD gate"
+            );
+        } else if simd_gate_worst < 1.5 {
+            eprintln!(
+                "PERF SMOKE FAILED: SIMD gram speedup {simd_gate_worst:.2}x < 1.5x over the \
+                 scalar blocked path at d >= 256 (dispatch={})",
+                auto_dsp.name()
+            );
+            std::process::exit(1);
+        } else {
+            println!(
+                "perf smoke passed: SIMD gram {simd_gate_worst:.2}x over scalar blocked at d >= 256"
+            );
+        }
     }
     Ok(())
 }

@@ -235,6 +235,7 @@ fn slice_square(m: &Matrix, p: usize) -> Matrix {
 pub fn fit(cfg: &RunConfig, ds: &CausalDataset) -> Result<DmlFit> {
     cfg.validate()?;
     crate::linalg::pool::set_kernel_threads(cfg.kernel_threads);
+    crate::linalg::simd::set_simd_mode(crate::linalg::simd::SimdMode::parse(&cfg.simd)?);
     let kx = backend_by_name(&cfg.backend)?;
     let (block, d_pad, p_pad) = pick_shapes(cfg)?;
     let ccfg = CrossfitConfig::from_run(cfg, block, d_pad);
@@ -252,6 +253,7 @@ pub fn fit(cfg: &RunConfig, ds: &CausalDataset) -> Result<DmlFit> {
 pub fn fit_streaming(cfg: &RunConfig) -> Result<(DmlFit, IngestReport)> {
     cfg.validate()?;
     crate::linalg::pool::set_kernel_threads(cfg.kernel_threads);
+    crate::linalg::simd::set_simd_mode(crate::linalg::simd::SimdMode::parse(&cfg.simd)?);
     let kx = backend_by_name(&cfg.backend)?;
     let (block, d_pad, p_pad) = pick_shapes(cfg)?;
     let ccfg = CrossfitConfig::from_run(cfg, block, d_pad);

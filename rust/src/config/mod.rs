@@ -316,6 +316,10 @@ pub struct RunConfig {
     /// machine parallelism).  Performance-only: estimates are
     /// bit-identical at every setting.
     pub kernel_threads: usize,
+    /// SIMD policy for the kernel core (`--simd`): `auto` (detect, or
+    /// honor `NEXUS_SIMD`), `off`, or a forced ISA (`avx2`/`neon`) for
+    /// testing.  Performance-only: every dispatch is bit-identical.
+    pub simd: String,
     /// Locality-aware work stealing in the scheduler core (`--steal`);
     /// on by default.  Performance-only: estimates are bit-identical
     /// either way.
@@ -348,6 +352,7 @@ impl Default for RunConfig {
             ingest_chunk: 65_536,
             shard_block: 4096,
             kernel_threads: 0,
+            simd: "auto".into(),
             steal: true,
             speculate_factor: 0.0,
             seed: 123,
@@ -388,6 +393,7 @@ impl RunConfig {
                 "speculate_factor must be 0 (off) or >= 1".into(),
             ));
         }
+        crate::linalg::simd::SimdMode::parse(&self.simd)?;
         self.serve.validate()?;
         self.tune.validate()?;
         Ok(())
@@ -446,6 +452,9 @@ impl RunConfig {
         if let Some(x) = v.get("kernel_threads") {
             cfg.kernel_threads = x.as_usize()?;
         }
+        if let Some(x) = v.get("simd") {
+            cfg.simd = x.as_str()?.to_string();
+        }
         if let Some(x) = v.get("steal") {
             cfg.steal = x.as_bool()?;
         }
@@ -501,6 +510,7 @@ impl RunConfig {
             .set("ingest_chunk", self.ingest_chunk)
             .set("shard_blocks", self.shard_block)
             .set("kernel_threads", self.kernel_threads)
+            .set("simd", self.simd.as_str())
             .set("steal", self.steal)
             .set("speculate_factor", self.speculate_factor)
             .set("seed", self.seed as i64)
@@ -542,6 +552,7 @@ mod tests {
         cfg.ingest_chunk = 8192;
         cfg.shard_block = 512;
         cfg.kernel_threads = 3;
+        cfg.simd = "off".into();
         cfg.steal = false;
         cfg.speculate_factor = 2.5;
         cfg.tune.trials = 32;
@@ -562,6 +573,7 @@ mod tests {
         assert_eq!(back.ingest_chunk, 8192);
         assert_eq!(back.shard_block, 512);
         assert_eq!(back.kernel_threads, 3);
+        assert_eq!(back.simd, "off");
         assert!(!back.steal);
         assert_eq!(back.speculate_factor, 2.5);
         assert_eq!(back.tune.trials, 32);
@@ -593,6 +605,7 @@ mod tests {
         assert!(RunConfig { speculate_factor: -1.0, ..Default::default() }
             .validate()
             .is_err());
+        assert!(RunConfig { simd: "sse9".into(), ..Default::default() }.validate().is_err());
         assert!(RunConfig { speculate_factor: 0.5, ..Default::default() }
             .validate()
             .is_err());

@@ -6,11 +6,17 @@
 //! row-shaped kernels (residualize, predict) are partitioned into
 //! `tile_rows` row chunks.  Both partitions are chosen so that every
 //! output element is reduced in EXACTLY the order the naive oracle in
-//! `linalg` uses (rows ascending for gram/xt_v, columns ascending for
-//! dot products), which makes the blocked kernels **bit-identical** to
-//! the naive path and invariant across `--kernel-threads` — the
-//! determinism contract of DESIGN.md §8, enforced by
-//! `tests/linalg_blocked_props.rs`.
+//! `linalg` uses (rows ascending for gram/xt_v, the fixed 8-lane spec
+//! of `linalg::simd::dot8_scalar` for row dots), which makes the
+//! blocked kernels **bit-identical** to the naive path and invariant
+//! across `--kernel-threads` — the determinism contract of DESIGN.md
+//! §8, enforced by `tests/linalg_blocked_props.rs`.
+//!
+//! Inner loops run through the runtime-dispatched SIMD microkernels in
+//! [`crate::linalg::simd`] (AVX2+FMA / NEON / scalar).  Dispatch is
+//! carried per call in [`KernelOpts::simd`] and is bit-invariant by
+//! construction (DESIGN.md §11): gram/xt_v vectorize the non-reduction
+//! axis, row dots share the fixed-lane spec across every ISA.
 //!
 //! Why it is faster anyway: the naive gram walks the full `d x d` f64
 //! accumulator once per row (2 MB at d = 512 — far beyond L1/L2), while
@@ -24,7 +30,8 @@
 //!
 //! Knobs: `--kernel-threads` / `NEXUS_KERNEL_THREADS` (thread budget),
 //! `NEXUS_TILE_COLS` (output-tile width, default 64), `NEXUS_TILE_ROWS`
-//! (rows per parallel chunk, default 2048).  All performance-only —
+//! (rows per parallel chunk, default 2048), `--simd` / `NEXUS_SIMD`
+//! (instruction-set policy, default auto).  All performance-only —
 //! results are identical at every setting.
 
 use std::sync::OnceLock;
@@ -33,6 +40,8 @@ use crate::data::matrix::Matrix;
 use crate::data::synth::sigmoid;
 use crate::error::{NexusError, Result};
 use crate::linalg::pool::{self, par_map};
+use crate::linalg::simd;
+use crate::util::env::env_usize;
 
 /// Per-call kernel tuning; [`KernelOpts::current`] snapshots the global
 /// knobs.  Benches and property tests construct explicit values instead
@@ -45,33 +54,30 @@ pub struct KernelOpts {
     pub tile_cols: usize,
     /// Rows per chunk for row-parallel kernels.
     pub tile_rows: usize,
-}
-
-fn env_usize(var: &str, default: usize) -> usize {
-    std::env::var(var)
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&v| v > 0)
-        .unwrap_or(default)
+    /// Resolved SIMD instruction set for this call (bit-invariant —
+    /// every dispatch yields identical output; see DESIGN.md §11).
+    pub simd: simd::Dispatch,
 }
 
 fn default_tile_cols() -> usize {
     static V: OnceLock<usize> = OnceLock::new();
-    *V.get_or_init(|| env_usize("NEXUS_TILE_COLS", 64))
+    *V.get_or_init(|| env_usize("NEXUS_TILE_COLS", 64, 1))
 }
 
 fn default_tile_rows() -> usize {
     static V: OnceLock<usize> = OnceLock::new();
-    *V.get_or_init(|| env_usize("NEXUS_TILE_ROWS", 2048))
+    *V.get_or_init(|| env_usize("NEXUS_TILE_ROWS", 2048, 1))
 }
 
 impl KernelOpts {
-    /// Snapshot the global knobs (`--kernel-threads`, tile env vars).
+    /// Snapshot the global knobs (`--kernel-threads`, `--simd`, tile
+    /// env vars).
     pub fn current() -> KernelOpts {
         KernelOpts {
             threads: pool::kernel_threads(),
             tile_cols: default_tile_cols(),
             tile_rows: default_tile_rows(),
+            simd: simd::current_dispatch(),
         }
     }
 
@@ -96,21 +102,42 @@ fn check_len(kernel: &str, name: &str, got: usize, want: usize) -> Result<()> {
 // Core: tiled gram with optional row scaling and fused X'y
 // ---------------------------------------------------------------------------
 
+/// What one fused tiled pass should compute besides `G` itself.
+struct FusedSpec<'a> {
+    /// Per-row scale `S = diag(scale)` (identity if `None`).
+    scale: Option<&'a [f32]>,
+    /// Fused `X' yv` vector, accumulated on the diagonal tiles.
+    yv: Option<&'a [f32]>,
+    /// Multiply `yv[i]` by `scale[i]` in f32 before widening — lets
+    /// `gram_block` consume raw `y` without materializing `y * mask`.
+    scale_yv: bool,
+    /// Also fold `yty = sum(yv_i^2)` (f64, scaled) and
+    /// `ssum = sum(scale_i)` (f32) into the `(0, 0)` tile's row pass.
+    extras: bool,
+}
+
+/// Result of one fused tiled pass.
+struct FusedOut {
+    g: Vec<f64>,
+    b: Vec<f64>,
+    yty: f64,
+    ssum: f32,
+}
+
 /// One pass over the rows computing `G = (S X)' (S X)` tile by tile,
-/// where `S = diag(scale)` (identity if `None`), plus `X' yv` for the
-/// diagonal tiles when `yv` is given (`yv` must already be scaled).
+/// where `S = diag(scale)`, plus `X' yv` for the diagonal tiles when
+/// requested, plus the scalar extras of [`FusedSpec`].
 ///
 /// Determinism: each output element `G[a, b]` is a single f64
 /// accumulator fed rows `0..n` in ascending order — the same operation
 /// sequence as the naive `linalg::gram` on a pre-scaled matrix, for any
-/// tile size and thread count.  Off-diagonal tiles are mirrored, which
-/// is exact because IEEE multiplication commutes bitwise.
-fn gram_fused(
-    x: &Matrix,
-    scale: Option<&[f32]>,
-    yv: Option<&[f32]>,
-    opts: &KernelOpts,
-) -> (Vec<f64>, Vec<f64>) {
+/// tile size, thread count, and SIMD dispatch (lanes span output
+/// columns, never the row reduction; FMA is exact on widened-f32
+/// operands — DESIGN.md §11).  The scalar extras accumulate rows
+/// ascending on the single `(0, 0)` tile, matching a serial fold.
+/// Off-diagonal tiles are mirrored, which is exact because IEEE
+/// multiplication commutes bitwise.
+fn gram_fused(x: &Matrix, spec: &FusedSpec, opts: &KernelOpts) -> FusedOut {
     let (n, d) = (x.rows(), x.cols());
     let dt = opts.tile_cols.max(1);
     let nt = d.div_ceil(dt).max(1);
@@ -126,57 +153,73 @@ fn gram_fused(
         tb: usize,
         acc: Vec<f64>,
         bacc: Vec<f64>,
+        yty: f64,
+        ssum: f32,
     }
 
+    let dsp = opts.simd;
     let outs = par_map(tiles.len(), opts.threads, |idx| {
         let (ta, tb) = tiles[idx];
         let (a0, b0) = (ta * dt, tb * dt);
         let da = dt.min(d - a0);
         let db = dt.min(d - b0);
         let mut acc = vec![0.0f64; da * db];
-        let want_b = yv.is_some() && ta == tb;
+        let want_b = spec.yv.is_some() && ta == tb;
         let mut bacc = vec![0.0f64; if want_b { da } else { 0 }];
-        // row panel scratch: the right panel scaled + widened once per row
+        let want_extras = spec.extras && ta == 0 && tb == 0;
+        let mut yty = 0.0f64;
+        let mut ssum = 0.0f32;
+        // row panel scratch: both panels scaled + widened once per row
+        // (scale happens in f32 FIRST, matching the oracle's
+        // materialized `x[i][j] * m` rounding, then widens)
+        let mut abuf = vec![0.0f64; da];
         let mut pbuf = vec![0.0f64; db];
         for i in 0..n {
             let row = x.row(i);
-            let pa = &row[a0..a0 + da];
-            let pb = &row[b0..b0 + db];
-            let s = scale.map(|s| s[i]);
-            match s {
-                // scale in f32 FIRST (matching the oracle's materialized
-                // `x[i][j] * m` rounding), then widen
-                Some(m) => {
-                    for (dst, &v) in pbuf.iter_mut().zip(pb) {
-                        *dst = (v * m) as f64;
+            let s = spec.scale.map(|s| s[i]);
+            simd::widen(dsp, &mut pbuf, &row[b0..b0 + db], s);
+            if ta == tb {
+                // diagonal tile: left panel == right panel
+                abuf.copy_from_slice(&pbuf);
+            } else {
+                simd::widen(dsp, &mut abuf, &row[a0..a0 + da], s);
+            }
+            simd::gram_panel_update(dsp, &mut acc, &abuf, &pbuf);
+            // vi is only needed on diagonal tiles (X'yv + extras both
+            // live there)
+            let vi: Option<f64> = if ta == tb {
+                spec.yv.map(|yv| {
+                    let raw = yv[i];
+                    match (spec.scale_yv, s) {
+                        (true, Some(m)) => (raw * m) as f64,
+                        _ => raw as f64,
                     }
-                }
-                None => {
-                    for (dst, &v) in pbuf.iter_mut().zip(pb) {
-                        *dst = v as f64;
-                    }
+                })
+            } else {
+                None
+            };
+            if want_b {
+                let vi = vi.unwrap();
+                for (o, &a) in bacc.iter_mut().zip(abuf.iter()) {
+                    *o += vi * a;
                 }
             }
-            let vi = yv.map(|yv| yv[i] as f64);
-            for (p, &va) in pa.iter().enumerate() {
-                let a64 = match s {
-                    Some(m) => (va * m) as f64,
-                    None => va as f64,
-                };
-                let dst = &mut acc[p * db..(p + 1) * db];
-                for (o, &b64) in dst.iter_mut().zip(&pbuf) {
-                    *o += a64 * b64;
+            if want_extras {
+                if let Some(m) = s {
+                    ssum += m;
                 }
-                if want_b {
-                    bacc[p] += vi.unwrap() * a64;
+                if let Some(v) = vi {
+                    yty += v * v;
                 }
             }
         }
-        TileOut { ta, tb, acc, bacc }
+        TileOut { ta, tb, acc, bacc, yty, ssum }
     });
 
     let mut g = vec![0.0f64; d * d];
-    let mut bvec = vec![0.0f64; if yv.is_some() { d } else { 0 }];
+    let mut bvec = vec![0.0f64; if spec.yv.is_some() { d } else { 0 }];
+    let mut yty = 0.0f64;
+    let mut ssum = 0.0f32;
     for t in outs {
         let (a0, b0) = (t.ta * dt, t.tb * dt);
         let da = dt.min(d - a0);
@@ -193,8 +236,17 @@ fn gram_fused(
         for (p, &v) in t.bacc.iter().enumerate() {
             bvec[a0 + p] = v;
         }
+        if t.ta == 0 && t.tb == 0 {
+            yty = t.yty;
+            ssum = t.ssum;
+        }
     }
-    (g, bvec)
+    FusedOut { g, b: bvec, yty, ssum }
+}
+
+/// Plain gram spec: no scaling, no fused vector, no extras.
+fn plain_spec() -> FusedSpec<'static> {
+    FusedSpec { scale: None, yv: None, scale_yv: false, extras: false }
 }
 
 fn cast_matrix(d: usize, g: Vec<f64>) -> Matrix {
@@ -218,8 +270,8 @@ pub fn gram(x: &Matrix) -> Matrix {
 }
 
 pub fn gram_with(x: &Matrix, opts: &KernelOpts) -> Matrix {
-    let (g, _) = gram_fused(x, None, None, opts);
-    cast_matrix(x.cols(), g)
+    let out = gram_fused(x, &plain_spec(), opts);
+    cast_matrix(x.cols(), out.g)
 }
 
 /// Fused gram statistics over a masked block — everything the ridge
@@ -252,44 +304,46 @@ pub fn gram_block_with(
     let n = x.rows();
     check_len("gram_block", "y", y.len(), n)?;
     check_len("gram_block", "mask", mask.len(), n)?;
-    let ym: Vec<f32> = y.iter().zip(mask).map(|(a, b)| a * b).collect();
-    let (g, b) = gram_fused(x, Some(mask), Some(&ym), opts);
-    let mut yty = 0.0f64;
-    for &v in &ym {
-        yty += v as f64 * v as f64;
-    }
-    let mut nsum = 0.0f32;
-    for &m in mask {
-        nsum += m;
-    }
+    // `scale_yv` applies the mask to y in-flight (f32, the oracle's
+    // rounding) and `extras` folds yty / sum(mask) into the (0, 0)
+    // tile's rows-ascending pass — no masked-y copy, no extra O(n)
+    // passes, bit-identical to the old materialized path.
+    let out = gram_fused(
+        x,
+        &FusedSpec { scale: Some(mask), yv: Some(y), scale_yv: true, extras: true },
+        opts,
+    );
     Ok(GramStats {
-        g: cast_matrix(x.cols(), g),
-        xty: b.into_iter().map(|v| v as f32).collect(),
-        yty: yty as f32,
-        n: nsum,
+        g: cast_matrix(x.cols(), out.g),
+        xty: out.b.into_iter().map(|v| v as f32).collect(),
+        yty: out.yty as f32,
+        n: out.ssum,
     })
 }
 
-/// Blocked `yhat = X beta` (row-parallel; each row's dot product runs
-/// columns ascending in f64 — the oracle's order).
+/// Blocked `yhat = X beta` (row-parallel; each row's dot product uses
+/// the fixed 8-lane reduction spec shared with the oracle's
+/// `linalg::mat_vec` — bit-identical at every ISA dispatch).
 pub fn mat_vec(x: &Matrix, beta: &[f32]) -> Result<Vec<f32>> {
     mat_vec_with(x, beta, &KernelOpts::current())
 }
 
 pub fn mat_vec_with(x: &Matrix, beta: &[f32], opts: &KernelOpts) -> Result<Vec<f32>> {
     check_len("mat_vec", "beta", beta.len(), x.cols())?;
-    Ok(row_chunks(x, opts, |row| dot_f64(row, beta)))
+    let dsp = opts.simd;
+    Ok(row_chunks(x, opts, |row| dot_lane8(row, beta, dsp)))
 }
 
 /// Blocked `sigmoid(X beta)` — the predict-proba fusion.
 pub fn predict_proba_with(x: &Matrix, beta: &[f32], opts: &KernelOpts) -> Result<Vec<f32>> {
     check_len("predict_proba", "beta", beta.len(), x.cols())?;
-    Ok(row_chunks(x, opts, |row| sigmoid(dot_f64(row, beta))))
+    let dsp = opts.simd;
+    Ok(row_chunks(x, opts, |row| sigmoid(dot_lane8(row, beta, dsp))))
 }
 
 #[inline]
-fn dot_f64(row: &[f32], beta: &[f32]) -> f32 {
-    row.iter().zip(beta).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>() as f32
+fn dot_lane8(row: &[f32], beta: &[f32], dsp: simd::Dispatch) -> f32 {
+    simd::dot8(dsp, row, beta) as f32
 }
 
 /// Map each row through `f`, in parallel chunks, preserving row order.
@@ -315,16 +369,15 @@ pub fn xt_v_with(x: &Matrix, v: &[f32], opts: &KernelOpts) -> Result<Vec<f32>> {
     check_len("xt_v", "v", v.len(), n)?;
     let dt = opts.tile_cols.max(1);
     let nt = d.div_ceil(dt).max(1);
+    let dsp = opts.simd;
     let parts = par_map(nt, opts.threads, |t| {
         let a0 = t * dt;
         let da = dt.min(d - a0);
         let mut acc = vec![0.0f64; da];
+        // lanes span the output columns; each acc element reduces rows
+        // ascending like the oracle
         for i in 0..n {
-            let vi = v[i] as f64;
-            let pa = &x.row(i)[a0..a0 + da];
-            for (o, &xa) in acc.iter_mut().zip(pa) {
-                *o += vi * xa as f64;
-            }
+            simd::axpy_widen(dsp, &mut acc, v[i] as f64, &x.row(i)[a0..a0 + da]);
         }
         acc
     });
@@ -358,14 +411,15 @@ pub fn residual_block_with(
     check_len("residual_block", "beta_t", beta_t.len(), d)?;
     let rows = opts.tile_rows.max(1);
     let chunks = n.div_ceil(rows).max(1);
+    let dsp = opts.simd;
     let parts = par_map(chunks, opts.threads, |c| {
         let (s, e) = chunk_bounds(c, n, rows);
         let mut yr = Vec::with_capacity(e - s);
         let mut tr = Vec::with_capacity(e - s);
         for i in s..e {
             let row = x.row(i);
-            yr.push(y[i] - dot_f64(row, beta_y));
-            tr.push(t[i] - sigmoid(dot_f64(row, beta_t)));
+            yr.push(y[i] - dot_lane8(row, beta_y, dsp));
+            tr.push(t[i] - sigmoid(dot_lane8(row, beta_t, dsp)));
         }
         (yr, tr)
     });
@@ -404,13 +458,14 @@ pub fn irls_block_with(
     check_len("irls_block", "beta", beta.len(), d)?;
     let rows = opts.tile_rows.max(1);
     let chunks = n.div_ceil(rows).max(1);
+    let dsp = opts.simd;
     let parts = par_map(chunks, opts.threads, |c| {
         let (s, e) = chunk_bounds(c, n, rows);
         let mut sw = Vec::with_capacity(e - s);
         let mut wz = Vec::with_capacity(e - s);
         let mut nll_terms = Vec::with_capacity(e - s);
         for i in s..e {
-            let eta = dot_f64(x.row(i), beta);
+            let eta = dot_lane8(x.row(i), beta, dsp);
             let p = sigmoid(eta);
             let w = (p * (1.0 - p)).max(1e-6);
             let wm = w * mask[i];
@@ -439,9 +494,13 @@ pub fn irls_block_with(
             nll -= term;
         }
     }
-    let (h, _) = gram_fused(x, Some(&sw), None, opts);
+    let h = gram_fused(
+        x,
+        &FusedSpec { scale: Some(&sw), yv: None, scale_yv: false, extras: false },
+        opts,
+    );
     let c = xt_v_with(x, &wz, opts)?;
-    Ok((cast_matrix(d, h), c, nll as f32))
+    Ok((cast_matrix(d, h.g), c, nll as f32))
 }
 
 /// Blocked final-stage normal-equation partials `(M, v)`.
@@ -466,10 +525,15 @@ pub fn final_moments_with(
     check_len("final_moments", "t_res", t_res.len(), n)?;
     check_len("final_moments", "mask", mask.len(), n)?;
     // tphi rows are scaled by t_res * mask; reuse the fused core with
-    // that per-row scale and y_res as the fused vector
+    // that per-row scale and y_res as the fused vector (unscaled —
+    // scale_yv stays off here)
     let scale: Vec<f32> = t_res.iter().zip(mask).map(|(t, m)| t * m).collect();
-    let (g, b) = gram_fused(phi, Some(&scale), Some(y_res), opts);
-    Ok((cast_matrix(phi.cols(), g), b.into_iter().map(|v| v as f32).collect()))
+    let out = gram_fused(
+        phi,
+        &FusedSpec { scale: Some(&scale), yv: Some(y_res), scale_yv: false, extras: false },
+        opts,
+    );
+    Ok((cast_matrix(phi.cols(), out.g), out.b.into_iter().map(|v| v as f32).collect()))
 }
 
 /// Blocked final-stage HC meat partial `S`.
@@ -502,8 +566,12 @@ pub fn final_score_with(
             (y_res[i] - t_res[i] * fit) * t_res[i] * mask[i]
         })
         .collect();
-    let (g, _) = gram_fused(phi, Some(&scale), None, opts);
-    Ok(cast_matrix(phi.cols(), g))
+    let out = gram_fused(
+        phi,
+        &FusedSpec { scale: Some(&scale), yv: None, scale_yv: false, extras: false },
+        opts,
+    );
+    Ok(cast_matrix(phi.cols(), out.g))
 }
 
 #[cfg(test)]
@@ -517,7 +585,12 @@ mod tests {
     }
 
     fn opts(threads: usize, tile: usize) -> KernelOpts {
-        KernelOpts { threads, tile_cols: tile, tile_rows: 7 }
+        KernelOpts {
+            threads,
+            tile_cols: tile,
+            tile_rows: 7,
+            simd: simd::dispatch_for(simd::SimdMode::Auto),
+        }
     }
 
     #[test]
@@ -544,16 +617,35 @@ mod tests {
         assert_eq!(st.g.data(), g0.data());
         assert_eq!(st.xty, b0);
         assert_eq!(st.n, n0);
-        // y'y sanity: masked sum of squares
-        let want_yty: f64 = y
-            .iter()
-            .zip(&mask)
-            .map(|(a, b)| {
-                let v = a * b;
-                v as f64 * v as f64
-            })
-            .sum();
-        assert!((st.yty as f64 - want_yty).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fused_yty_and_count_match_two_pass_bitwise() {
+        // Regression for the fused extras: the in-tile yty / sum(mask)
+        // folds must reproduce the old materialize-then-serial-pass
+        // computation bit for bit, at several tile/thread settings.
+        let (n, d) = (131, 9);
+        let x = randm(11, n, d);
+        let mut rng = Pcg32::new(12);
+        let y: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let mask: Vec<f32> = (0..n).map(|i| if i % 5 == 0 { 0.0 } else { 1.0 }).collect();
+        let ym: Vec<f32> = y.iter().zip(&mask).map(|(a, b)| a * b).collect();
+        let mut want_yty = 0.0f64;
+        for &v in &ym {
+            want_yty += v as f64 * v as f64;
+        }
+        let mut want_n = 0.0f32;
+        for &m in &mask {
+            want_n += m;
+        }
+        for (threads, tile) in [(1, 3), (4, 5), (2, 64)] {
+            for dsp in [simd::Dispatch::Scalar, simd::dispatch_for(simd::SimdMode::Auto)] {
+                let o = KernelOpts { simd: dsp, ..opts(threads, tile) };
+                let st = gram_block_with(&x, &y, &mask, &o).unwrap();
+                assert_eq!(st.yty.to_bits(), (want_yty as f32).to_bits());
+                assert_eq!(st.n.to_bits(), want_n.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -12,10 +12,18 @@
 //!   numbers are auditable.  Property tests pin every optimized kernel
 //!   to these outputs bit-for-bit.
 //! * [`blocked`] — the production kernel core: cache-blocked tiles,
-//!   fused multi-output passes, and multi-threading via the persistent
-//!   [`pool`].  `HostBackend` routes through it; the blocked kernels
-//!   reduce every output element in the oracle's operation order, so
-//!   "optimized" never means "different bits" (DESIGN.md §8).
+//!   fused multi-output passes, multi-threading via the persistent
+//!   [`pool`], and runtime-dispatched [`simd`] microkernels.
+//!   `HostBackend` routes through it; the blocked kernels reduce every
+//!   output element in the oracle's operation order, so "optimized"
+//!   never means "different bits" (DESIGN.md §8, §11).
+//!
+//! One spec is *shared* rather than layered: row dots ([`mat_vec`] and
+//! its users) reduce via the fixed 8-lane scheme of
+//! [`simd::dot8_scalar`] — element `j` into f64 lane `j % 8`, lanes
+//! folded left-to-right — because a SIMD dot cannot reproduce a purely
+//! sequential reduction.  The oracle defines the spec; scalar, AVX2,
+//! and NEON paths all implement it bit-for-bit (DESIGN.md §11).
 //!
 //! Dense hot paths carry no zero-skip branches: synthetic blocks are
 //! dense, so `ra == 0.0` tests were pure branch overhead, and skipping
@@ -28,6 +36,7 @@ use crate::error::{NexusError, Result};
 
 pub mod blocked;
 pub mod pool;
+pub mod simd;
 
 fn shape_check(kernel: &str, name: &str, got: usize, want: usize) -> Result<()> {
     if got != want {
@@ -69,18 +78,12 @@ pub fn xt_v(x: &Matrix, v: &[f32]) -> Result<Vec<f32>> {
     Ok(acc.into_iter().map(|v| v as f32).collect())
 }
 
-/// yhat = X beta.
+/// yhat = X beta.  Each row reduces via the fixed 8-lane dot spec
+/// ([`simd::dot8_scalar`]) so the oracle and every SIMD dispatch agree
+/// bit-for-bit.
 pub fn mat_vec(x: &Matrix, beta: &[f32]) -> Result<Vec<f32>> {
     shape_check("mat_vec", "beta", beta.len(), x.cols())?;
-    Ok((0..x.rows())
-        .map(|i| {
-            x.row(i)
-                .iter()
-                .zip(beta)
-                .map(|(&a, &b)| a as f64 * b as f64)
-                .sum::<f64>() as f32
-        })
-        .collect())
+    Ok((0..x.rows()).map(|i| simd::dot8_scalar(x.row(i), beta) as f32).collect())
 }
 
 /// Cholesky factorization A = L L^T (lower).  A must be symmetric

@@ -42,12 +42,9 @@ pub fn set_kernel_threads(n: usize) {
 
 fn env_threads() -> usize {
     static ENV: OnceLock<usize> = OnceLock::new();
-    *ENV.get_or_init(|| {
-        std::env::var("NEXUS_KERNEL_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .unwrap_or(0)
-    })
+    // min 0: zero means "unset, fall through to auto"; garbage warns
+    // once and falls back (crate::util::env)
+    *ENV.get_or_init(|| crate::util::env::env_usize("NEXUS_KERNEL_THREADS", 0, 0))
 }
 
 fn auto_threads() -> usize {

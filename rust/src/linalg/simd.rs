@@ -1,0 +1,700 @@
+//! Runtime-dispatched SIMD microkernels under the blocked kernel core.
+//!
+//! Zero external deps: explicit `std::arch` intrinsics — AVX2+FMA on
+//! x86_64 (checked once at runtime via `is_x86_feature_detected!`),
+//! NEON on aarch64 (baseline there), and a lane-emulating scalar
+//! fallback that is itself the reference spec.  `linalg/blocked.rs`
+//! calls these per row/tile; `HostBackend` inherits them everywhere.
+//!
+//! # Determinism by construction (DESIGN.md §11)
+//!
+//! The repo-wide contract is that every kernel is bit-identical across
+//! backends, thread counts, and tile sizes.  SIMD joins that contract
+//! through two arguments:
+//!
+//! 1. **Vectorize the non-reduction axis.**  For gram-shaped updates
+//!    (`acc[q] += a * b[q]`) and `xt_v` the vector lanes span *output
+//!    elements*, not the reduction.  Each output accumulator still sees
+//!    rows 0..n ascending, so the summation order is exactly the naive
+//!    oracle's.  FMA does not perturb bits here: every operand is an
+//!    f32 value widened to f64 (or a product of two such), so the
+//!    product of two f32-valued f64s has <= 48 significant bits and is
+//!    exact in f64 — `fma(a, b, acc)` rounds once on an exact product,
+//!    which equals `a*b + acc` computed with a separate rounded
+//!    multiply.  This exactness argument is a **precondition**: these
+//!    microkernels are only bit-stable for inputs that are widened
+//!    f32s, which is the only way the kernel core calls them.
+//!
+//! 2. **Fixed virtual lane width for reductions.**  Row-dot kernels
+//!    (`mat_vec`, `predict_proba`, residual/IRLS eta) cannot avoid a
+//!    reordered reduction, so the *spec itself* is lane-shaped:
+//!    element `j` accumulates into f64 partial lane `j % 8` (ascending
+//!    within each lane) and the 8 lanes are folded left-to-right from
+//!    0.0 at the end.  [`dot8_scalar`] is the reference; the AVX2 and
+//!    NEON paths implement the identical lane mapping, so results are
+//!    bit-identical across ISA, `--kernel-threads`, and tile sizes.
+//!    The naive oracle (`linalg::mat_vec`) implements the same spec.
+//!
+//! # Dispatch ladder
+//!
+//! `--simd` CLI knob > `NEXUS_SIMD` env > `auto`.  `auto` picks the
+//! best ISA the CPU supports; `off` forces the scalar spec; `avx2` /
+//! `neon` force an ISA for testing and fall back to scalar (with a
+//! one-time stderr warning) when unsupported.  The resolved
+//! [`Dispatch`] is carried in `KernelOpts`, so tests can pin a path
+//! without touching process globals.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::error::{NexusError, Result};
+use crate::util::env as envknob;
+
+/// Virtual lane width of the fixed-lane dot-product spec: 8 f64
+/// partial sums, folded left-to-right at the end.
+pub const DOT_LANES: usize = 8;
+
+/// User-facing SIMD policy (`--simd` / `NEXUS_SIMD`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Use the best instruction set this CPU supports.
+    Auto,
+    /// Force the scalar reference path.
+    Off,
+    /// Force AVX2+FMA (testing); falls back to scalar if unsupported.
+    ForceAvx2,
+    /// Force NEON (testing); falls back to scalar if unsupported.
+    ForceNeon,
+}
+
+impl SimdMode {
+    /// Parse a knob string (`auto` | `off` | `avx2` | `neon`).
+    pub fn parse(s: &str) -> Result<SimdMode> {
+        match s {
+            "auto" => Ok(SimdMode::Auto),
+            "off" | "scalar" => Ok(SimdMode::Off),
+            "avx2" => Ok(SimdMode::ForceAvx2),
+            "neon" => Ok(SimdMode::ForceNeon),
+            other => Err(NexusError::Config(format!(
+                "unknown simd mode '{other}' (expected auto|off|avx2|neon)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Off => "off",
+            SimdMode::ForceAvx2 => "avx2",
+            SimdMode::ForceNeon => "neon",
+        }
+    }
+}
+
+/// Resolved instruction set for one kernel call.
+///
+/// Invariant: `Avx2` / `Neon` values are only produced by
+/// [`dispatch_for`] after runtime feature detection succeeds, which is
+/// what makes the `unsafe` ISA entry points below sound to call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Dispatch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Avx2 => "avx2",
+            Dispatch::Neon => "neon",
+        }
+    }
+}
+
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        return is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+    }
+    #[allow(unreachable_code)]
+    false
+}
+
+fn neon_available() -> bool {
+    // NEON (asimd) is part of the aarch64 baseline.
+    cfg!(target_arch = "aarch64")
+}
+
+/// Resolve a policy to the instruction set actually used, warning once
+/// to stderr when a forced ISA is unavailable on this machine.
+pub fn dispatch_for(mode: SimdMode) -> Dispatch {
+    match mode {
+        SimdMode::Off => Dispatch::Scalar,
+        SimdMode::Auto => {
+            if avx2_available() {
+                Dispatch::Avx2
+            } else if neon_available() {
+                Dispatch::Neon
+            } else {
+                Dispatch::Scalar
+            }
+        }
+        SimdMode::ForceAvx2 => {
+            if avx2_available() {
+                Dispatch::Avx2
+            } else {
+                envknob::warn_once(
+                    "simd-force-avx2",
+                    "simd mode 'avx2' requested but AVX2+FMA is unavailable on this CPU; \
+                     falling back to scalar",
+                );
+                Dispatch::Scalar
+            }
+        }
+        SimdMode::ForceNeon => {
+            if neon_available() {
+                Dispatch::Neon
+            } else {
+                envknob::warn_once(
+                    "simd-force-neon",
+                    "simd mode 'neon' requested but NEON is unavailable on this CPU; \
+                     falling back to scalar",
+                );
+                Dispatch::Scalar
+            }
+        }
+    }
+}
+
+const MODE_UNSET: u8 = u8::MAX;
+
+fn mode_code(m: SimdMode) -> u8 {
+    match m {
+        SimdMode::Auto => 0,
+        SimdMode::Off => 1,
+        SimdMode::ForceAvx2 => 2,
+        SimdMode::ForceNeon => 3,
+    }
+}
+
+fn code_mode(c: u8) -> Option<SimdMode> {
+    match c {
+        0 => Some(SimdMode::Auto),
+        1 => Some(SimdMode::Off),
+        2 => Some(SimdMode::ForceAvx2),
+        3 => Some(SimdMode::ForceNeon),
+        _ => None,
+    }
+}
+
+static CLI_MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Set the process-global SIMD policy (the `--simd` / `RunConfig.simd`
+/// knob).  `Auto` defers to `NEXUS_SIMD`, then hardware detection, so
+/// setting the default config value does not mask the env knob.
+pub fn set_simd_mode(m: SimdMode) {
+    CLI_MODE.store(mode_code(m), Ordering::Relaxed);
+}
+
+fn env_mode() -> SimdMode {
+    static V: OnceLock<SimdMode> = OnceLock::new();
+    *V.get_or_init(|| match std::env::var("NEXUS_SIMD") {
+        Err(_) => SimdMode::Auto,
+        Ok(s) => SimdMode::parse(&s).unwrap_or_else(|_| {
+            envknob::warn_once(
+                "NEXUS_SIMD",
+                &format!("NEXUS_SIMD={s:?} is not auto|off|avx2|neon; falling back to auto"),
+            );
+            SimdMode::Auto
+        }),
+    })
+}
+
+/// Current policy: CLI knob > `NEXUS_SIMD` env > auto.
+pub fn current_mode() -> SimdMode {
+    match code_mode(CLI_MODE.load(Ordering::Relaxed)) {
+        Some(SimdMode::Auto) | None => env_mode(),
+        Some(m) => m,
+    }
+}
+
+/// Instruction set the next kernel call will use.
+pub fn current_dispatch() -> Dispatch {
+    dispatch_for(current_mode())
+}
+
+// ---------------------------------------------------------------------
+// dot8 — the fixed-lane row dot (reduction kernel)
+// ---------------------------------------------------------------------
+
+/// Reference implementation of the fixed-lane dot product — this IS
+/// the spec.  Element `j` accumulates `a[j] as f64 * b[j] as f64` into
+/// lane `j % 8` (within-lane order ascending); lanes fold left-to-right
+/// from 0.0.  Length mismatch truncates to the shorter slice (shape
+/// checks live in the callers).
+pub fn dot8_scalar(a: &[f32], b: &[f32]) -> f64 {
+    let mut lanes = [0.0f64; DOT_LANES];
+    for (j, (&x, &w)) in a.iter().zip(b).enumerate() {
+        lanes[j % DOT_LANES] += x as f64 * w as f64;
+    }
+    let mut s = 0.0f64;
+    for &l in &lanes {
+        s += l;
+    }
+    s
+}
+
+/// Fixed-lane dot product of two f32 slices in f64.  Every dispatch
+/// path implements the [`dot8_scalar`] spec bit-for-bit.
+#[inline]
+pub fn dot8(dsp: Dispatch, a: &[f32], b: &[f32]) -> f64 {
+    match dsp {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Dispatch::Avx2 is only constructed after runtime
+        // detection of avx2+fma (see `Dispatch` invariant).
+        Dispatch::Avx2 => unsafe { dot8_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Dispatch::Neon => unsafe { dot8_neon(a, b) },
+        _ => dot8_scalar(a, b),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot8_avx2(a: &[f32], b: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    // acc0 holds lanes 0..4, acc1 lanes 4..8.  Within a lane the FMA
+    // is exact-product + add (operands are widened f32s), so each lane
+    // matches the scalar spec bitwise.
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut j = 0usize;
+    while j + DOT_LANES <= n {
+        let av = _mm256_loadu_ps(a.as_ptr().add(j));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+        let a_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(av));
+        let a_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(av));
+        let b_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(bv));
+        let b_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(bv));
+        acc0 = _mm256_fmadd_pd(a_lo, b_lo, acc0);
+        acc1 = _mm256_fmadd_pd(a_hi, b_hi, acc1);
+        j += DOT_LANES;
+    }
+    let mut lanes = [0.0f64; DOT_LANES];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+    // Remainder: j is a multiple of 8 here, so j % 8 lands elements in
+    // the same lanes the spec assigns.
+    while j < n {
+        lanes[j % DOT_LANES] += *a.get_unchecked(j) as f64 * *b.get_unchecked(j) as f64;
+        j += 1;
+    }
+    let mut s = 0.0f64;
+    for &l in &lanes {
+        s += l;
+    }
+    s
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot8_neon(a: &[f32], b: &[f32]) -> f64 {
+    use std::arch::aarch64::*;
+    let n = a.len().min(b.len());
+    // Four 2-wide f64 accumulators = lane pairs (0,1)(2,3)(4,5)(6,7).
+    let mut acc = [vdupq_n_f64(0.0); 4];
+    let mut j = 0usize;
+    while j + DOT_LANES <= n {
+        let a0 = vld1q_f32(a.as_ptr().add(j));
+        let a1 = vld1q_f32(a.as_ptr().add(j + 4));
+        let b0 = vld1q_f32(b.as_ptr().add(j));
+        let b1 = vld1q_f32(b.as_ptr().add(j + 4));
+        acc[0] = vfmaq_f64(
+            acc[0],
+            vcvt_f64_f32(vget_low_f32(a0)),
+            vcvt_f64_f32(vget_low_f32(b0)),
+        );
+        acc[1] = vfmaq_f64(acc[1], vcvt_high_f64_f32(a0), vcvt_high_f64_f32(b0));
+        acc[2] = vfmaq_f64(
+            acc[2],
+            vcvt_f64_f32(vget_low_f32(a1)),
+            vcvt_f64_f32(vget_low_f32(b1)),
+        );
+        acc[3] = vfmaq_f64(acc[3], vcvt_high_f64_f32(a1), vcvt_high_f64_f32(b1));
+        j += DOT_LANES;
+    }
+    let mut lanes = [0.0f64; DOT_LANES];
+    vst1q_f64(lanes.as_mut_ptr(), acc[0]);
+    vst1q_f64(lanes.as_mut_ptr().add(2), acc[1]);
+    vst1q_f64(lanes.as_mut_ptr().add(4), acc[2]);
+    vst1q_f64(lanes.as_mut_ptr().add(6), acc[3]);
+    while j < n {
+        lanes[j % DOT_LANES] += *a.get_unchecked(j) as f64 * *b.get_unchecked(j) as f64;
+        j += 1;
+    }
+    let mut s = 0.0f64;
+    for &l in &lanes {
+        s += l;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// widen — f32 panel -> f64 scratch, optional f32 scale (element-wise)
+// ---------------------------------------------------------------------
+
+/// `dst[q] = (src[q] * scale) as f64` (the multiply happens in f32
+/// first — the oracle's rounding) or a plain widen when `scale` is
+/// `None`.  Element-wise, so every dispatch path is trivially
+/// bit-identical.  Truncates to the shorter of `dst` / `src`.
+#[inline]
+pub fn widen(dsp: Dispatch, dst: &mut [f64], src: &[f32], scale: Option<f32>) {
+    match dsp {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see `Dispatch` invariant.
+        Dispatch::Avx2 => unsafe { widen_avx2(dst, src, scale) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Dispatch::Neon => unsafe { widen_neon(dst, src, scale) },
+        _ => widen_scalar(dst, src, scale),
+    }
+}
+
+fn widen_scalar(dst: &mut [f64], src: &[f32], scale: Option<f32>) {
+    match scale {
+        Some(m) => {
+            for (o, &v) in dst.iter_mut().zip(src) {
+                *o = (v * m) as f64;
+            }
+        }
+        None => {
+            for (o, &v) in dst.iter_mut().zip(src) {
+                *o = v as f64;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn widen_avx2(dst: &mut [f64], src: &[f32], scale: Option<f32>) {
+    use std::arch::x86_64::*;
+    let n = dst.len().min(src.len());
+    let mut q = 0usize;
+    match scale {
+        Some(m) => {
+            let mv = _mm_set1_ps(m);
+            while q + 4 <= n {
+                let sv = _mm_mul_ps(_mm_loadu_ps(src.as_ptr().add(q)), mv);
+                _mm256_storeu_pd(dst.as_mut_ptr().add(q), _mm256_cvtps_pd(sv));
+                q += 4;
+            }
+            while q < n {
+                *dst.get_unchecked_mut(q) = (*src.get_unchecked(q) * m) as f64;
+                q += 1;
+            }
+        }
+        None => {
+            while q + 4 <= n {
+                let sv = _mm_loadu_ps(src.as_ptr().add(q));
+                _mm256_storeu_pd(dst.as_mut_ptr().add(q), _mm256_cvtps_pd(sv));
+                q += 4;
+            }
+            while q < n {
+                *dst.get_unchecked_mut(q) = *src.get_unchecked(q) as f64;
+                q += 1;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn widen_neon(dst: &mut [f64], src: &[f32], scale: Option<f32>) {
+    use std::arch::aarch64::*;
+    let n = dst.len().min(src.len());
+    let mut q = 0usize;
+    match scale {
+        Some(m) => {
+            let mv = vdupq_n_f32(m);
+            while q + 4 <= n {
+                let sv = vmulq_f32(vld1q_f32(src.as_ptr().add(q)), mv);
+                vst1q_f64(dst.as_mut_ptr().add(q), vcvt_f64_f32(vget_low_f32(sv)));
+                vst1q_f64(dst.as_mut_ptr().add(q + 2), vcvt_high_f64_f32(sv));
+                q += 4;
+            }
+            while q < n {
+                *dst.get_unchecked_mut(q) = (*src.get_unchecked(q) * m) as f64;
+                q += 1;
+            }
+        }
+        None => {
+            while q + 4 <= n {
+                let sv = vld1q_f32(src.as_ptr().add(q));
+                vst1q_f64(dst.as_mut_ptr().add(q), vcvt_f64_f32(vget_low_f32(sv)));
+                vst1q_f64(dst.as_mut_ptr().add(q + 2), vcvt_high_f64_f32(sv));
+                q += 4;
+            }
+            while q < n {
+                *dst.get_unchecked_mut(q) = *src.get_unchecked(q) as f64;
+                q += 1;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// gram_panel_update — one row's outer-product update for a tile
+// ---------------------------------------------------------------------
+
+/// `acc[p*db + q] += abuf[p] * pbuf[q]` for the whole `da x db` tile
+/// (da = abuf.len(), db = pbuf.len(), acc.len() >= da*db).  Lanes span
+/// `q` — the non-reduction axis — so each `acc` element accumulates in
+/// the caller's row order; FMA is exact on these widened-f32 operands
+/// (see module docs), making every path bit-identical.
+#[inline]
+pub fn gram_panel_update(dsp: Dispatch, acc: &mut [f64], abuf: &[f64], pbuf: &[f64]) {
+    debug_assert!(acc.len() >= abuf.len() * pbuf.len());
+    match dsp {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see `Dispatch` invariant.
+        Dispatch::Avx2 => unsafe { gram_panel_avx2(acc, abuf, pbuf) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Dispatch::Neon => unsafe { gram_panel_neon(acc, abuf, pbuf) },
+        _ => gram_panel_scalar(acc, abuf, pbuf),
+    }
+}
+
+fn gram_panel_scalar(acc: &mut [f64], abuf: &[f64], pbuf: &[f64]) {
+    let db = pbuf.len();
+    for (p, &a) in abuf.iter().enumerate() {
+        let dst = &mut acc[p * db..(p + 1) * db];
+        for (o, &b) in dst.iter_mut().zip(pbuf) {
+            *o += a * b;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn gram_panel_avx2(acc: &mut [f64], abuf: &[f64], pbuf: &[f64]) {
+    use std::arch::x86_64::*;
+    let db = pbuf.len();
+    for (p, &a) in abuf.iter().enumerate() {
+        let row = acc.as_mut_ptr().add(p * db);
+        let av = _mm256_set1_pd(a);
+        let mut q = 0usize;
+        while q + 4 <= db {
+            let bv = _mm256_loadu_pd(pbuf.as_ptr().add(q));
+            let ov = _mm256_loadu_pd(row.add(q));
+            _mm256_storeu_pd(row.add(q), _mm256_fmadd_pd(av, bv, ov));
+            q += 4;
+        }
+        while q < db {
+            *row.add(q) += a * *pbuf.get_unchecked(q);
+            q += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn gram_panel_neon(acc: &mut [f64], abuf: &[f64], pbuf: &[f64]) {
+    use std::arch::aarch64::*;
+    let db = pbuf.len();
+    for (p, &a) in abuf.iter().enumerate() {
+        let row = acc.as_mut_ptr().add(p * db);
+        let av = vdupq_n_f64(a);
+        let mut q = 0usize;
+        while q + 2 <= db {
+            let bv = vld1q_f64(pbuf.as_ptr().add(q));
+            let ov = vld1q_f64(row.add(q));
+            vst1q_f64(row.add(q), vfmaq_f64(ov, av, bv));
+            q += 2;
+        }
+        if q < db {
+            *row.add(q) += a * *pbuf.get_unchecked(q);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// axpy_widen — xt_v's inner update (lanes span output columns)
+// ---------------------------------------------------------------------
+
+/// `acc[q] += a * (b[q] as f64)` — the `xt_v` per-row update.  Lanes
+/// span `q` (output columns); `a` is a widened f32 (`v[i] as f64`), so
+/// products are exact and FMA matches mul+add bitwise.  Truncates to
+/// the shorter of `acc` / `b`.
+#[inline]
+pub fn axpy_widen(dsp: Dispatch, acc: &mut [f64], a: f64, b: &[f32]) {
+    match dsp {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see `Dispatch` invariant.
+        Dispatch::Avx2 => unsafe { axpy_widen_avx2(acc, a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Dispatch::Neon => unsafe { axpy_widen_neon(acc, a, b) },
+        _ => axpy_widen_scalar(acc, a, b),
+    }
+}
+
+fn axpy_widen_scalar(acc: &mut [f64], a: f64, b: &[f32]) {
+    for (o, &x) in acc.iter_mut().zip(b) {
+        *o += a * x as f64;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_widen_avx2(acc: &mut [f64], a: f64, b: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len().min(b.len());
+    let av = _mm256_set1_pd(a);
+    let mut q = 0usize;
+    while q + 4 <= n {
+        let bv = _mm256_cvtps_pd(_mm_loadu_ps(b.as_ptr().add(q)));
+        let ov = _mm256_loadu_pd(acc.as_ptr().add(q));
+        _mm256_storeu_pd(acc.as_mut_ptr().add(q), _mm256_fmadd_pd(av, bv, ov));
+        q += 4;
+    }
+    while q < n {
+        *acc.get_unchecked_mut(q) += a * *b.get_unchecked(q) as f64;
+        q += 1;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_widen_neon(acc: &mut [f64], a: f64, b: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = acc.len().min(b.len());
+    let av = vdupq_n_f64(a);
+    let mut q = 0usize;
+    while q + 4 <= n {
+        let bv = vld1q_f32(b.as_ptr().add(q));
+        let lo = vcvt_f64_f32(vget_low_f32(bv));
+        let hi = vcvt_high_f64_f32(bv);
+        let o0 = vld1q_f64(acc.as_ptr().add(q));
+        let o1 = vld1q_f64(acc.as_ptr().add(q + 2));
+        vst1q_f64(acc.as_mut_ptr().add(q), vfmaq_f64(o0, av, lo));
+        vst1q_f64(acc.as_mut_ptr().add(q + 2), vfmaq_f64(o1, av, hi));
+        q += 4;
+    }
+    while q < n {
+        *acc.get_unchecked_mut(q) += a * *b.get_unchecked(q) as f64;
+        q += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut r = Pcg32::new(seed);
+        let a: Vec<f32> = (0..n).map(|_| r.normal_f32()).collect();
+        let b: Vec<f32> = (0..n).map(|_| r.normal_f32()).collect();
+        (a, b)
+    }
+
+    const LENS: [usize; 13] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 64, 100, 257];
+
+    #[test]
+    fn mode_parse_roundtrip_and_rejects() {
+        for m in [SimdMode::Auto, SimdMode::Off, SimdMode::ForceAvx2, SimdMode::ForceNeon] {
+            assert_eq!(SimdMode::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(SimdMode::parse("scalar").unwrap(), SimdMode::Off);
+        assert!(SimdMode::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn dispatch_resolution_is_sane() {
+        assert_eq!(dispatch_for(SimdMode::Off), Dispatch::Scalar);
+        // Auto resolves to whatever the machine has; forcing an
+        // unsupported ISA degrades to scalar rather than crashing.
+        let _ = dispatch_for(SimdMode::Auto);
+        let _ = dispatch_for(SimdMode::ForceAvx2);
+        let _ = dispatch_for(SimdMode::ForceNeon);
+        // CLI slot: Off pins scalar, Auto defers to env/detect.
+        set_simd_mode(SimdMode::Off);
+        assert_eq!(current_dispatch(), Dispatch::Scalar);
+        set_simd_mode(SimdMode::Auto);
+        assert_eq!(current_dispatch(), dispatch_for(current_mode()));
+    }
+
+    #[test]
+    fn dot8_scalar_matches_sequential_dot_approximately() {
+        let (a, b) = vecs(100, 7);
+        let seq: f64 = a.iter().zip(&b).map(|(&x, &w)| x as f64 * w as f64).sum();
+        let lane = dot8_scalar(&a, &b);
+        assert!((seq - lane).abs() <= 1e-12 * (1.0 + seq.abs()));
+    }
+
+    #[test]
+    fn dot8_dispatch_matches_scalar_bitwise() {
+        let dsp = dispatch_for(SimdMode::Auto);
+        for &n in &LENS {
+            let (a, b) = vecs(n, 11 + n as u64);
+            let want = dot8_scalar(&a, &b);
+            let got = dot8(dsp, &a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "dot8 n={n} dsp={dsp:?}");
+        }
+    }
+
+    #[test]
+    fn widen_dispatch_matches_scalar_bitwise() {
+        let dsp = dispatch_for(SimdMode::Auto);
+        for &n in &LENS {
+            let (src, _) = vecs(n, 23 + n as u64);
+            for scale in [None, Some(0.75f32), Some(-1.25f32)] {
+                let mut want = vec![0.0f64; n];
+                let mut got = vec![1.0f64; n];
+                widen_scalar(&mut want, &src, scale);
+                widen(dsp, &mut got, &src, scale);
+                for (w, g) in want.iter().zip(&got) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "widen n={n} scale={scale:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_panel_dispatch_matches_scalar_bitwise() {
+        let dsp = dispatch_for(SimdMode::Auto);
+        let mut r = Pcg32::new(42);
+        for &(da, db) in &[(1usize, 1usize), (3, 5), (4, 4), (7, 9), (8, 8), (5, 17)] {
+            let abuf: Vec<f64> = (0..da).map(|_| r.normal_f32() as f64).collect();
+            let pbuf: Vec<f64> = (0..db).map(|_| r.normal_f32() as f64).collect();
+            let mut want: Vec<f64> = (0..da * db).map(|_| r.normal_f32() as f64).collect();
+            let mut got = want.clone();
+            gram_panel_scalar(&mut want, &abuf, &pbuf);
+            gram_panel_update(dsp, &mut got, &abuf, &pbuf);
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(g.to_bits(), w.to_bits(), "gram_panel {da}x{db}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_widen_dispatch_matches_scalar_bitwise() {
+        let dsp = dispatch_for(SimdMode::Auto);
+        for &n in &LENS {
+            let (b, accs) = vecs(n, 57 + n as u64);
+            let mut want: Vec<f64> = accs.iter().map(|&v| v as f64).collect();
+            let mut got = want.clone();
+            axpy_widen_scalar(&mut want, 0.625f64, &b);
+            axpy_widen(dsp, &mut got, 0.625f64, &b);
+            for (w, g) in want.iter().zip(&got) {
+                assert_eq!(g.to_bits(), w.to_bits(), "axpy n={n}");
+            }
+        }
+    }
+}

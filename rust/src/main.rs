@@ -51,7 +51,7 @@ fn run() -> Result<()> {
                  examples:\n\
                  \x20 nexus fit --n 20000 --d 50 --cv 5 --exec ray --workers 4\n\
                  \x20 nexus fit --n 200000 --d 50 --sharded --ingest-chunk 16384 --exec ray\n\
-                 \x20 nexus fit --n 100000 --d 200 --backend host --kernel-threads 8\n\
+                 \x20 nexus fit --n 100000 --d 200 --backend host --kernel-threads 8 --simd auto\n\
                  \x20 nexus tune --trials 16 --tune-policy asha --eta 2 --rungs 3 --grace 1\n\
                  \x20 nexus simulate --n 1000000 --d 500 --nodes 5\n\
                  \x20 nexus serve --replicas 4 --policy p2c --rate 2000\n\
@@ -86,6 +86,7 @@ fn run_config(args: &Args) -> Result<RunConfig> {
     cfg.ingest_chunk = args.usize_or("ingest-chunk", cfg.ingest_chunk)?;
     cfg.shard_block = args.usize_or("shard-blocks", cfg.shard_block)?;
     cfg.kernel_threads = args.usize_or("kernel-threads", cfg.kernel_threads)?;
+    cfg.simd = args.opt_or("simd", &cfg.simd);
     if args.flag("sharded") {
         cfg.sharded = true;
     }

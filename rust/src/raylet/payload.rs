@@ -27,7 +27,11 @@ impl Payload {
             Payload::Tensor(t) => t.size_bytes(),
             Payload::Tensors(ts) => ts.iter().map(|t| t.size_bytes()).sum(),
             Payload::Block(b) => {
+                // f32 buffers plus the usize row-index vector — omitting
+                // `rows` undercounts real blocks by ~1/3 at d_pad = 16,
+                // skewing the store's LRU cap and spill decisions
                 4 * (b.x.rows() * b.x.cols() + b.y.len() + b.t.len() + b.mask.len())
+                    + std::mem::size_of::<usize>() * b.rows.len()
             }
             Payload::Empty => 0,
         }
@@ -122,6 +126,26 @@ mod tests {
         assert_eq!(Payload::Tensor(t.clone()).size_bytes(), 24);
         assert_eq!(Payload::Tensors(vec![t.clone(), t]).size_bytes(), 48);
         assert_eq!(Payload::Empty.size_bytes(), 0);
+    }
+
+    #[test]
+    fn block_size_counts_every_buffer() {
+        // Regression: `rows` (usize per real row) was omitted from the
+        // accounting.  Pin size_bytes against the struct's actual
+        // buffers, including a padded block where rows.len() < x.rows().
+        let x = Matrix::from_fn(6, 3, |i, j| (i * 3 + j) as f32);
+        let y: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let t = vec![0.0f32; 6];
+        let rows: Vec<usize> = (0..4).collect(); // 4 real rows, 2 padded
+        let blocks = crate::data::partition::make_blocks(&x, &y, &t, &rows, 6);
+        assert_eq!(blocks.len(), 1);
+        let b = blocks.into_iter().next().unwrap();
+        assert_eq!(b.rows.len(), 4);
+        let want = 4 * (b.x.rows() * b.x.cols() + b.y.len() + b.t.len() + b.mask.len())
+            + std::mem::size_of::<usize>() * b.rows.len();
+        assert_eq!(Payload::Block(b).size_bytes(), want);
+        // and the usize vector genuinely moves the number
+        assert_eq!(want, 4 * (6 * 3 + 6 + 6 + 6) + 8 * 4);
     }
 
     #[test]

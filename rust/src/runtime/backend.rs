@@ -85,9 +85,12 @@ pub trait KernelExec: Send + Sync {
 // ---------------------------------------------------------------------------
 
 /// Pure-rust backend over the blocked kernel core — no artifacts
-/// required.  Thread budget and tile sizes come from the global knobs
-/// (`--kernel-threads`, `NEXUS_TILE_COLS`/`NEXUS_TILE_ROWS`); outputs
-/// are bit-identical at every setting.
+/// required.  Thread budget, tile sizes, and SIMD dispatch come from
+/// the global knobs (`--kernel-threads`, `NEXUS_TILE_COLS`/
+/// `NEXUS_TILE_ROWS`, `--simd`/`NEXUS_SIMD`); the runtime-dispatched
+/// microkernels (`linalg::simd`, DESIGN.md §11) flow in through
+/// `KernelOpts::current()`, and outputs are bit-identical at every
+/// setting, including across ISAs.
 #[derive(Clone, Default)]
 pub struct HostBackend;
 

@@ -1,0 +1,86 @@
+//! Environment-variable knob parsing with loud, once-per-key fallbacks.
+//!
+//! Every `NEXUS_*` knob resolves through here so a typo'd value
+//! (`NEXUS_TILE_COLS=64k`) produces one stderr warning naming the
+//! variable and the fallback instead of silently running with the
+//! default — the failure mode is "I thought I was benchmarking tile 64k"
+//! and it must be visible.  Warnings are deduplicated per key for the
+//! process lifetime, so hot paths that re-resolve a knob don't spam.
+
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+fn warned() -> &'static Mutex<HashSet<String>> {
+    static W: OnceLock<Mutex<HashSet<String>>> = OnceLock::new();
+    W.get_or_init(|| Mutex::new(HashSet::new()))
+}
+
+/// Print `msg` to stderr, at most once per `key` for the process
+/// lifetime.  Returns whether this call actually printed.
+pub fn warn_once(key: &str, msg: &str) -> bool {
+    let mut set = warned().lock().unwrap();
+    let fresh = set.insert(key.to_string());
+    if fresh {
+        eprintln!("nexus: warning: {msg}");
+    }
+    fresh
+}
+
+/// Parse `var` as a `usize >= min`.  Unset returns `default` silently;
+/// an unparsable or out-of-range value warns once (naming the variable,
+/// the rejected value, and the fallback) and returns `default`.
+pub fn env_usize(var: &str, default: usize, min: usize) -> usize {
+    let Ok(raw) = std::env::var(var) else {
+        return default;
+    };
+    match raw.trim().parse::<usize>() {
+        Ok(v) if v >= min => v,
+        _ => {
+            warn_once(
+                var,
+                &format!(
+                    "{var}={raw:?} is not a valid value (need an integer >= {min}); \
+                     falling back to {default}"
+                ),
+            );
+            default
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_is_silent_default() {
+        assert_eq!(env_usize("NEXUS_TEST_ENV_UNSET_KNOB", 64, 1), 64);
+    }
+
+    #[test]
+    fn valid_values_parse() {
+        std::env::set_var("NEXUS_TEST_ENV_VALID_KNOB", "128");
+        assert_eq!(env_usize("NEXUS_TEST_ENV_VALID_KNOB", 64, 1), 128);
+        std::env::set_var("NEXUS_TEST_ENV_VALID_KNOB", " 32 ");
+        assert_eq!(env_usize("NEXUS_TEST_ENV_VALID_KNOB", 64, 1), 32);
+    }
+
+    #[test]
+    fn garbage_and_below_min_warn_once_and_fall_back() {
+        std::env::set_var("NEXUS_TEST_ENV_BAD_KNOB", "64k");
+        assert_eq!(env_usize("NEXUS_TEST_ENV_BAD_KNOB", 64, 1), 64);
+        // zero is below min=1 for tile knobs — also a fallback
+        std::env::set_var("NEXUS_TEST_ENV_ZERO_KNOB", "0");
+        assert_eq!(env_usize("NEXUS_TEST_ENV_ZERO_KNOB", 2048, 1), 2048);
+        // but min=0 knobs (thread budget: 0 = auto) accept zero
+        std::env::set_var("NEXUS_TEST_ENV_AUTO_KNOB", "0");
+        assert_eq!(env_usize("NEXUS_TEST_ENV_AUTO_KNOB", 7, 0), 0);
+    }
+
+    #[test]
+    fn warn_once_dedupes_per_key() {
+        assert!(warn_once("test-dedupe-key", "first"));
+        assert!(!warn_once("test-dedupe-key", "second"));
+        assert!(warn_once("test-dedupe-other-key", "third"));
+    }
+}

@@ -7,3 +7,4 @@ pub mod json;
 pub mod cli;
 pub mod timer;
 pub mod prop;
+pub mod env;

@@ -1,15 +1,20 @@
-//! Determinism contract of the blocked kernel core (DESIGN.md §8).
+//! Determinism contract of the blocked kernel core (DESIGN.md §8, §11).
 //!
 //! Every optimized kernel in `linalg::blocked` must be **bitwise**
 //! identical to the naive f64 oracle in `linalg`/`linalg::graphs` — at
-//! tail shapes (n, d not tile multiples), at awkward tile sizes, and at
-//! every thread count.  These properties are what lets `HostBackend`
+//! tail shapes (n, d not tile multiples), at awkward tile sizes, at
+//! every thread count, and at every SIMD dispatch (scalar vs whatever
+//! ISA this machine has).  These properties are what lets `HostBackend`
 //! route through the blocked path without shifting a single golden
-//! value.
+//! value.  The random opts draw a random dispatch, so the oracle
+//! comparisons below also cover SIMD-vs-oracle; the dedicated dispatch
+//! tests additionally pin scalar == SIMD at lane-remainder shapes and
+//! end-to-end through crossfit/DML under `--simd off` vs `auto`.
 
 use nexus::data::matrix::Matrix;
 use nexus::linalg;
 use nexus::linalg::blocked::{self, KernelOpts};
+use nexus::linalg::simd::{self, Dispatch, SimdMode};
 use nexus::util::prop::{forall, Gen};
 
 const THREAD_SWEEP: [usize; 3] = [1, 2, 8];
@@ -25,7 +30,12 @@ fn gen_block(g: &mut Gen) -> (Matrix, Vec<f32>, Vec<f32>) {
 }
 
 fn gen_opts(g: &mut Gen, threads: usize) -> KernelOpts {
-    KernelOpts { threads, tile_cols: g.usize_in(1..10), tile_rows: g.usize_in(1..40) }
+    let dsp = if g.bool() {
+        simd::dispatch_for(SimdMode::Auto)
+    } else {
+        Dispatch::Scalar
+    };
+    KernelOpts { threads, tile_cols: g.usize_in(1..10), tile_rows: g.usize_in(1..40), simd: dsp }
 }
 
 #[test]
@@ -109,6 +119,138 @@ fn prop_irls_and_final_stage_bitwise() {
             assert_eq!(s.data(), s0.data());
         }
     });
+}
+
+/// Deterministic data for the fixed-shape dispatch parity sweep.
+fn fixed_block(seed: u64, n: usize, d: usize) -> (Matrix, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut r = nexus::util::rng::Pcg32::new(seed);
+    let x = Matrix::from_fn(n, d, |_, _| r.normal_f32());
+    let y: Vec<f32> = (0..n).map(|_| r.normal_f32()).collect();
+    let t: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+    let mask: Vec<f32> = (0..n).map(|i| if i % 7 == 0 { 0.0 } else { 1.0 }).collect();
+    (x, y, t, mask)
+}
+
+/// Every kernel, bit-identical between the scalar path and this
+/// machine's SIMD dispatch, at lane-remainder shapes: d not a multiple
+/// of the 8-lane width, n = 0, a single row, and tiles that split
+/// panels mid-lane.  (On a machine with no SIMD, auto == scalar and
+/// the test degenerates to a tautology — CI runs on x86_64 with AVX2.)
+#[test]
+fn simd_dispatch_parity_at_remainder_shapes() {
+    let auto = simd::dispatch_for(SimdMode::Auto);
+    let shapes: [(usize, usize); 10] =
+        [(0, 3), (0, 8), (1, 1), (1, 8), (5, 7), (33, 9), (64, 16), (100, 17), (7, 24), (129, 31)];
+    for (si, &(n, d)) in shapes.iter().enumerate() {
+        let (x, y, t, mask) = fixed_block(1000 + si as u64, n, d);
+        let beta_y: Vec<f32> = (0..d).map(|j| ((j as f32) * 0.3).sin() * 0.5).collect();
+        let beta_t: Vec<f32> = (0..d).map(|j| ((j as f32) * 0.7).cos() * 0.4).collect();
+        for threads in [1, 3] {
+            for tile in [1, 5, 8, 64] {
+                let mk = |dsp: Dispatch| KernelOpts {
+                    threads,
+                    tile_cols: tile,
+                    tile_rows: 7,
+                    simd: dsp,
+                };
+                let (off, on) = (mk(Dispatch::Scalar), mk(auto));
+                let ctx = format!("n={n} d={d} threads={threads} tile={tile} dsp={auto:?}");
+
+                assert_eq!(
+                    blocked::gram_with(&x, &off).data(),
+                    blocked::gram_with(&x, &on).data(),
+                    "gram {ctx}"
+                );
+                let s0 = blocked::gram_block_with(&x, &y, &mask, &off).unwrap();
+                let s1 = blocked::gram_block_with(&x, &y, &mask, &on).unwrap();
+                assert_eq!(s0.g.data(), s1.g.data(), "gram_block g {ctx}");
+                assert_eq!(s0.xty, s1.xty, "gram_block xty {ctx}");
+                assert_eq!(s0.yty.to_bits(), s1.yty.to_bits(), "gram_block yty {ctx}");
+                assert_eq!(s0.n.to_bits(), s1.n.to_bits(), "gram_block n {ctx}");
+
+                assert_eq!(
+                    blocked::xt_v_with(&x, &y, &off).unwrap(),
+                    blocked::xt_v_with(&x, &y, &on).unwrap(),
+                    "xt_v {ctx}"
+                );
+                assert_eq!(
+                    blocked::mat_vec_with(&x, &beta_y, &off).unwrap(),
+                    blocked::mat_vec_with(&x, &beta_y, &on).unwrap(),
+                    "mat_vec {ctx}"
+                );
+                assert_eq!(
+                    blocked::predict_proba_with(&x, &beta_t, &off).unwrap(),
+                    blocked::predict_proba_with(&x, &beta_t, &on).unwrap(),
+                    "predict_proba {ctx}"
+                );
+                assert_eq!(
+                    blocked::residual_block_with(&x, &y, &t, &beta_y, &beta_t, &off).unwrap(),
+                    blocked::residual_block_with(&x, &y, &t, &beta_y, &beta_t, &on).unwrap(),
+                    "residual_block {ctx}"
+                );
+                let (h0, c0, l0) = blocked::irls_block_with(&x, &t, &mask, &beta_t, &off).unwrap();
+                let (h1, c1, l1) = blocked::irls_block_with(&x, &t, &mask, &beta_t, &on).unwrap();
+                assert_eq!(h0.data(), h1.data(), "irls H {ctx}");
+                assert_eq!(c0, c1, "irls c {ctx}");
+                assert_eq!(l0.to_bits(), l1.to_bits(), "irls nll {ctx}");
+                let (m0, v0) = blocked::final_moments_with(&y, &t, &x, &mask, &off).unwrap();
+                let (m1, v1) = blocked::final_moments_with(&y, &t, &x, &mask, &on).unwrap();
+                assert_eq!(m0.data(), m1.data(), "final_moments M {ctx}");
+                assert_eq!(v0, v1, "final_moments v {ctx}");
+                assert_eq!(
+                    blocked::final_score_with(&y, &t, &x, &beta_y, &mask, &off).unwrap().data(),
+                    blocked::final_score_with(&y, &t, &x, &beta_y, &mask, &on).unwrap().data(),
+                    "final_score {ctx}"
+                );
+            }
+        }
+    }
+}
+
+/// End-to-end crossfit/DML parity: a full fit under `--simd off` must
+/// be bit-identical to one under `auto`.  This flips the process-global
+/// mode (the other tests here pass explicit dispatches, so there is no
+/// interference), restoring `auto` afterwards.
+#[test]
+fn dml_end_to_end_parity_across_simd_settings() {
+    use std::sync::Arc;
+
+    use nexus::causal::dml;
+    use nexus::data::synth::{generate, SynthConfig};
+    use nexus::models::cost::CostModel;
+    use nexus::models::crossfit::CrossfitConfig;
+    use nexus::raylet::api::RayContext;
+    use nexus::runtime::backend::{HostBackend, KernelExec};
+
+    let scfg = SynthConfig { n: 900, d: 6, seed: 77, ..Default::default() };
+    let ccfg = CrossfitConfig {
+        cv: 3,
+        lam_y: 1e-3,
+        lam_t: 1e-3,
+        irls_iters: 4,
+        block: 128,
+        d_pad: 8,
+        d_real: 6,
+        seed: 77,
+        stratified: true,
+        reuse_suffstats: false,
+    };
+    let ds = generate(&scfg);
+    let run = |mode: SimdMode| {
+        simd::set_simd_mode(mode);
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        let fit =
+            dml::fit_with(&RayContext::inline(), kx, &CostModel::default(), &ds, &ccfg, 1, 2)
+                .unwrap();
+        simd::set_simd_mode(SimdMode::Auto);
+        fit
+    };
+    let off = run(SimdMode::Off);
+    let auto = run(SimdMode::Auto);
+    assert_eq!(off.theta, auto.theta, "theta must not depend on SIMD dispatch");
+    assert_eq!(off.ate.value.to_bits(), auto.ate.value.to_bits());
+    assert_eq!(off.ate.se.to_bits(), auto.ate.se.to_bits());
+    assert_eq!(off.cov.data(), auto.cov.data());
 }
 
 #[test]
