@@ -50,7 +50,8 @@ fn main() -> nexus::Result<()> {
     // distributed PC
     let ctx = RayContext::threads(4);
     let corr = discovery::correlation_matrix(&ctx, Arc::new(HostBackend), &x, 4096)?;
-    let g = discovery::pc(&ctx, &corr, n, &PcConfig { alpha: 0.01, max_level: 3 })?;
+    let pc_cfg = PcConfig { alpha: 0.01, max_level: 3, parallel: true };
+    let g = discovery::pc(&ctx, &corr, n, &pc_cfg)?;
     let m = ctx.metrics();
 
     let mut tbl = Table::new(

@@ -1,0 +1,208 @@
+//! Estimator-zoo bench: every sharded estimator (S/T/X metalearners,
+//! cross-fit AIPW, entropy balancing) swept over n × workers.
+//!
+//! Two numbers matter per cell: wall-clock (does the task fan-out
+//! scale?) and the estimate itself (did distribution move a bit?).
+//! The second is enforced in-run: every sharded fit is bit-compared
+//! against the materialized-adapter baseline on the inline executor —
+//! the speedup table is void if any cell's ATE differs in even one
+//! mantissa bit, so the guard asserts rather than records.
+//!
+//! Every run is appended to `BENCH_estimator_zoo.json`
+//! (EXPERIMENTS.md documents the schema).
+//!
+//!     cargo bench --offline --bench estimator_zoo
+//!     NEXUS_BENCH_QUICK=1 ...  (tiny sweep for CI)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use nexus::bench_support::{fmt_secs, Table};
+use nexus::causal::{balancing, dr, metalearners};
+use nexus::data::dataset::ShardedDataset;
+use nexus::data::synth::{generate, CausalDataset, SynthConfig};
+use nexus::models::cost::CostModel;
+use nexus::raylet::api::RayContext;
+use nexus::runtime::backend::{backend_by_name, KernelExec};
+use nexus::util::json::Json;
+
+const LAM: f32 = 1e-3;
+const CLIP: f32 = 0.01;
+const BAL_ITERS: usize = 12;
+const BAL_RIDGE: f32 = 1e-6;
+
+/// CATE-dispersion SE proxy for the metalearners (no influence fn).
+fn meta_se(ate: f64, cate: &[f32]) -> f64 {
+    let n = cate.len() as f64;
+    let mut ss = 0.0f64;
+    for &c in cate {
+        ss += (c as f64 - ate).powi(2);
+    }
+    (ss / (n - 1.0).max(1.0) / n).sqrt()
+}
+
+/// Materialized-adapter fit on the given executor: the parity anchor.
+fn fit_adapter(
+    est: &str,
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    ds: &CausalDataset,
+    block: usize,
+    seed: u64,
+) -> nexus::Result<(f64, f64)> {
+    Ok(match est {
+        "s" => {
+            let f = metalearners::s_learner(ctx, kx, ds, LAM, block)?;
+            (f.ate, meta_se(f.ate, &f.cate))
+        }
+        "t" => {
+            let f = metalearners::t_learner(ctx, kx, ds, LAM, block)?;
+            (f.ate, meta_se(f.ate, &f.cate))
+        }
+        "x" => {
+            let f = metalearners::x_learner(ctx, kx, ds, LAM, block)?;
+            (f.ate, meta_se(f.ate, &f.cate))
+        }
+        "dr" => {
+            let f = dr::fit(ctx, kx, ds, 5, LAM, CLIP, block, seed)?;
+            (f.ate.value, f.ate.se)
+        }
+        _ => {
+            let f = balancing::fit(ctx, kx, ds, BAL_ITERS, BAL_RIDGE, block)?;
+            (f.ate.value, f.ate.se)
+        }
+    })
+}
+
+/// Store-resident fit: same estimator directly on the sharded plane.
+fn fit_sharded(
+    est: &str,
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    cost: &CostModel,
+    sds: &ShardedDataset,
+    d_real: usize,
+    seed: u64,
+) -> nexus::Result<(f64, f64)> {
+    Ok(match est {
+        "s" | "t" | "x" => {
+            let cfg = metalearners::MetaConfig { lam: LAM, irls_iters: 5, d_real };
+            let f = match est {
+                "s" => metalearners::s_learner_sharded(ctx, kx, cost, sds, &cfg)?,
+                "t" => metalearners::t_learner_sharded(ctx, kx, cost, sds, &cfg)?,
+                _ => metalearners::x_learner_sharded(ctx, kx, cost, sds, &cfg)?,
+            };
+            (f.ate, meta_se(f.ate, &f.cate))
+        }
+        "dr" => {
+            let cfg = dr::DrConfig { cv: 5, lam: LAM, clip: CLIP, irls_iters: 5, seed, d_real };
+            let f = dr::fit_sharded(ctx, kx, cost, sds, &cfg)?;
+            (f.ate.value, f.ate.se)
+        }
+        _ => {
+            let cfg = balancing::BalancingConfig { iters: BAL_ITERS, ridge: BAL_RIDGE, d_real };
+            let f = balancing::fit_sharded(ctx, kx, cost, sds, &cfg)?;
+            (f.ate.value, f.ate.se)
+        }
+    })
+}
+
+fn main() -> nexus::Result<()> {
+    let quick = std::env::var("NEXUS_BENCH_QUICK").is_ok();
+    let kx: Arc<dyn KernelExec> = backend_by_name("host")?;
+    let cost = CostModel::default();
+    let seed = 123u64;
+    let d = 8usize;
+    let d_pad = (d + 1).next_power_of_two().max(8);
+    let ests = ["s", "t", "x", "dr", "balancing"];
+    let ns: &[usize] = if quick { &[2_000] } else { &[20_000, 100_000] };
+    let workers: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+
+    let mut records: Vec<Json> = Vec::new();
+    let mut tbl = Table::new(
+        "Estimator zoo — sharded plane, estimator × n × workers (parity-guarded)",
+        &["estimator", "n", "workers", "ATE", "SE", "tasks", "wall", "parity"],
+    );
+    for &n in ns {
+        let ds = generate(&SynthConfig { n, d, seed, ..Default::default() });
+        let block = if n >= 50_000 { 4096 } else { 256 };
+        let driver_block_bytes = 4 * (block * d_pad + 3 * block);
+        for est in ests {
+            // the anchor: materialized adapter, inline executor
+            let (base_ate, base_se) =
+                fit_adapter(est, &RayContext::inline(), kx.clone(), &ds, block, seed)?;
+            for &w in workers {
+                let ctx = RayContext::threads(w);
+                let t0 = Instant::now();
+                let sds = ShardedDataset::from_materialized(&ctx, &ds, d_pad, block)?;
+                let (ate, se) = fit_sharded(est, &ctx, kx.clone(), &cost, &sds, d, seed)?;
+                ctx.drain()?;
+                let wall = t0.elapsed().as_secs_f64();
+                let m = ctx.metrics();
+                // the in-run equality guard: distribution may not move a bit
+                assert_eq!(
+                    base_ate.to_bits(),
+                    ate.to_bits(),
+                    "{est}: sharded ATE != materialized at n={n} workers={w}"
+                );
+                assert_eq!(
+                    base_se.to_bits(),
+                    se.to_bits(),
+                    "{est}: sharded SE != materialized at n={n} workers={w}"
+                );
+                tbl.row(vec![
+                    est.to_string(),
+                    format!("{n}"),
+                    format!("{w}"),
+                    format!("{ate:.4}"),
+                    format!("{se:.4}"),
+                    format!("{}", m.tasks_run),
+                    fmt_secs(wall),
+                    "bit-equal".into(),
+                ]);
+                records.push(
+                    Json::obj()
+                        .set("kind", "zoo")
+                        .set("estimator", est)
+                        .set("n", n)
+                        .set("d", d)
+                        .set("d_pad", d_pad)
+                        .set("block", block)
+                        .set("workers", w)
+                        .set("ate", ate)
+                        .set("se", se)
+                        .set("true_ate", ds.true_ate())
+                        .set("tasks", m.tasks_run as i64)
+                        .set("driver_block_bytes", driver_block_bytes)
+                        .set("peak_store_bytes", m.peak_store_bytes as i64)
+                        .set("wall_secs", wall)
+                        .set("parity", true),
+                );
+            }
+        }
+    }
+    tbl.print();
+
+    // append this invocation as one session (same pattern as fig6)
+    let path = std::path::Path::new("BENCH_estimator_zoo.json");
+    let mut sessions: Vec<Json> = nexus::util::json::parse_file(path)
+        .ok()
+        .and_then(|old| old.get("sessions").and_then(|s| s.as_arr().ok().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    let n_runs = records.len();
+    sessions.push(
+        Json::obj()
+            .set("backend", kx.name())
+            .set("quick", quick)
+            .set("runs", Json::Arr(records)),
+    );
+    let n_sessions = sessions.len();
+    let out = Json::obj()
+        .set("bench", "estimator_zoo")
+        .set("sessions", Json::Arr(sessions));
+    std::fs::write(path, out.to_string())?;
+    println!(
+        "\nwrote BENCH_estimator_zoo.json ({n_runs} runs this session, {n_sessions} sessions total)"
+    );
+    Ok(())
+}

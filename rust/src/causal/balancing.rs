@@ -1,0 +1,459 @@
+//! Balancing-weights ATE estimator (entropy balancing, Hainmueller
+//! 2012; the observational workhorse in Snap's "Balancing Approach for
+//! Causal Inference at Scale").
+//!
+//! Each arm gets exponential-tilting weights `w_i = exp(theta' c_i)`
+//! with `c_i = x_i - mu` the covariates centered at the *overall*
+//! sample means; `theta` solves the dual problem
+//! `min_theta log sum_{i in arm} exp(theta' c_i)`, whose optimum makes
+//! the weighted covariate means of the arm match the full sample —
+//! exact first-moment balance, no propensity model.  ATE is the
+//! difference of weighted outcome means.
+//!
+//! Everything heavy is store-resident: each Newton iteration is one
+//! per-block moment task (`sum w c c'`, `sum w c`, `sum w`, for both
+//! arms at once) tree-reduced like a gram partial, with the tiny
+//! d×d solve on the driver via the blocked/SIMD
+//! [`KernelExec::ridge_solve`] kernel.  A final pass emits per-unit
+//! weights plus the variance scalars.  The driver never holds a block.
+
+use std::sync::Arc;
+
+use crate::causal::inference::Estimate;
+use crate::data::dataset::ShardedDataset;
+use crate::data::matrix::Matrix;
+use crate::data::synth::CausalDataset;
+use crate::error::{NexusError, Result};
+use crate::models::cost::CostModel;
+use crate::models::distops::{self, tree_reduce};
+use crate::models::ridge::REDUCE_ARITY;
+use crate::raylet::api::RayContext;
+use crate::raylet::payload::Payload;
+use crate::raylet::task::{ObjectRef, TaskFn};
+use crate::runtime::backend::KernelExec;
+use crate::runtime::tensor::Tensor;
+
+/// Balancing fit result.
+#[derive(Clone, Debug)]
+pub struct BalancingFit {
+    pub ate: Estimate,
+    /// Kish effective sample size of the treated-arm weights.
+    pub ess_treated: f64,
+    /// Kish effective sample size of the control-arm weights.
+    pub ess_control: f64,
+    /// Per-unit balancing weight (row order; each unit weighted within
+    /// its own arm).
+    pub weights: Vec<f32>,
+    /// Store refs of the per-block weight vectors — kept so callers can
+    /// exercise lineage reconstruction.
+    pub weight_refs: Vec<ObjectRef>,
+}
+
+/// Knobs for the balancing fit.
+#[derive(Clone, Debug)]
+pub struct BalancingConfig {
+    /// Newton iterations on the entropy dual (fixed count — no
+    /// early-exit, so the task DAG is identical on every executor).
+    pub iters: usize,
+    /// Ridge added to the Newton Hessian (conditioning).
+    pub ridge: f32,
+    /// Raw covariate count within the padded width.
+    pub d_real: usize,
+}
+
+impl Default for BalancingConfig {
+    fn default() -> Self {
+        BalancingConfig { iters: 12, ridge: 1e-6, d_real: 0 }
+    }
+}
+
+fn validate(sds: &ShardedDataset, cfg: &BalancingConfig) -> Result<()> {
+    if cfg.iters == 0 {
+        return Err(NexusError::Config(
+            "balancing: iters must be >= 1 (no Newton steps means raw means)".into(),
+        ));
+    }
+    if !cfg.ridge.is_finite() || cfg.ridge < 0.0 {
+        return Err(NexusError::Config(format!(
+            "balancing: ridge must be finite and >= 0, got {}",
+            cfg.ridge
+        )));
+    }
+    if sds.n_rows == 0 {
+        return Err(NexusError::Data("balancing: empty dataset".into()));
+    }
+    if !sds.padded {
+        return Err(NexusError::Data(
+            "balancing: needs a padded dataset (intercept in col 0)".into(),
+        ));
+    }
+    if cfg.d_real == 0 || cfg.d_real + 1 > sds.d {
+        return Err(NexusError::Data(format!(
+            "balancing: d_real={} does not fit stored width {}",
+            cfg.d_real, sds.d
+        )));
+    }
+    Ok(())
+}
+
+/// Task: entropy-dual moment partials for BOTH arms over one block.
+/// args = [block, theta([theta1 | theta0], 2·dd), mu(dd)] ->
+/// Tensors([H(2·dd·dd), g(2·dd), aux([sw1, swy1, sw0, swy0])]).
+/// Slot order is block row order, so the partial is bit-deterministic.
+fn moments_task(dd: usize) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let b = args[0].as_block()?;
+        let theta = args[1].as_floats()?;
+        let mu = args[2].as_floats()?;
+        let mut hh = vec![0.0f32; 2 * dd * dd];
+        let mut gg = vec![0.0f32; 2 * dd];
+        let mut aux = vec![0.0f32; 4];
+        let mut c = vec![0.0f32; dd];
+        for i in 0..b.x.rows() {
+            if b.mask[i] <= 0.0 {
+                continue;
+            }
+            let row = b.x.row(i);
+            for j in 0..dd {
+                c[j] = row[j + 1] - mu[j];
+            }
+            let arm = if b.t[i] > 0.5 { 0 } else { 1 };
+            let th = &theta[arm * dd..(arm + 1) * dd];
+            let z: f32 = th.iter().zip(&c).map(|(a, b)| a * b).sum();
+            let w = z.clamp(-30.0, 30.0).exp();
+            let base = arm * dd * dd;
+            for j in 0..dd {
+                let wc = w * c[j];
+                gg[arm * dd + j] += wc;
+                for l in 0..dd {
+                    hh[base + j * dd + l] += wc * c[l];
+                }
+            }
+            aux[arm * 2] += w;
+            aux[arm * 2 + 1] += w * b.y[i];
+        }
+        Ok(Payload::Tensors(vec![
+            Tensor::vector(hh),
+            Tensor::vector(gg),
+            Tensor::vector(aux),
+        ]))
+    })
+}
+
+/// Task: final-weight pass.  args = [block, theta, mu] ->
+/// Tensors([Floats-like weights tensor, stats]) is awkward for the
+/// scatter, so this emits ONLY the per-slot weight vector; the variance
+/// scalars ride a separate stats task.
+fn weights_task(dd: usize) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let b = args[0].as_block()?;
+        let theta = args[1].as_floats()?;
+        let mu = args[2].as_floats()?;
+        let mut out = vec![0.0f32; b.x.rows()];
+        for i in 0..b.x.rows() {
+            if b.mask[i] <= 0.0 {
+                continue;
+            }
+            let row = b.x.row(i);
+            let arm = if b.t[i] > 0.5 { 0 } else { 1 };
+            let th = &theta[arm * dd..(arm + 1) * dd];
+            let z: f32 = th
+                .iter()
+                .enumerate()
+                .map(|(j, &a)| a * (row[j + 1] - mu[j]))
+                .sum();
+            out[i] = z.clamp(-30.0, 30.0).exp();
+        }
+        Ok(Payload::Floats(out))
+    })
+}
+
+/// Task: weighted-outcome variance partials at the final theta.
+/// args = [block, theta, mu] -> Tensors([v]) with v =
+/// [sw, swy, sww, swwy, swwyy] per arm (treated first), 10 floats.
+fn var_task(dd: usize) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let b = args[0].as_block()?;
+        let theta = args[1].as_floats()?;
+        let mu = args[2].as_floats()?;
+        let mut v = vec![0.0f32; 10];
+        for i in 0..b.x.rows() {
+            if b.mask[i] <= 0.0 {
+                continue;
+            }
+            let row = b.x.row(i);
+            let arm = if b.t[i] > 0.5 { 0 } else { 1 };
+            let th = &theta[arm * dd..(arm + 1) * dd];
+            let z: f32 = th
+                .iter()
+                .enumerate()
+                .map(|(j, &a)| a * (row[j + 1] - mu[j]))
+                .sum();
+            let w = z.clamp(-30.0, 30.0).exp();
+            let y = b.y[i];
+            let base = arm * 5;
+            v[base] += w;
+            v[base + 1] += w * y;
+            v[base + 2] += w * w;
+            v[base + 3] += w * w * y;
+            v[base + 4] += w * w * y * y;
+        }
+        Ok(Payload::Tensors(vec![Tensor::vector(v)]))
+    })
+}
+
+fn moment_pass(
+    ctx: &RayContext,
+    cost: &CostModel,
+    sds: &ShardedDataset,
+    theta_ref: ObjectRef,
+    mu_ref: ObjectRef,
+    dd: usize,
+    label: &str,
+    task: TaskFn,
+    out_floats: usize,
+) -> ObjectRef {
+    let partials: Vec<ObjectRef> = sds
+        .blocks
+        .iter()
+        .map(|r| {
+            ctx.submit_sized(
+                label,
+                vec![*r, theta_ref, mu_ref],
+                cost.gram(sds.block, dd + 1),
+                4 * out_floats,
+                task.clone(),
+            )
+        })
+        .collect();
+    tree_reduce(
+        ctx,
+        partials,
+        REDUCE_ARITY,
+        label,
+        cost.reduce(REDUCE_ARITY, dd + 1),
+        4 * out_floats,
+    )
+}
+
+/// Entropy-balancing ATE over store-resident blocks.
+pub fn fit_sharded(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    cost: &CostModel,
+    sds: &ShardedDataset,
+    cfg: &BalancingConfig,
+) -> Result<BalancingFit> {
+    validate(sds, cfg)?;
+    let dd = cfg.d_real;
+    let t = sds.collect_t(ctx)?;
+    let n1 = t.iter().filter(|&&v| v > 0.5).count();
+    if n1 == 0 || n1 == t.len() {
+        return Err(NexusError::Data(
+            "balancing: degenerate treatment (every unit in one arm)".into(),
+        ));
+    }
+
+    // overall covariate means via the distributed stats pass
+    // (deterministic: fixed tree-reduce structure)
+    let stats = sds.stats(ctx)?;
+    let mu: Vec<f32> = stats.mean[1..=dd].iter().map(|&m| m as f32).collect();
+    let mu_ref = ctx.put(Payload::Floats(mu));
+
+    // fixed-count Newton on the dual, one distributed moment pass per step
+    let mut theta = vec![0.0f32; 2 * dd];
+    for it in 0..cfg.iters {
+        let theta_ref = ctx.put(Payload::Floats(theta.clone()));
+        let root = moment_pass(
+            ctx,
+            cost,
+            sds,
+            theta_ref,
+            mu_ref,
+            dd,
+            &format!("bal:mom{it}"),
+            moments_task(dd),
+            2 * dd * dd + 2 * dd + 4,
+        );
+        let p = ctx.get(&root)?;
+        let ts = p.as_tensors()?;
+        let (hh, gg, aux) = (&ts[0].data, &ts[1].data, &ts[2].data);
+        for arm in 0..2 {
+            let sw = aux[arm * 2];
+            if sw <= 0.0 {
+                return Err(NexusError::Data(format!(
+                    "balancing: arm {arm} weight mass vanished at iter {it}"
+                )));
+            }
+            let g: Vec<f32> = (0..dd).map(|j| gg[arm * dd + j] / sw).collect();
+            let h = Matrix::from_fn(dd, dd, |j, l| {
+                hh[arm * dd * dd + j * dd + l] / sw - g[j] * g[l]
+            });
+            let step = kx.ridge_solve(&h, &g, &vec![cfg.ridge; dd])?;
+            for j in 0..dd {
+                theta[arm * dd + j] -= step[j];
+            }
+        }
+    }
+
+    // final pass: per-unit weights + variance scalars at the final theta
+    let theta_ref = ctx.put(Payload::Floats(theta));
+    let weight_refs: Vec<ObjectRef> = sds
+        .blocks
+        .iter()
+        .map(|r| {
+            ctx.submit_sized(
+                "bal:weights",
+                vec![*r, theta_ref, mu_ref],
+                cost.predict(sds.block, dd + 1),
+                4 * sds.block,
+                weights_task(dd),
+            )
+        })
+        .collect();
+    let vroot = moment_pass(
+        ctx,
+        cost,
+        sds,
+        theta_ref,
+        mu_ref,
+        dd,
+        "bal:var",
+        var_task(dd),
+        10,
+    );
+    let weights = distops::scatter_rows(ctx, &weight_refs, &sds.meta, sds.n_rows)?;
+    let p = ctx.get(&vroot)?;
+    let v = &p.as_tensors()?[0].data;
+    let mut m = [0.0f64; 2];
+    let mut var = [0.0f64; 2];
+    let mut ess = [0.0f64; 2];
+    for arm in 0..2 {
+        let (sw, swy, sww, swwy, swwyy) = (
+            v[arm * 5] as f64,
+            v[arm * 5 + 1] as f64,
+            v[arm * 5 + 2] as f64,
+            v[arm * 5 + 3] as f64,
+            v[arm * 5 + 4] as f64,
+        );
+        if sw <= 0.0 || sww <= 0.0 {
+            return Err(NexusError::Data(format!(
+                "balancing: arm {arm} weight mass vanished in the final pass"
+            )));
+        }
+        m[arm] = swy / sw;
+        // ratio-estimator variance of the weighted mean
+        var[arm] = (swwyy - 2.0 * m[arm] * swwy + m[arm] * m[arm] * sww) / (sw * sw);
+        ess[arm] = sw * sw / sww;
+    }
+    let ate = m[0] - m[1];
+    let se = (var[0] + var[1]).sqrt();
+    Ok(BalancingFit {
+        ate: Estimate::from_value_se(ate, se, 0.95),
+        ess_treated: ess[0],
+        ess_control: ess[1],
+        weights,
+        weight_refs,
+    })
+}
+
+/// Driver-materialized adapter over [`fit_sharded`].
+pub fn fit(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    ds: &CausalDataset,
+    iters: usize,
+    ridge_lam: f32,
+    block: usize,
+) -> Result<BalancingFit> {
+    let d_pad = (ds.d() + 1).next_power_of_two().max(8);
+    let sds = ShardedDataset::from_materialized(ctx, ds, d_pad, block)?;
+    let cfg = BalancingConfig { iters, ridge: ridge_lam, d_real: ds.d() };
+    fit_sharded(ctx, kx, &CostModel::default(), &sds, &cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::runtime::backend::HostBackend;
+
+    fn data(n: usize) -> CausalDataset {
+        generate(&SynthConfig { n, d: 4, ..Default::default() })
+    }
+
+    // ATE-recovery coverage lives in tests/estimator_golden.rs.
+
+    #[test]
+    fn adapter_equals_presharded_bitwise() {
+        let ds = data(700);
+        let ctx = RayContext::inline();
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        let via_adapter = fit(&ctx, kx.clone(), &ds, 8, 1e-6, 128).unwrap();
+        let sds = ShardedDataset::from_materialized(&ctx, &ds, 8, 128).unwrap();
+        let cfg = BalancingConfig { iters: 8, ridge: 1e-6, d_real: 4 };
+        let direct = fit_sharded(&ctx, kx, &CostModel::default(), &sds, &cfg).unwrap();
+        assert_eq!(via_adapter.ate.value.to_bits(), direct.ate.value.to_bits());
+        assert_eq!(via_adapter.weights, direct.weights);
+    }
+
+    #[test]
+    fn balances_first_moments() {
+        // after the fit, arm-weighted covariate means must match the
+        // overall means to solver precision
+        let ds = data(1200);
+        let ctx = RayContext::inline();
+        let fit = fit(&ctx, Arc::new(HostBackend), &ds, 12, 1e-6, 256).unwrap();
+        let n = ds.n();
+        for j in 0..ds.d() {
+            let overall: f64 =
+                (0..n).map(|i| ds.x.get(i, j) as f64).sum::<f64>() / n as f64;
+            for arm in 0..2 {
+                let pick = |i: usize| {
+                    if arm == 0 { ds.t[i] > 0.5 } else { ds.t[i] <= 0.5 }
+                };
+                let sw: f64 =
+                    (0..n).filter(|&i| pick(i)).map(|i| fit.weights[i] as f64).sum();
+                let swx: f64 = (0..n)
+                    .filter(|&i| pick(i))
+                    .map(|i| fit.weights[i] as f64 * ds.x.get(i, j) as f64)
+                    .sum();
+                assert!(
+                    (swx / sw - overall).abs() < 5e-3,
+                    "arm {arm} col {j}: weighted {} vs overall {overall}",
+                    swx / sw
+                );
+            }
+        }
+        assert!(fit.ess_treated > 1.0 && fit.ess_control > 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let ds = data(200);
+        let ctx = RayContext::inline();
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        assert!(fit(&ctx, kx.clone(), &ds, 0, 1e-6, 64).is_err(), "iters=0");
+        assert!(fit(&ctx, kx, &ds, 5, -1.0, 64).is_err(), "negative ridge");
+    }
+
+    #[test]
+    fn rejects_single_arm_dataset() {
+        let mut ds = data(200);
+        for t in &mut ds.t {
+            *t = 1.0;
+        }
+        let ctx = RayContext::inline();
+        assert!(fit(&ctx, Arc::new(HostBackend), &ds, 5, 1e-6, 64).is_err());
+    }
+
+    #[test]
+    fn distributed_equals_inline() {
+        let ds = data(500);
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        let a = fit(&RayContext::inline(), kx.clone(), &ds, 8, 1e-6, 128).unwrap();
+        let b = fit(&RayContext::threads(4), kx, &ds, 8, 1e-6, 128).unwrap();
+        assert_eq!(a.ate.value.to_bits(), b.ate.value.to_bits());
+        assert_eq!(a.weights, b.weights);
+    }
+}

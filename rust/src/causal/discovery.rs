@@ -268,15 +268,42 @@ fn subsets(pool: &[usize], k: usize) -> Vec<Vec<usize>> {
 pub struct PcConfig {
     pub alpha: f64,
     pub max_level: usize,
+    /// Fan the per-edge CI-test batches out as executor tasks (the edge
+    /// set at each level is embarrassingly parallel, CausalAI-style).
+    /// `false` runs the same tests driver-side in the identical edge
+    /// order — results are always identical; this only trades latency.
+    pub parallel: bool,
 }
 
 impl Default for PcConfig {
     fn default() -> Self {
-        PcConfig { alpha: 0.01, max_level: 3 }
+        PcConfig { alpha: 0.01, max_level: 3, parallel: true }
     }
 }
 
-/// Run PC: skeleton (distributed CI-test batches) + orientation.
+/// One edge's CI-test batch: first conditioning set that renders i and
+/// j independent at `alpha`, or None if the edge survives the level.
+fn edge_sepset(
+    corr: &Matrix,
+    i: usize,
+    j: usize,
+    subs: &[Vec<usize>],
+    alpha: f64,
+    n: usize,
+) -> Result<Option<Vec<usize>>> {
+    for s in subs {
+        let p = partial_corr_pvalue(corr, i, j, s, n)?;
+        if p > alpha {
+            return Ok(Some(s.clone()));
+        }
+    }
+    Ok(None)
+}
+
+/// Run PC: skeleton (per-edge CI-test batches, distributed when
+/// `cfg.parallel`) + orientation.  Both planes visit edges in the same
+/// deterministic order and apply removals driver-side, so the CPDAG is
+/// identical regardless of executor or the `parallel` knob.
 pub fn pc(
     ctx: &RayContext,
     corr: &Matrix,
@@ -296,12 +323,12 @@ pub fn pc(
         if edges.is_empty() {
             break;
         }
-        // one task per edge: run this level's CI-test batch
-        let alpha = cfg.alpha;
-        let tasks: Vec<(usize, usize, ObjectRef)> = edges
+        // conditioning candidates per edge: neighbours of i or j minus
+        // the pair (computed against the level-entry skeleton, so the
+        // fan-out does not depend on removal order within the level)
+        let batches: Vec<(usize, usize, Vec<Vec<usize>>)> = edges
             .iter()
             .filter_map(|&(i, j)| {
-                // conditioning candidates: neighbours of i or j minus the pair
                 let mut pool: BTreeSet<usize> = g.neighbours(i).into_iter().collect();
                 pool.extend(g.neighbours(j));
                 pool.remove(&i);
@@ -310,36 +337,60 @@ pub fn pc(
                 if pool.len() < level {
                     return None;
                 }
-                let subs = subsets(&pool, level);
-                let r = ctx.submit(
-                    &format!("pc:l{level}:e{i}-{j}"),
-                    vec![corr_ref],
-                    0.0,
-                    Arc::new(move |args: &[&Payload]| {
-                        let corr = args[0].as_tensor()?.to_matrix()?;
-                        for s in &subs {
-                            let p = partial_corr_pvalue(&corr, i, j, s, n)?;
-                            if p > alpha {
-                                // independent given s: report the sepset
-                                let mut enc: Vec<f32> =
-                                    vec![1.0, s.len() as f32];
-                                enc.extend(s.iter().map(|&v| v as f32));
-                                return Ok(Payload::Floats(enc));
-                            }
-                        }
-                        Ok(Payload::Floats(vec![0.0]))
-                    }),
-                );
-                Some((i, j, r))
+                Some((i, j, subsets(&pool, level)))
             })
             .collect();
-        ctx.drain()?;
-        for (i, j, r) in tasks {
-            let out = ctx.get(&r)?;
-            let enc = out.as_floats()?;
-            if enc[0] > 0.5 {
-                let k = enc[1] as usize;
-                let sep: Vec<usize> = enc[2..2 + k].iter().map(|&v| v as usize).collect();
+
+        let alpha = cfg.alpha;
+        let results: Vec<(usize, usize, Option<Vec<usize>>)> = if cfg.parallel {
+            // one task per edge: run this level's CI-test batch in the store
+            let tasks: Vec<(usize, usize, ObjectRef)> = batches
+                .into_iter()
+                .map(|(i, j, subs)| {
+                    let r = ctx.submit(
+                        &format!("pc:l{level}:e{i}-{j}"),
+                        vec![corr_ref],
+                        0.0,
+                        Arc::new(move |args: &[&Payload]| {
+                            let corr = args[0].as_tensor()?.to_matrix()?;
+                            match edge_sepset(&corr, i, j, &subs, alpha, n)? {
+                                Some(s) => {
+                                    let mut enc: Vec<f32> = vec![1.0, s.len() as f32];
+                                    enc.extend(s.iter().map(|&v| v as f32));
+                                    Ok(Payload::Floats(enc))
+                                }
+                                None => Ok(Payload::Floats(vec![0.0])),
+                            }
+                        }),
+                    );
+                    (i, j, r)
+                })
+                .collect();
+            ctx.drain()?;
+            let mut out = Vec::with_capacity(tasks.len());
+            for (i, j, r) in tasks {
+                let p = ctx.get(&r)?;
+                let enc = p.as_floats()?;
+                let sep = if enc[0] > 0.5 {
+                    let k = enc[1] as usize;
+                    Some(enc[2..2 + k].iter().map(|&v| v as usize).collect())
+                } else {
+                    None
+                };
+                out.push((i, j, sep));
+            }
+            out
+        } else {
+            batches
+                .into_iter()
+                .map(|(i, j, subs)| {
+                    edge_sepset(corr, i, j, &subs, alpha, n).map(|s| (i, j, s))
+                })
+                .collect::<Result<_>>()?
+        };
+
+        for (i, j, sep) in results {
+            if let Some(sep) = sep {
                 g.remove_edge(i, j);
                 g.sepsets[i][j] = Some(sep.clone());
                 g.sepsets[j][i] = Some(sep);
@@ -438,7 +489,7 @@ mod tests {
     fn discover(x: &Matrix, alpha: f64) -> Cpdag {
         let ctx = RayContext::threads(3);
         let corr = correlation_matrix(&ctx, Arc::new(HostBackend), x, 256).unwrap();
-        pc(&ctx, &corr, x.rows(), &PcConfig { alpha, max_level: 2 }).unwrap()
+        pc(&ctx, &corr, x.rows(), &PcConfig { alpha, max_level: 2, parallel: true }).unwrap()
     }
 
     #[test]
@@ -508,6 +559,25 @@ mod tests {
             g.edges()
         };
         assert_eq!(run(RayContext::inline()), run(RayContext::threads(4)));
+    }
+
+    #[test]
+    fn parallel_equals_driver_side_ci_plane() {
+        // the parallel fan-out and the driver-side loop run the same CI
+        // tests in the same edge order => identical CPDAG + sepsets
+        let x = sem(2500, 6, &[(0, 1, 0.8), (1, 2, 0.7), (3, 4, 0.9), (4, 5, 0.6)], 13);
+        let ctx = RayContext::threads(4);
+        let corr = correlation_matrix(&ctx, Arc::new(HostBackend), &x, 256).unwrap();
+        let par = pc(&ctx, &corr, x.rows(), &PcConfig::default()).unwrap();
+        let seq = pc(
+            &ctx,
+            &corr,
+            x.rows(),
+            &PcConfig { parallel: false, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(par.edges(), seq.edges());
+        assert_eq!(par.sepsets, seq.sepsets);
     }
 
     #[test]

@@ -9,15 +9,28 @@
 //! ```
 //!
 //! is evaluated out-of-fold.  ATE = mean psi, SE = sd(psi)/sqrt(n).
+//!
+//! Sharded build: arm/propensity training sets are gathered
+//! store-to-store ([`ShardedDataset::subset`]), the fits ride the
+//! distributed ridge/logistic DAGs, and the influence function is
+//! evaluated block-by-block as store-resident tasks — the driver only
+//! ever sees the O(n) psi vector, scattered in row order.  The old
+//! driver-materialized signature survives as a
+//! [`ShardedDataset::from_materialized`] adapter, so both entry points
+//! run the identical task DAG.
 
 use std::sync::Arc;
 
 use crate::causal::inference::Estimate;
+use crate::data::dataset::ShardedDataset;
 use crate::data::folds::FoldPlan;
-use crate::data::synth::{sigmoid, CausalDataset};
-use crate::error::Result;
-use crate::models::{logistic, ridge};
+use crate::data::synth::CausalDataset;
+use crate::error::{NexusError, Result};
+use crate::models::cost::CostModel;
+use crate::models::{distops, logistic, ridge};
 use crate::raylet::api::RayContext;
+use crate::raylet::payload::Payload;
+use crate::raylet::task::{ObjectRef, TaskFn};
 use crate::runtime::backend::KernelExec;
 
 /// AIPW fit result.
@@ -26,10 +39,163 @@ pub struct DrFit {
     pub ate: Estimate,
     /// Per-unit influence values (useful for diagnostics / subgroup ATEs).
     pub psi: Vec<f32>,
+    /// Store refs of the per-block psi vectors (fold-major block order)
+    /// — kept so callers can exercise lineage reconstruction.
+    pub psi_refs: Vec<ObjectRef>,
 }
 
-/// Cross-fit AIPW with `cv` folds.  Propensities are clipped to
-/// [clip, 1-clip] (overlap enforcement, Assumption 3).
+/// Knobs for the sharded AIPW fit.
+#[derive(Clone, Debug)]
+pub struct DrConfig {
+    /// Cross-fitting folds (>= 2).
+    pub cv: usize,
+    /// Ridge penalty for the arm regressions.
+    pub lam: f32,
+    /// Propensity clip: e is clamped to [clip, 1-clip] (overlap
+    /// enforcement, Assumption 3).  Must lie in (0, 0.5).
+    pub clip: f32,
+    /// IRLS Newton stages for the propensity fit.
+    pub irls_iters: usize,
+    /// Fold-assignment seed.
+    pub seed: u64,
+    /// Raw covariate count within the padded width.
+    pub d_real: usize,
+}
+
+fn validate(sds: &ShardedDataset, cfg: &DrConfig) -> Result<()> {
+    if cfg.cv < 2 {
+        return Err(NexusError::Config(format!(
+            "dr: cv must be >= 2 for cross-fitting, got {}",
+            cfg.cv
+        )));
+    }
+    if !(cfg.clip > 0.0 && cfg.clip < 0.5) {
+        return Err(NexusError::Config(format!(
+            "dr: clip must lie in (0, 0.5), got {}",
+            cfg.clip
+        )));
+    }
+    if !cfg.lam.is_finite() || cfg.lam < 0.0 {
+        return Err(NexusError::Config(format!(
+            "dr: lam must be finite and >= 0, got {}",
+            cfg.lam
+        )));
+    }
+    if sds.n_rows == 0 {
+        return Err(NexusError::Data("dr: empty dataset".into()));
+    }
+    if !sds.padded {
+        return Err(NexusError::Data(
+            "dr: needs a padded dataset (intercept in col 0)".into(),
+        ));
+    }
+    if cfg.d_real + 1 > sds.d {
+        return Err(NexusError::Data(format!(
+            "dr: d_real={} does not fit stored width {}",
+            cfg.d_real, sds.d
+        )));
+    }
+    Ok(())
+}
+
+/// Task: AIPW influence function over one eval block.
+/// args = [block, beta1, beta0, beta_e] -> Floats(psi per slot).
+/// Padding slots produce junk that the row-order scatter never reads.
+fn psi_task(kx: Arc<dyn KernelExec>, clip: f32) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let b = args[0].as_block()?;
+        let mu1 = kx.predict(&b.x, args[1].as_floats()?)?;
+        let mu0 = kx.predict(&b.x, args[2].as_floats()?)?;
+        let e = kx.predict_proba(&b.x, args[3].as_floats()?)?;
+        let psi: Vec<f32> = (0..b.x.rows())
+            .map(|i| {
+                let ei = e[i].clamp(clip, 1.0 - clip);
+                let (t, y) = (b.t[i], b.y[i]);
+                mu1[i] - mu0[i] + t * (y - mu1[i]) / ei
+                    - (1.0 - t) * (y - mu0[i]) / (1.0 - ei)
+            })
+            .collect();
+        Ok(Payload::Floats(psi))
+    })
+}
+
+/// Cross-fit AIPW over store-resident blocks.
+pub fn fit_sharded(
+    ctx: &RayContext,
+    kx: Arc<dyn KernelExec>,
+    cost: &CostModel,
+    sds: &ShardedDataset,
+    cfg: &DrConfig,
+) -> Result<DrFit> {
+    validate(sds, cfg)?;
+    let (b, d, n) = (sds.block, sds.d, sds.n_rows);
+    let t = sds.collect_t(ctx)?;
+    if !t.iter().any(|&v| v > 0.5) || !t.iter().any(|&v| v <= 0.5) {
+        return Err(NexusError::Data(
+            "dr: degenerate treatment (every unit in one arm)".into(),
+        ));
+    }
+    let plan = FoldPlan::stratified(&t, cfg.cv, cfg.seed)?;
+    let (fold_refs, fold_rows) = sds.split_by_fold(ctx, &plan, b, 0.0)?;
+
+    let lam_ref = ctx.put(Payload::Floats(ridge::lam_diag(d, cfg.d_real + 1, cfg.lam)));
+    let lam_e_ref = ctx.put(Payload::Floats(ridge::lam_diag(d, cfg.d_real + 1, 1e-3)));
+
+    let mut psi_refs: Vec<ObjectRef> = Vec::new();
+    let mut psi_meta: Vec<Vec<usize>> = Vec::new();
+    for k in 0..cfg.cv as u32 {
+        let train = plan.train_rows(k);
+        let rows1: Vec<usize> = train.iter().copied().filter(|&i| t[i] > 0.5).collect();
+        let rows0: Vec<usize> = train.iter().copied().filter(|&i| t[i] <= 0.5).collect();
+        if rows1.is_empty() || rows0.is_empty() {
+            return Err(NexusError::Data(format!(
+                "dr: fold {k} training arm empty (degenerate propensities) — \
+                 lower cv or rebalance treatment"
+            )));
+        }
+        let arm1 = sds.subset(ctx, &rows1, &format!("dr:f{k}:arm1"))?;
+        let arm0 = sds.subset(ctx, &rows0, &format!("dr:f{k}:arm0"))?;
+        let train_sds = sds.subset(ctx, &train, &format!("dr:f{k}:train"))?;
+
+        let beta1 =
+            ridge::fit(ctx, kx.clone(), cost, &arm1.blocks, b, d, lam_ref, &format!("dr:f{k}:mu1"));
+        let beta0 =
+            ridge::fit(ctx, kx.clone(), cost, &arm0.blocks, b, d, lam_ref, &format!("dr:f{k}:mu0"));
+        let beta_e = logistic::fit(
+            ctx,
+            kx.clone(),
+            cost,
+            &train_sds.blocks,
+            b,
+            d,
+            lam_e_ref,
+            cfg.irls_iters,
+            &format!("dr:f{k}:prop"),
+        );
+
+        for (r, rows) in fold_refs[k as usize].iter().zip(&fold_rows[k as usize]) {
+            psi_refs.push(ctx.submit_sized(
+                &format!("dr:f{k}:psi"),
+                vec![*r, beta1, beta0, beta_e],
+                cost.predict(b, d) * 3.0,
+                4 * b,
+                psi_task(kx.clone(), cfg.clip),
+            ));
+            psi_meta.push(rows.clone());
+        }
+    }
+
+    let psi = distops::scatter_rows(ctx, &psi_refs, &psi_meta, n)?;
+    let mean: f64 = psi.iter().map(|&p| p as f64).sum::<f64>() / n as f64;
+    let var: f64 =
+        psi.iter().map(|&p| (p as f64 - mean).powi(2)).sum::<f64>() / (n as f64 - 1.0);
+    let se = (var / n as f64).sqrt();
+    Ok(DrFit { ate: Estimate::from_value_se(mean, se, 0.95), psi, psi_refs })
+}
+
+/// Cross-fit AIPW with `cv` folds — driver-materialized adapter over
+/// [`fit_sharded`].  Propensities are clipped to [clip, 1-clip].
+#[allow(clippy::too_many_arguments)]
 pub fn fit(
     ctx: &RayContext,
     kx: Arc<dyn KernelExec>,
@@ -40,50 +206,11 @@ pub fn fit(
     block: usize,
     seed: u64,
 ) -> Result<DrFit> {
-    let n = ds.n();
-    let xi = ds.x.with_intercept();
-    let plan = FoldPlan::stratified(&ds.t, cv, seed)?;
-    let mut psi = vec![0.0f32; n];
-
-    for k in 0..cv as u32 {
-        let train = plan.train_rows(k);
-        let eval = plan.fold_rows(k);
-        let treated: Vec<usize> = train.iter().copied().filter(|&i| ds.t[i] > 0.5).collect();
-        let control: Vec<usize> = train.iter().copied().filter(|&i| ds.t[i] <= 0.5).collect();
-        let y1: Vec<f32> = treated.iter().map(|&i| ds.y[i]).collect();
-        let y0: Vec<f32> = control.iter().map(|&i| ds.y[i]).collect();
-        let t_train: Vec<f32> = train.iter().map(|&i| ds.t[i]).collect();
-
-        let beta1 =
-            ridge::fit_simple(ctx, kx.clone(), &xi.gather_rows(&treated), &y1, lam, block)?;
-        let beta0 =
-            ridge::fit_simple(ctx, kx.clone(), &xi.gather_rows(&control), &y0, lam, block)?;
-        let beta_e = logistic::fit_simple(
-            ctx,
-            kx.clone(),
-            &xi.gather_rows(&train),
-            &t_train,
-            1e-3,
-            5,
-            block,
-        )?;
-
-        for &i in &eval {
-            let row = xi.row(i);
-            let dot = |b: &[f32]| -> f32 { row.iter().zip(b).map(|(a, c)| a * c).sum() };
-            let mu1 = dot(&beta1);
-            let mu0 = dot(&beta0);
-            let e = sigmoid(dot(&beta_e)).clamp(clip, 1.0 - clip);
-            let (t, y) = (ds.t[i], ds.y[i]);
-            psi[i] = mu1 - mu0 + t * (y - mu1) / e - (1.0 - t) * (y - mu0) / (1.0 - e);
-        }
-    }
-
-    let mean: f64 = psi.iter().map(|&p| p as f64).sum::<f64>() / n as f64;
-    let var: f64 =
-        psi.iter().map(|&p| (p as f64 - mean).powi(2)).sum::<f64>() / (n as f64 - 1.0);
-    let se = (var / n as f64).sqrt();
-    Ok(DrFit { ate: Estimate::from_value_se(mean, se, 0.95), psi })
+    let d_pad = (ds.d() + 1).next_power_of_two().max(8);
+    let sds = ShardedDataset::from_materialized(ctx, ds, d_pad, block)?;
+    let cfg =
+        DrConfig { cv, lam, clip, irls_iters: 5, seed, d_real: ds.d() };
+    fit_sharded(ctx, kx, &CostModel::default(), &sds, &cfg)
 }
 
 #[cfg(test)]
@@ -92,27 +219,57 @@ mod tests {
     use crate::data::synth::{generate, SynthConfig};
     use crate::runtime::backend::HostBackend;
 
+    fn data(n: usize) -> CausalDataset {
+        generate(&SynthConfig { n, d: 4, ..Default::default() })
+    }
+
+    // ATE-recovery / CI-coverage checks live in tests/estimator_golden.rs.
+
     #[test]
-    fn recovers_ate_with_ci() {
-        let ds = generate(&SynthConfig { n: 8000, d: 4, ..Default::default() });
+    fn adapter_equals_presharded_bitwise() {
+        let ds = data(800);
         let ctx = RayContext::inline();
-        let fit = fit(&ctx, Arc::new(HostBackend), &ds, 5, 1e-3, 0.01, 512, 3).unwrap();
-        assert!((fit.ate.value - 1.0).abs() < 0.1, "ate={}", fit.ate.value);
-        assert!(fit.ate.contains(1.0), "CI [{}, {}]", fit.ate.ci_lo, fit.ate.ci_hi);
-        assert_eq!(fit.psi.len(), 8000);
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        let via_adapter = fit(&ctx, kx.clone(), &ds, 3, 1e-3, 0.01, 128, 3).unwrap();
+        let sds = ShardedDataset::from_materialized(&ctx, &ds, 8, 128).unwrap();
+        let cfg = DrConfig { cv: 3, lam: 1e-3, clip: 0.01, irls_iters: 5, seed: 3, d_real: 4 };
+        let direct = fit_sharded(&ctx, kx, &CostModel::default(), &sds, &cfg).unwrap();
+        assert_eq!(via_adapter.ate.value.to_bits(), direct.ate.value.to_bits());
+        assert_eq!(via_adapter.psi, direct.psi);
     }
 
     #[test]
-    fn robust_to_worse_overlap() {
-        // steeper propensity: clipping + AIPW should still land near 1
-        let ds = generate(&SynthConfig {
-            n: 10_000,
-            d: 4,
-            propensity_scale: 2.0,
-            ..Default::default()
-        });
+    fn rejects_bad_config() {
+        let ds = data(300);
         let ctx = RayContext::inline();
-        let fit = fit(&ctx, Arc::new(HostBackend), &ds, 5, 1e-3, 0.02, 512, 4).unwrap();
-        assert!((fit.ate.value - 1.0).abs() < 0.15, "ate={}", fit.ate.value);
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        // cv < 2
+        assert!(fit(&ctx, kx.clone(), &ds, 1, 1e-3, 0.01, 64, 3).is_err());
+        // clip = 0 and clip >= 0.5
+        assert!(fit(&ctx, kx.clone(), &ds, 3, 1e-3, 0.0, 64, 3).is_err());
+        assert!(fit(&ctx, kx.clone(), &ds, 3, 1e-3, 0.5, 64, 3).is_err());
+        // negative lam
+        assert!(fit(&ctx, kx, &ds, 3, -1.0, 0.01, 64, 3).is_err());
+    }
+
+    #[test]
+    fn rejects_single_arm_dataset() {
+        let mut ds = data(300);
+        for t in &mut ds.t {
+            *t = 0.0;
+        }
+        let ctx = RayContext::inline();
+        let err = fit(&ctx, Arc::new(HostBackend), &ds, 3, 1e-3, 0.01, 64, 3);
+        assert!(err.is_err(), "single-arm data must be a data error");
+    }
+
+    #[test]
+    fn distributed_equals_inline() {
+        let ds = data(600);
+        let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+        let a = fit(&RayContext::inline(), kx.clone(), &ds, 3, 1e-3, 0.01, 128, 7).unwrap();
+        let b = fit(&RayContext::threads(3), kx, &ds, 3, 1e-3, 0.01, 128, 7).unwrap();
+        assert_eq!(a.ate.value.to_bits(), b.ate.value.to_bits());
+        assert_eq!(a.psi, b.psi);
     }
 }

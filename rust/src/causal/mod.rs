@@ -1,15 +1,17 @@
 //! The NEXUS causal estimators and validation suite.
 //!
 //! [`dml`] is the paper's headline algorithm (EconML `LinearDML`
-//! rebuilt over the raylet substrate — `DML_Ray`); [`metalearners`] and
-//! [`dr`] are the comparison estimators the platform (§4) exposes;
-//! [`refute`] and [`diagnostics`] are the "integrated validation
-//! features such as diagnostic tests, and refutations tests" from §4.
+//! rebuilt over the raylet substrate — `DML_Ray`); [`metalearners`],
+//! [`dr`], and [`balancing`] are the comparison estimators the platform
+//! (§4) exposes; [`refute`] and [`diagnostics`] are the "integrated
+//! validation features such as diagnostic tests, and refutations tests"
+//! from §4; [`discovery`] is the parallel-PC structure learner.
 
 pub mod dml;
 pub mod inference;
 pub mod metalearners;
 pub mod dr;
+pub mod balancing;
 pub mod refute;
 pub mod diagnostics;
 pub mod discovery;

@@ -329,6 +329,15 @@ pub struct RunConfig {
     /// of the stage's running median.  0 disables speculation; useful
     /// values are > 1.
     pub speculate_factor: f64,
+    /// Which estimator `nexus fit` runs (`--estimator`): `dml` (the
+    /// paper's headline), the metalearners `s`/`t`/`x`, the AIPW `dr`,
+    /// or the entropy-weighting `balancing`.
+    pub estimator: String,
+    /// Significance level for the PC CI tests (`--pc-alpha`).
+    pub pc_alpha: f64,
+    /// Fan PC's per-edge CI batches out as executor tasks
+    /// (`--pc-parallel`); results are identical either way.
+    pub pc_parallel: bool,
     pub seed: u64,
 }
 
@@ -355,6 +364,9 @@ impl Default for RunConfig {
             simd: "auto".into(),
             steal: true,
             speculate_factor: 0.0,
+            estimator: "dml".into(),
+            pc_alpha: 0.01,
+            pc_parallel: true,
             seed: 123,
         }
     }
@@ -392,6 +404,21 @@ impl RunConfig {
             return Err(NexusError::Config(
                 "speculate_factor must be 0 (off) or >= 1".into(),
             ));
+        }
+        if !matches!(
+            self.estimator.as_str(),
+            "dml" | "s" | "t" | "x" | "dr" | "balancing"
+        ) {
+            return Err(NexusError::Config(format!(
+                "estimator must be dml|s|t|x|dr|balancing, got '{}'",
+                self.estimator
+            )));
+        }
+        if !(self.pc_alpha > 0.0 && self.pc_alpha < 1.0) {
+            return Err(NexusError::Config(format!(
+                "pc_alpha must lie in (0, 1), got {}",
+                self.pc_alpha
+            )));
         }
         crate::linalg::simd::SimdMode::parse(&self.simd)?;
         self.serve.validate()?;
@@ -461,6 +488,15 @@ impl RunConfig {
         if let Some(x) = v.get("speculate_factor") {
             cfg.speculate_factor = x.as_f64()?;
         }
+        if let Some(x) = v.get("estimator") {
+            cfg.estimator = x.as_str()?.to_string();
+        }
+        if let Some(x) = v.get("pc_alpha") {
+            cfg.pc_alpha = x.as_f64()?;
+        }
+        if let Some(x) = v.get("pc_parallel") {
+            cfg.pc_parallel = x.as_bool()?;
+        }
         if let Some(c) = v.get("cluster") {
             if let Some(x) = c.get("nodes") {
                 cfg.cluster.nodes = x.as_usize()?;
@@ -513,6 +549,9 @@ impl RunConfig {
             .set("simd", self.simd.as_str())
             .set("steal", self.steal)
             .set("speculate_factor", self.speculate_factor)
+            .set("estimator", self.estimator.as_str())
+            .set("pc_alpha", self.pc_alpha)
+            .set("pc_parallel", self.pc_parallel)
             .set("seed", self.seed as i64)
             .set(
                 "cluster",
@@ -561,6 +600,9 @@ mod tests {
         cfg.tune.rungs = 4;
         cfg.tune.grace = 2;
         cfg.tune.median_stop = true;
+        cfg.estimator = "balancing".into();
+        cfg.pc_alpha = 0.05;
+        cfg.pc_parallel = false;
         let v = cfg.to_json();
         let back = RunConfig::from_json(&v).unwrap();
         assert_eq!(back.n, 77_000);
@@ -583,6 +625,9 @@ mod tests {
         assert_eq!(back.tune.grace, 2);
         assert!(back.tune.median_stop);
         assert_eq!(back.tune.r_max(), 2 * 27);
+        assert_eq!(back.estimator, "balancing");
+        assert_eq!(back.pc_alpha, 0.05);
+        assert!(!back.pc_parallel);
     }
 
     #[test]
@@ -606,6 +651,11 @@ mod tests {
             .validate()
             .is_err());
         assert!(RunConfig { simd: "sse9".into(), ..Default::default() }.validate().is_err());
+        assert!(RunConfig { estimator: "ols".into(), ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(RunConfig { pc_alpha: 0.0, ..Default::default() }.validate().is_err());
+        assert!(RunConfig { pc_alpha: 1.0, ..Default::default() }.validate().is_err());
         assert!(RunConfig { speculate_factor: 0.5, ..Default::default() }
             .validate()
             .is_err());

@@ -540,6 +540,111 @@ impl ShardedDataset {
         Ok((all_refs, all_rows))
     }
 
+    /// Bytes of one stored block — the out-size hint for tasks that
+    /// produce a transformed block.
+    fn block_bytes(&self) -> usize {
+        4 * (self.block * self.d + 3 * self.block)
+    }
+
+    /// Gather `rows` into a fresh, renumbered dataset (ids 0..rows.len())
+    /// — the residence-side row filter the subset refuter and per-arm
+    /// fits use.  Blocks are bit-identical to driver-side `make_blocks`
+    /// over the same rows, so estimators see the exact materialized
+    /// layout.
+    pub fn subset(&self, ctx: &RayContext, rows: &[usize], label: &str) -> Result<ShardedDataset> {
+        if rows.is_empty() {
+            return Err(NexusError::Data(format!("subset({label}): empty row selection")));
+        }
+        let new_ids: Vec<usize> = (0..rows.len()).collect();
+        let (blocks, meta) = self.gather(ctx, rows, Some(&new_ids), self.block, label, 0.0)?;
+        Ok(ShardedDataset {
+            blocks,
+            meta,
+            n_rows: rows.len(),
+            d: self.d,
+            block: self.block,
+            padded: self.padded,
+        })
+    }
+
+    /// Replace the treatment column with driver-supplied values (length
+    /// n, indexed by global row id) — one map task per block; the
+    /// covariate matrix never moves.  Used by the placebo refuter.
+    pub fn replace_t(&self, ctx: &RayContext, new_t: &[f32]) -> Result<ShardedDataset> {
+        if new_t.len() != self.n_rows {
+            return Err(NexusError::Data(format!(
+                "replace_t: {} values for {} rows",
+                new_t.len(),
+                self.n_rows
+            )));
+        }
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for (r, rows) in self.blocks.iter().zip(&self.meta) {
+            let vals: Vec<f32> = rows.iter().map(|&i| new_t[i]).collect();
+            let vref = ctx.put(Payload::Floats(vals));
+            blocks.push(ctx.submit_sized(
+                "shard:replace_t",
+                vec![*r, vref],
+                0.0,
+                self.block_bytes(),
+                replace_t_task(),
+            ));
+        }
+        Ok(ShardedDataset {
+            blocks,
+            meta: self.meta.clone(),
+            n_rows: self.n_rows,
+            d: self.d,
+            block: self.block,
+            padded: self.padded,
+        })
+    }
+
+    /// Write driver-supplied values (length n, indexed by global row id)
+    /// into stored column `col` — the residence-side "append a
+    /// covariate" used by the random-common-cause refuter, which targets
+    /// a zero-pad column so the width contract is untouched.
+    pub fn with_column(
+        &self,
+        ctx: &RayContext,
+        col: usize,
+        values: &[f32],
+    ) -> Result<ShardedDataset> {
+        if col >= self.d {
+            return Err(NexusError::Data(format!(
+                "with_column: column {col} >= width {}",
+                self.d
+            )));
+        }
+        if values.len() != self.n_rows {
+            return Err(NexusError::Data(format!(
+                "with_column: {} values for {} rows",
+                values.len(),
+                self.n_rows
+            )));
+        }
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for (r, rows) in self.blocks.iter().zip(&self.meta) {
+            let vals: Vec<f32> = rows.iter().map(|&i| values[i]).collect();
+            let vref = ctx.put(Payload::Floats(vals));
+            blocks.push(ctx.submit_sized(
+                "shard:with_column",
+                vec![*r, vref],
+                0.0,
+                self.block_bytes(),
+                with_column_task(col),
+            ));
+        }
+        Ok(ShardedDataset {
+            blocks,
+            meta: self.meta.clone(),
+            n_rows: self.n_rows,
+            d: self.d,
+            block: self.block,
+            padded: self.padded,
+        })
+    }
+
     /// One distributed pass of per-block summary partials, tree-reduced.
     pub fn stats(&self, ctx: &RayContext) -> Result<DatasetStats> {
         let d = self.d;
@@ -570,6 +675,46 @@ impl ShardedDataset {
             treated_share: aux[2] as f64 / n,
         })
     }
+}
+
+/// Task: clone a block with its treatment slice replaced.
+/// args = [block, Floats(per-slot values, length == valid)].
+fn replace_t_task() -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let b = args[0].as_block()?;
+        let vals = args[1].as_floats()?;
+        if vals.len() != b.valid {
+            return Err(NexusError::Data(format!(
+                "replace_t: {} values for {} valid rows",
+                vals.len(),
+                b.valid
+            )));
+        }
+        let mut out = b.clone();
+        out.t[..b.valid].copy_from_slice(vals);
+        Ok(Payload::Block(out))
+    })
+}
+
+/// Task: clone a block writing per-slot values into covariate column
+/// `col`.  Padding rows keep their zeros, matching `make_blocks`.
+fn with_column_task(col: usize) -> TaskFn {
+    Arc::new(move |args: &[&Payload]| {
+        let b = args[0].as_block()?;
+        let vals = args[1].as_floats()?;
+        if vals.len() != b.valid {
+            return Err(NexusError::Data(format!(
+                "with_column: {} values for {} valid rows",
+                vals.len(),
+                b.valid
+            )));
+        }
+        let mut out = b.clone();
+        for (slot, &v) in vals.iter().enumerate() {
+            out.x.set(slot, col, v);
+        }
+        Ok(Payload::Block(out))
+    })
 }
 
 /// Per-block stats partial: Tensors([col sums, col sumsqs, [count, Σy, Σt]]).
@@ -759,6 +904,65 @@ mod tests {
             assert_eq!(pa.as_block().unwrap().x, pb.as_block().unwrap().x);
             assert_eq!(pa.as_block().unwrap().y, pb.as_block().unwrap().y);
         }
+    }
+
+    #[test]
+    fn subset_matches_materialized_blocks() {
+        let cfg = small_cfg(150, 3);
+        let ds = generate(&cfg);
+        let ctx = RayContext::inline();
+        let sds = ShardedDataset::from_materialized(&ctx, &ds, 8, 32).unwrap();
+        let keep: Vec<usize> = (0..150).filter(|i| i % 3 != 1).collect();
+        let sub = sds.subset(&ctx, &keep, "test:subset").unwrap();
+        assert_eq!(sub.n_rows, keep.len());
+        // driver-side reference: gather rows then re-block with local ids
+        let picked = CausalDataset {
+            x: ds.x.gather_rows(&keep),
+            y: keep.iter().map(|&i| ds.y[i]).collect(),
+            t: keep.iter().map(|&i| ds.t[i]).collect(),
+            true_cate: keep.iter().map(|&i| ds.true_cate[i]).collect(),
+            true_propensity: keep.iter().map(|&i| ds.true_propensity[i]).collect(),
+            config: ds.config.clone(),
+        };
+        let want = ShardedDataset::from_materialized(&ctx, &picked, 8, 32).unwrap();
+        assert_eq!(sub.meta, want.meta);
+        for (a, b) in sub.blocks.iter().zip(&want.blocks) {
+            let (pa, pb) = (ctx.get(a).unwrap(), ctx.get(b).unwrap());
+            let (ba, bb) = (pa.as_block().unwrap(), pb.as_block().unwrap());
+            assert_eq!(ba.x, bb.x);
+            assert_eq!(ba.y, bb.y);
+            assert_eq!(ba.t, bb.t);
+            assert_eq!(ba.mask, bb.mask);
+            assert_eq!(ba.rows, bb.rows);
+        }
+        assert!(sds.subset(&ctx, &[], "test:empty").is_err());
+    }
+
+    #[test]
+    fn replace_t_and_with_column_transform_in_store() {
+        let cfg = small_cfg(100, 3);
+        let ds = generate(&cfg);
+        let ctx = RayContext::inline();
+        let sds = ShardedDataset::from_materialized(&ctx, &ds, 8, 32).unwrap();
+        let new_t: Vec<f32> = (0..100).map(|i| ((i * 7) % 2) as f32).collect();
+        let swapped = sds.replace_t(&ctx, &new_t).unwrap();
+        assert_eq!(swapped.collect_t(&ctx).unwrap(), new_t);
+        // covariates untouched
+        assert_eq!(
+            swapped.scatter_columns(&ctx, &[1]).unwrap(),
+            sds.scatter_columns(&ctx, &[1]).unwrap()
+        );
+        let noise: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        // column d+1 (= 4) is a zero-pad column for d=3
+        let aug = sds.with_column(&ctx, 4, &noise).unwrap();
+        assert_eq!(aug.scatter_columns(&ctx, &[4]).unwrap()[0], noise);
+        assert_eq!(
+            aug.scatter_columns(&ctx, &[1]).unwrap(),
+            sds.scatter_columns(&ctx, &[1]).unwrap()
+        );
+        assert!(sds.replace_t(&ctx, &new_t[..10]).is_err());
+        assert!(sds.with_column(&ctx, 99, &noise).is_err());
+        assert!(sds.with_column(&ctx, 4, &noise[..10]).is_err());
     }
 
     #[test]

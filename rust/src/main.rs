@@ -1,7 +1,9 @@
 //! `nexus` — the NEXUS causal-inference platform CLI (leader entrypoint).
 //!
 //! Subcommands:
-//!   fit       estimate ATE/CATE with LinearDML on synthetic data
+//!   fit       estimate ATE/CATE on synthetic data (`--estimator
+//!             dml|s|t|x|dr|balancing` picks the zoo member)
+//!   discover  parallel-PC causal discovery on a synthetic SEM
 //!   tune      distributed hyper-parameter search for the nuisances
 //!   serve     multi-replica CATE serving under an open-loop load
 //!   simulate  dry-run the paper-scale DML DAG on the simulated cluster
@@ -11,9 +13,11 @@
 //! has a sensible default so `nexus fit` alone reproduces the paper's
 //! §5.1 listing at reduced scale.
 
-use nexus::causal::dml;
+use nexus::causal::{balancing, discovery, dml, dr, metalearners};
 use nexus::cluster::autoscaler::{AutoscalePolicy, ReplicaAutoscaler};
 use nexus::config::{ClusterConfig, ExecMode, RunConfig};
+use nexus::data::dataset::ShardedDataset;
+use nexus::data::partition::pick_block_size;
 use nexus::data::synth::{generate, SynthConfig};
 use nexus::models::cost::CostModel;
 use nexus::models::crossfit::CrossfitConfig;
@@ -40,6 +44,7 @@ fn run() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("fit") => cmd_fit(&args),
+        Some("discover") => cmd_discover(&args),
         Some("tune") => cmd_tune(&args),
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -47,9 +52,11 @@ fn run() -> Result<()> {
         _ => {
             println!(
                 "nexus — distributed causal inference (paper reproduction)\n\
-                 usage: nexus <fit|tune|serve|simulate|info> [--key value ...]\n\
+                 usage: nexus <fit|discover|tune|serve|simulate|info> [--key value ...]\n\
                  examples:\n\
                  \x20 nexus fit --n 20000 --d 50 --cv 5 --exec ray --workers 4\n\
+                 \x20 nexus fit --n 20000 --d 20 --estimator dr --exec ray\n\
+                 \x20 nexus discover --n 20000 --d 12 --pc-alpha 0.01 --pc-parallel true\n\
                  \x20 nexus fit --n 200000 --d 50 --sharded --ingest-chunk 16384 --exec ray\n\
                  \x20 nexus fit --n 100000 --d 200 --backend host --kernel-threads 8 --simd auto\n\
                  \x20 nexus tune --trials 16 --tune-policy asha --eta 2 --rungs 3 --grace 1\n\
@@ -97,6 +104,14 @@ fn run_config(args: &Args) -> Result<RunConfig> {
         cfg.steal = true;
     }
     cfg.speculate_factor = args.f64_or("speculate-factor", cfg.speculate_factor)?;
+    if let Some(e) = args.opt("estimator") {
+        cfg.estimator = e.to_string();
+    }
+    cfg.pc_alpha = args.f64_or("pc-alpha", cfg.pc_alpha)?;
+    if let Some(v) = args.opt("pc-parallel") {
+        // explicit value: `--pc-parallel false` can override a config file
+        cfg.pc_parallel = !matches!(v, "0" | "false" | "off" | "no");
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -104,7 +119,8 @@ fn run_config(args: &Args) -> Result<RunConfig> {
 fn cmd_fit(args: &Args) -> Result<()> {
     let cfg = run_config(args)?;
     println!(
-        "fit: n={} d={} cv={} exec={} backend={}{}",
+        "fit: estimator={} n={} d={} cv={} exec={} backend={}{}",
+        cfg.estimator,
         cfg.n,
         cfg.d,
         cfg.cv,
@@ -112,6 +128,9 @@ fn cmd_fit(args: &Args) -> Result<()> {
         cfg.backend,
         if cfg.sharded { " ingest=sharded" } else { "" }
     );
+    if cfg.estimator != "dml" {
+        return cmd_fit_zoo(args, &cfg);
+    }
     if cfg.sharded {
         return cmd_fit_sharded(args, &cfg);
     }
@@ -199,6 +218,160 @@ fn cmd_fit_sharded(args: &Args, cfg: &RunConfig) -> Result<()> {
             .set("ingest_blocks", report.blocks as i64)
             .set("wall_secs", wall);
         println!("{}", j.to_string());
+    }
+    Ok(())
+}
+
+/// `nexus fit --estimator s|t|x|dr|balancing`: the comparison zoo, all
+/// running on the sharded plane (blocks in the object store, fits and
+/// influence evaluation as executor tasks).
+fn cmd_fit_zoo(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let ds = generate(&SynthConfig {
+        n: cfg.n,
+        d: cfg.d,
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let kx = backend_by_name(&cfg.backend)?;
+    let cost = CostModel::default();
+    let ctx = dml::executor_for(cfg);
+    let block = pick_block_size(cfg.n, &[256, 4096]);
+    let d_pad = (cfg.d + 1).next_power_of_two().max(8);
+    let start = std::time::Instant::now();
+    let sds = ShardedDataset::from_materialized(&ctx, &ds, d_pad, block)?;
+
+    let (ate, se) = match cfg.estimator.as_str() {
+        "s" | "t" | "x" => {
+            let mc = metalearners::MetaConfig {
+                lam: cfg.lam_y,
+                irls_iters: cfg.irls_iters,
+                d_real: cfg.d,
+            };
+            let fit = match cfg.estimator.as_str() {
+                "s" => metalearners::s_learner_sharded(&ctx, kx, &cost, &sds, &mc)?,
+                "t" => metalearners::t_learner_sharded(&ctx, kx, &cost, &sds, &mc)?,
+                _ => metalearners::x_learner_sharded(&ctx, kx, &cost, &sds, &mc)?,
+            };
+            // CATE-dispersion SE proxy (metalearners carry no influence fn)
+            let n = fit.cate.len() as f64;
+            let mut ss = 0.0f64;
+            for &c in &fit.cate {
+                ss += (c as f64 - fit.ate).powi(2);
+            }
+            let var = ss / (n - 1.0).max(1.0);
+            (fit.ate, (var / n).sqrt())
+        }
+        "dr" => {
+            let dc = dr::DrConfig {
+                cv: cfg.cv,
+                lam: cfg.lam_y,
+                clip: 0.01,
+                irls_iters: cfg.irls_iters,
+                seed: cfg.seed,
+                d_real: cfg.d,
+            };
+            let fit = dr::fit_sharded(&ctx, kx, &cost, &sds, &dc)?;
+            (fit.ate.value, fit.ate.se)
+        }
+        _ => {
+            let bc = balancing::BalancingConfig {
+                d_real: cfg.d,
+                ..Default::default()
+            };
+            let fit = balancing::fit_sharded(&ctx, kx, &cost, &sds, &bc)?;
+            println!(
+                "balancing: ESS treated={:.1} control={:.1}",
+                fit.ess_treated, fit.ess_control
+            );
+            (fit.ate.value, fit.ate.se)
+        }
+    };
+    ctx.drain()?;
+    let wall = start.elapsed().as_secs_f64();
+    let m = ctx.metrics();
+    println!("ATE = {ate:.4} ± {se:.4}   truth = {:.4}", ds.true_ate());
+    println!(
+        "tasks={} retries={} wall={wall:.2}s | store peak={} B",
+        m.tasks_run, m.retries, m.peak_store_bytes
+    );
+    if args.flag("json") {
+        let j = nexus::util::json::Json::obj()
+            .set("estimator", cfg.estimator.as_str())
+            .set("ate", ate)
+            .set("se", se)
+            .set("true_ate", ds.true_ate())
+            .set("tasks", m.tasks_run as i64)
+            .set("peak_store_bytes", m.peak_store_bytes as i64)
+            .set("wall_secs", wall);
+        println!("{}", j.to_string());
+    }
+    Ok(())
+}
+
+/// `nexus discover`: parallel-PC structure learning over a synthetic
+/// linear-Gaussian SEM (chain + cross links so the CPDAG is non-trivial).
+fn cmd_discover(args: &Args) -> Result<()> {
+    let cfg = run_config(args)?;
+    let d = cfg.d.min(32);
+    println!(
+        "discover: n={} d={d} alpha={} exec={} ci-plane={}",
+        cfg.n,
+        cfg.pc_alpha,
+        cfg.exec.name(),
+        if cfg.pc_parallel { "parallel" } else { "driver" }
+    );
+    // chain 0 -> 1 -> ... plus every-third cross edge
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut edges: Vec<(usize, usize, f32)> = (0..d - 1).map(|v| (v, v + 1, 0.8)).collect();
+    for v in 0..d.saturating_sub(3) {
+        if v % 3 == 0 {
+            edges.push((v, v + 3, 0.5));
+        }
+    }
+    let mut x = nexus::data::matrix::Matrix::zeros(cfg.n, d);
+    for i in 0..cfg.n {
+        for v in 0..d {
+            let mut val = rng.normal_f32();
+            for &(p, c, w) in &edges {
+                if c == v {
+                    val += w * x.get(i, p);
+                }
+            }
+            x.set(i, v, val);
+        }
+    }
+    let kx = backend_by_name(&cfg.backend)?;
+    let ctx = dml::executor_for(&cfg);
+    let start = std::time::Instant::now();
+    let block = pick_block_size(cfg.n, &[256, 4096]);
+    let corr = discovery::correlation_matrix(&ctx, kx, &x, block)?;
+    let pc_cfg = discovery::PcConfig {
+        alpha: cfg.pc_alpha,
+        max_level: 3,
+        parallel: cfg.pc_parallel,
+    };
+    let g = discovery::pc(&ctx, &corr, cfg.n, &pc_cfg)?;
+    let wall = start.elapsed().as_secs_f64();
+    let m = ctx.metrics();
+    let found = g.edges();
+    let directed = found
+        .iter()
+        .filter(|(_, _, k, _)| *k == discovery::EdgeKind::Directed)
+        .count();
+    println!(
+        "cpdag: {} edges ({} directed) from {} true edges | tasks={} wall={wall:.2}s",
+        found.len(),
+        directed,
+        edges.len(),
+        m.tasks_run
+    );
+    for (i, j, kind, rev) in &found {
+        let arrow = match kind {
+            discovery::EdgeKind::Directed if *rev => "<-",
+            discovery::EdgeKind::Directed => "->",
+            discovery::EdgeKind::Undirected => "--",
+        };
+        println!("  x{i} {arrow} x{j}");
     }
     Ok(())
 }

@@ -151,6 +151,32 @@ pub fn sub_task() -> TaskFn {
     })
 }
 
+/// Scatter per-block vector outputs (one f32 per block slot, slot order
+/// = meta row order) into a full-length driver vector.  Reads one result
+/// at a time; reduction order is row order, so the assembled vector is
+/// executor-independent.
+pub fn scatter_rows(
+    ctx: &RayContext,
+    refs: &[ObjectRef],
+    meta: &[Vec<usize>],
+    n: usize,
+) -> Result<Vec<f32>> {
+    let mut out = vec![0.0f32; n];
+    for (r, rows) in refs.iter().zip(meta) {
+        let p = ctx.get(r)?;
+        let v = p.as_floats()?;
+        for (slot, &row) in rows.iter().enumerate() {
+            if row >= n {
+                return Err(NexusError::Data(format!(
+                    "scatter_rows: row id {row} >= n {n}"
+                )));
+            }
+            out[row] = v[slot];
+        }
+    }
+    Ok(out)
+}
+
 /// Tree-reduce `refs` with the sum combiner at the given fan-in.
 /// Deterministic structure => deterministic f32 summation order, which is
 /// what makes sequential and distributed estimates bit-identical.

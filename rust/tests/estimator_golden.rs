@@ -1,0 +1,223 @@
+//! Golden-value pins for the whole estimator zoo: S/T/X metalearners,
+//! cross-fit AIPW, and entropy-balancing weights all run on one fixed
+//! fixture and must (a) recover the true ATE = 1 within CI-anchored
+//! tolerances, (b) match the snapshot **bit for bit** (`f64::to_bits`),
+//! and (c) keep passing the refutation battery the way a sound
+//! estimator should — so future refactors can't silently bend any zoo
+//! member.
+//!
+//! The snapshot lives in `tests/golden_estimator_zoo.json`.  On first
+//! run (file absent) the test bootstraps it and asks for it to be
+//! committed; once committed, any drift — even in the last mantissa
+//! bit — fails here.  Because every estimator is a single sharded
+//! implementation behind thin adapters, pinning the adapter output pins
+//! the sharded plane too.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use nexus::causal::{balancing, dml, dr, metalearners, refute};
+use nexus::data::synth::{generate, CausalDataset, SynthConfig};
+use nexus::models::cost::CostModel;
+use nexus::models::crossfit::CrossfitConfig;
+use nexus::raylet::api::RayContext;
+use nexus::runtime::backend::{HostBackend, KernelExec};
+use nexus::util::json::{self, Json};
+use nexus::Result;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden_estimator_zoo.json")
+}
+
+fn fixture() -> CausalDataset {
+    generate(&SynthConfig { n: 8000, d: 4, ..Default::default() })
+}
+
+fn host() -> Arc<dyn KernelExec> {
+    Arc::new(HostBackend)
+}
+
+/// Every zoo member fit on the shared fixture, inline, host backend.
+fn zoo_ates(ds: &CausalDataset) -> Vec<(&'static str, f64)> {
+    let ctx = RayContext::inline();
+    let s = metalearners::s_learner(&ctx, host(), ds, 1e-3, 512).unwrap();
+    let t = metalearners::t_learner(&ctx, host(), ds, 1e-3, 512).unwrap();
+    let x = metalearners::x_learner(&ctx, host(), ds, 1e-3, 512).unwrap();
+    let aipw = dr::fit(&ctx, host(), ds, 5, 1e-3, 0.01, 512, 7).unwrap();
+    let bal = balancing::fit(&ctx, host(), ds, 12, 1e-6, 512).unwrap();
+    vec![
+        ("s_learner", s.ate),
+        ("t_learner", t.ate),
+        ("x_learner", x.ate),
+        ("dr_aipw", aipw.ate.value),
+        ("balancing", bal.ate.value),
+    ]
+}
+
+/// Analytic anchors first: truth is ATE = 1 on this DGP, and every
+/// estimator in the zoo is correctly specified for it.
+#[test]
+fn zoo_recovers_true_ate() {
+    let ds = fixture();
+    let tol = |name: &str| match name {
+        "s_learner" => 0.10,
+        "balancing" => 0.15,
+        _ => 0.12,
+    };
+    for (name, ate) in zoo_ates(&ds) {
+        assert!((ate - 1.0).abs() < tol(name), "{name}: ate={ate}");
+    }
+}
+
+/// AIPW carries an influence-function CI; it must be sane and cover
+/// the truth (small slack: the CI is asymptotic, the fixture finite).
+#[test]
+fn aipw_ci_is_calibrated() {
+    let ds = fixture();
+    let ctx = RayContext::inline();
+    let fit = dr::fit(&ctx, host(), &ds, 5, 1e-3, 0.01, 512, 7).unwrap();
+    assert!(fit.ate.se > 0.0 && fit.ate.se < 0.2, "se={}", fit.ate.se);
+    assert!(
+        fit.ate.ci_lo - 0.05 <= 1.0 && 1.0 <= fit.ate.ci_hi + 0.05,
+        "CI [{}, {}] far from truth",
+        fit.ate.ci_lo,
+        fit.ate.ci_hi
+    );
+}
+
+/// T-learner CATEs must track the true CATE = 1 + 0.5 x0 (promoted
+/// from the old in-module assert).
+#[test]
+fn t_learner_recovers_heterogeneity() {
+    let ds = fixture();
+    let ctx = RayContext::inline();
+    let fit = metalearners::t_learner(&ctx, host(), &ds, 1e-3, 512).unwrap();
+    let n = ds.n() as f64;
+    let mean_est: f64 = fit.cate.iter().map(|&c| c as f64).sum::<f64>() / n;
+    let mean_true: f64 = ds.true_cate.iter().map(|&c| c as f64).sum::<f64>() / n;
+    let (mut cov, mut var_e, mut var_t) = (0.0, 0.0, 0.0);
+    for i in 0..ds.n() {
+        let a = fit.cate[i] as f64 - mean_est;
+        let b = ds.true_cate[i] as f64 - mean_true;
+        cov += a * b;
+        var_e += a * a;
+        var_t += b * b;
+    }
+    let corr = cov / (var_e.sqrt() * var_t.sqrt());
+    assert!(corr > 0.8, "corr={corr}");
+}
+
+fn bits_hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn from_bits_hex(s: &str) -> f64 {
+    f64::from_bits(u64::from_str_radix(s, 16).unwrap())
+}
+
+/// The exact-value pin: every estimator's ATE snapshotted as the hex
+/// of its f64 bit pattern.  Drift of any kind — reduction order, seed
+/// plumbing, kernel tweak — trips this before it can reach a paper
+/// figure.
+#[test]
+fn golden_zoo_ates_are_bit_pinned() {
+    let ds = fixture();
+    let got = zoo_ates(&ds);
+    let path = golden_path();
+    if !path.exists() {
+        // bootstrap: record the snapshot; commit it to arm the guard
+        let mut j = Json::obj().set("fixture", "n=8000 d=4 seed=123 host-backend inline");
+        for &(name, ate) in &got {
+            j = j.set(name, Json::obj().set("bits", bits_hex(ate)).set("value", ate));
+        }
+        std::fs::write(&path, j.to_string()).unwrap();
+        eprintln!(
+            "golden_estimator_zoo: bootstrapped {} — commit this file to pin the zoo",
+            path.display()
+        );
+        return;
+    }
+    let want = json::parse_file(&path).unwrap();
+    for (name, ate) in got {
+        let entry = want.req(name).unwrap();
+        let bits = entry.req("bits").unwrap().as_str().unwrap().to_string();
+        let pinned = from_bits_hex(&bits);
+        assert_eq!(
+            ate.to_bits(),
+            pinned.to_bits(),
+            "{name} drifted: {ate} vs golden {pinned} (bits {} vs {bits})",
+            bits_hex(ate)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// refutation battery (promoted from the old refute.rs in-module tests)
+
+fn dml_estimator(ds: &CausalDataset) -> Result<f64> {
+    let d = ds.d();
+    let cfg = CrossfitConfig {
+        cv: 3,
+        lam_y: 1e-3,
+        lam_t: 1e-3,
+        irls_iters: 4,
+        block: 512,
+        d_pad: (d + 1).next_power_of_two().max(8),
+        d_real: d,
+        seed: 5,
+        stratified: true,
+        reuse_suffstats: false,
+    };
+    let ctx = RayContext::inline();
+    let fit = dml::fit_with(&ctx, host(), &CostModel::default(), ds, &cfg, 0, 1)?;
+    Ok(fit.ate.value)
+}
+
+#[test]
+fn sound_estimator_passes_all_refuters() {
+    let ds = generate(&SynthConfig { n: 6000, d: 4, ..Default::default() });
+    let results = refute::run_all(&ds, &dml_estimator, 42).unwrap();
+    for r in &results {
+        assert!(
+            r.passed,
+            "{} failed: {} (orig={}, refuted={})",
+            r.name, r.detail, r.original_ate, r.refuted_ate
+        );
+    }
+}
+
+#[test]
+fn subset_refuter_shapes() {
+    let ds = generate(&SynthConfig { n: 3000, d: 3, ..Default::default() });
+    let r = refute::data_subset(&ds, &dml_estimator, 0.5, 9).unwrap();
+    assert!(r.passed, "{r:?}");
+}
+
+/// The new zoo members also survive refutation: AIPW through the
+/// sharded suite (placebo must null it, subset must keep it stable).
+#[test]
+fn aipw_passes_sharded_refuters() {
+    use nexus::data::dataset::ShardedDataset;
+    let ds = generate(&SynthConfig { n: 5000, d: 4, ..Default::default() });
+    let ctx = RayContext::inline();
+    let sds = ShardedDataset::from_materialized(&ctx, &ds, 8, 512).unwrap();
+    let est = |ctx: &RayContext, sds: &ShardedDataset, d_real: usize| -> Result<f64> {
+        let cfg = dr::DrConfig {
+            cv: 3,
+            lam: 1e-3,
+            clip: 0.01,
+            irls_iters: 5,
+            seed: 5,
+            d_real,
+        };
+        Ok(dr::fit_sharded(ctx, host(), &CostModel::default(), sds, &cfg)?.ate.value)
+    };
+    let results = refute::run_all_sharded(&ctx, &sds, 4, &est, 42).unwrap();
+    for r in &results {
+        assert!(
+            r.passed,
+            "{} failed: {} (orig={}, refuted={})",
+            r.name, r.detail, r.original_ate, r.refuted_ate
+        );
+    }
+}

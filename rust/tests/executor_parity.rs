@@ -9,9 +9,10 @@
 
 use std::sync::Arc;
 
-use nexus::causal::dml;
+use nexus::causal::{balancing, discovery, dml, dr, metalearners};
 use nexus::config::ClusterConfig;
 use nexus::data::dataset::{IngestOpts, ShardedDataset};
+use nexus::data::matrix::Matrix;
 use nexus::data::synth::{generate, SynthConfig};
 use nexus::models::cost::CostModel;
 use nexus::models::crossfit::{self, CrossfitConfig};
@@ -21,6 +22,7 @@ use nexus::raylet::payload::Payload;
 use nexus::raylet::task::{ObjectRef, TaskFn};
 use nexus::runtime::backend::{HostBackend, KernelExec};
 use nexus::util::prop::forall;
+use nexus::util::rng::Pcg32;
 
 fn ccfg() -> CrossfitConfig {
     CrossfitConfig {
@@ -213,6 +215,119 @@ fn dml_parity_under_stragglers_with_speculation() {
             m.spec_wins + m.spec_losses <= m.spec_launched,
             "{mode}: speculation accounting out of balance"
         );
+    }
+}
+
+/// The whole estimator zoo under injected kills: S-learner, AIPW, and
+/// balancing weights must be bit-identical to the clean inline adapter
+/// baseline on every executor, and their per-row store-resident
+/// outputs (CATE / influence / weight blocks) must survive explicit
+/// drops via lineage without moving a bit.
+#[test]
+fn estimator_zoo_parity_under_kills_and_drops() {
+    let ds = generate(&SynthConfig { n: 700, d: 5, seed: 31, ..Default::default() });
+    let cost = CostModel::default();
+    let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+    let block = 128;
+
+    // clean inline baselines through the materialized adapters
+    let ctx0 = RayContext::inline();
+    let s0 = metalearners::s_learner(&ctx0, kx.clone(), &ds, 1e-3, block).unwrap();
+    let dr0 = dr::fit(&ctx0, kx.clone(), &ds, 3, 1e-3, 0.01, block, 11).unwrap();
+    let b0 = balancing::fit(&ctx0, kx.clone(), &ds, 8, 1e-6, block).unwrap();
+
+    let opts = ExecOpts {
+        fault: FaultPlan::with_prob(0.2, 60, 77),
+        ..ExecOpts::default()
+    };
+    for ctx in contexts(&opts) {
+        let mode = ctx.mode();
+        let sds = ShardedDataset::from_materialized(&ctx, &ds, 8, block).unwrap();
+        let mc = metalearners::MetaConfig { lam: 1e-3, irls_iters: 5, d_real: 5 };
+        let s = metalearners::s_learner_sharded(&ctx, kx.clone(), &cost, &sds, &mc).unwrap();
+        assert_eq!(s0.ate.to_bits(), s.ate.to_bits(), "{mode}: s-learner ATE diverged");
+        assert_eq!(s0.cate, s.cate, "{mode}: s-learner CATE diverged");
+
+        let dc = dr::DrConfig {
+            cv: 3,
+            lam: 1e-3,
+            clip: 0.01,
+            irls_iters: 5,
+            seed: 11,
+            d_real: 5,
+        };
+        let drf = dr::fit_sharded(&ctx, kx.clone(), &cost, &sds, &dc).unwrap();
+        assert_eq!(dr0.ate.value.to_bits(), drf.ate.value.to_bits(), "{mode}: AIPW diverged");
+        assert_eq!(dr0.ate.se.to_bits(), drf.ate.se.to_bits(), "{mode}: AIPW SE diverged");
+        assert_eq!(dr0.psi, drf.psi, "{mode}: influence values diverged");
+
+        let bc = balancing::BalancingConfig { iters: 8, ridge: 1e-6, d_real: 5 };
+        let bf = balancing::fit_sharded(&ctx, kx.clone(), &cost, &sds, &bc).unwrap();
+        assert_eq!(b0.ate.value.to_bits(), bf.ate.value.to_bits(), "{mode}: balancing diverged");
+        assert_eq!(b0.weights, bf.weights, "{mode}: balance weights diverged");
+
+        // drop one per-row output block per estimator; lineage must
+        // rebuild the exact same bits
+        for r in [&s.cate_refs[0], &drf.psi_refs[0], &bf.weight_refs[0]] {
+            let before = ctx.get(r).unwrap().as_floats().unwrap().to_vec();
+            ctx.drop_object(r).unwrap();
+            let after = ctx.get(r).unwrap();
+            assert_eq!(
+                before,
+                after.as_floats().unwrap(),
+                "{mode}: per-row output diverged after drop+reconstruct"
+            );
+        }
+        let m = ctx.metrics();
+        assert!(m.retries > 0, "{mode}: crash injection never fired");
+        assert_eq!(m.failed, 0, "{mode}: permanent failures");
+    }
+}
+
+/// Parallel PC under injected kills: the per-edge CI-test fan-out must
+/// return the same skeleton, orientations, and separating sets on every
+/// executor — and match the driver-side sequential CI plane exactly.
+#[test]
+fn parallel_pc_parity_under_kills() {
+    // chain SEM x0 -> x1 -> ... -> x5 with one collider shortcut
+    let (n, d) = (1200, 6);
+    let mut rng = Pcg32::new(5);
+    let mut x = Matrix::zeros(n, d);
+    for i in 0..n {
+        for v in 0..d {
+            let mut val = rng.normal_f32();
+            if v > 0 {
+                val += 0.8 * x.get(i, v - 1);
+            }
+            if v == 4 {
+                val += 0.5 * x.get(i, 0);
+            }
+            x.set(i, v, val);
+        }
+    }
+    let kx: Arc<dyn KernelExec> = Arc::new(HostBackend);
+    let ctx0 = RayContext::inline();
+    let corr0 = discovery::correlation_matrix(&ctx0, kx.clone(), &x, 256).unwrap();
+    let seq = discovery::pc(
+        &ctx0,
+        &corr0,
+        n,
+        &discovery::PcConfig { parallel: false, ..Default::default() },
+    )
+    .unwrap();
+
+    let opts = ExecOpts {
+        fault: FaultPlan::with_prob(0.2, 60, 13),
+        ..ExecOpts::default()
+    };
+    for ctx in contexts(&opts) {
+        let mode = ctx.mode();
+        let corr = discovery::correlation_matrix(&ctx, kx.clone(), &x, 256).unwrap();
+        assert_eq!(corr0.data(), corr.data(), "{mode}: correlation diverged under kills");
+        let par = discovery::pc(&ctx, &corr, n, &discovery::PcConfig::default()).unwrap();
+        assert_eq!(seq.edges(), par.edges(), "{mode}: CPDAG diverged under kills");
+        assert_eq!(seq.sepsets, par.sepsets, "{mode}: sepsets diverged under kills");
+        assert_eq!(ctx.metrics().failed, 0, "{mode}: permanent failures");
     }
 }
 
